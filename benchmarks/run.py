@@ -1,0 +1,255 @@
+"""Benchmark harness: one benchmark per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Datasets are deterministic
+synthetic analogues of the paper's five benchmarks (Table III), scaled by
+``--scale`` (default 8: Ocean 300x450, NYX 64^3, ...) so the suite runs on
+one CPU core; the compressor/operator code paths are identical at any scale.
+
+Paper figure -> benchmark:
+  Fig. 2   compression ratios                -> fig2_compression_ratio
+  Fig. 3/4 decompression throughput by stage -> fig34_decompression
+  Fig. 5-8 mean/std throughput by stage      -> fig58_statistics
+  Fig. 9/10 derivative/Laplacian throughput  -> fig910_differentiation
+  Fig. 11/12 divergence/curl throughput      -> fig1112_multivariate
+  Table IV decompression/compute breakdown   -> table4_breakdown
+  Table V  homomorphic operation errors      -> table5_op_errors
+Framework-level (beyond paper):
+  checkpoint bytes + homomorphic validation  -> fw_checkpoint
+  compressed-collective wire bytes           -> fw_collective_bytes
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Stage, by_name, encode, homomorphic as H
+from repro.data.scientific import dataset_dims, synth_field
+
+ROWS: List[Tuple[str, float, str]] = []
+SCALE = 8
+REPS = 3
+
+COMPRESSORS = ["hszp", "hszx", "hszp_nd", "hszx_nd"]
+EBS = [1e-1, 1e-2, 1e-3]
+BENCH_SETS = ["Ocean", "Miranda", "NYX"]
+
+
+def row(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+
+
+def timeit(fn: Callable, *args) -> Tuple[float, object]:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPS * 1e6, out
+
+
+def _fields():
+    for ds in BENCH_SETS:
+        dims = dataset_dims(ds, SCALE)
+        yield ds, jnp.asarray(synth_field(ds, 0, dims))
+
+
+# ---------------------------------------------------------------------------
+
+def fig2_compression_ratio():
+    for ds, data in _fields():
+        for name in COMPRESSORS:
+            comp = by_name(name)
+            for eb in EBS:
+                c = comp.compress(data, rel_eb=eb)
+                ratio = float(comp.compression_ratio(c))
+                row(f"fig2/{ds}/{name}/eb{eb:g}", 0.0, f"ratio={ratio:.2f}")
+
+
+def fig34_decompression():
+    for ds, data in _fields():
+        nbytes = data.size * 4
+        for name in COMPRESSORS:
+            comp = by_name(name)
+            c = comp.compress(data, rel_eb=1e-2)
+            e = comp.encode(c)
+            for stage, tag in ((Stage.P, "p"), (Stage.Q, "q"), (Stage.F, "f")):
+                fn = jax.jit(lambda enc, s=stage: comp.decompress(enc, s))
+                us, _ = timeit(fn, e)
+                gbps = nbytes / (us * 1e-6) / 1e9
+                row(f"fig34/{ds}/{name}-{tag}", us, f"GBps={gbps:.2f}")
+
+
+def fig58_statistics():
+    for ds, data in _fields():
+        nbytes = data.size * 4
+        for name in COMPRESSORS:
+            comp = by_name(name)
+            c = comp.compress(data, rel_eb=1e-2)
+            e = comp.encode(c)
+            stages = [(Stage.P, "p"), (Stage.Q, "q"), (Stage.F, "f")]
+            if comp.scheme.is_blockmean:
+                stages.insert(0, (Stage.M, "m"))
+            for op_name, op in (("mean", H.mean), ("std", H.std)):
+                for stage, tag in stages:
+                    if op_name == "std" and stage == Stage.M:
+                        continue
+                    fn = jax.jit(lambda enc, s=stage, o=op: o(enc, s))
+                    us, _ = timeit(fn, e)
+                    gbps = nbytes / (us * 1e-6) / 1e9
+                    row(f"fig58/{ds}/{op_name}/{name}-{tag}", us, f"GBps={gbps:.2f}")
+
+
+def fig910_differentiation():
+    for ds, data in _fields():
+        nbytes = data.size * 4
+        for name in ("hszp_nd", "hszx_nd"):
+            comp = by_name(name)
+            c = comp.compress(data, rel_eb=1e-2)
+            e = comp.encode(c)
+            for op_name, op in (("deriv", lambda enc, s: H.derivative(enc, s, 0)),
+                                ("laplacian", H.laplacian)):
+                for stage, tag in ((Stage.P, "p"), (Stage.Q, "q"), (Stage.F, "f")):
+                    fn = jax.jit(lambda enc, s=stage, o=op: o(enc, s))
+                    us, _ = timeit(fn, e)
+                    gbps = nbytes / (us * 1e-6) / 1e9
+                    row(f"fig910/{ds}/{op_name}/{name}-{tag}", us, f"GBps={gbps:.2f}")
+
+
+def fig1112_multivariate():
+    for ds in BENCH_SETS:
+        dims = dataset_dims(ds, SCALE)
+        nd = len(dims)
+        for name in ("hszp_nd", "hszx_nd"):
+            comp = by_name(name)
+            fields = [comp.encode(comp.compress(
+                jnp.asarray(synth_field(ds, i, dims)), rel_eb=1e-2))
+                for i in range(nd)]
+            nbytes = nd * int(np.prod(dims)) * 4
+            for op_name, op in (("div", H.divergence), ("curl", H.curl)):
+                for stage, tag in ((Stage.P, "p"), (Stage.Q, "q"), (Stage.F, "f")):
+                    fn = jax.jit(lambda *fs, s=stage, o=op: o(list(fs), s))
+                    us, _ = timeit(fn, *fields)
+                    gbps = nbytes / (us * 1e-6) / 1e9
+                    row(f"fig1112/{ds}/{op_name}/{name}-{tag}", us, f"GBps={gbps:.2f}")
+
+
+def table4_breakdown():
+    """Decompression vs computation split for a 3-D derivative (NYX)."""
+    dims = dataset_dims("NYX", SCALE)
+    data = jnp.asarray(synth_field("NYX", 0, dims))
+    comp = by_name("hszp_nd")
+    c = comp.compress(data, rel_eb=1e-3)
+    e = comp.encode(c)
+    us_dec_p, _ = timeit(jax.jit(lambda enc: encode.decode_device(enc).residuals), e)
+    us_op_p, _ = timeit(jax.jit(lambda enc: H.derivative(enc, Stage.P, 0)), e)
+    us_dec_q, _ = timeit(jax.jit(lambda enc: comp.decompress(enc, Stage.Q)), e)
+    us_op_q, _ = timeit(jax.jit(lambda enc: H.derivative(enc, Stage.Q, 0)), e)
+    us_dec_f, _ = timeit(jax.jit(lambda enc: comp.decompress(enc, Stage.F)), e)
+    us_op_f, _ = timeit(jax.jit(lambda enc: H.derivative(enc, Stage.F, 0)), e)
+    row("table4/Dp", us_op_p, f"decode_us={us_dec_p:.0f}")
+    row("table4/Dq", us_op_q, f"decode_us={us_dec_q:.0f}")
+    row("table4/Df", us_op_f, f"decode_us={us_dec_f:.0f}")
+
+
+def table5_op_errors():
+    dims = dataset_dims("NYX", SCALE)
+    u = jnp.asarray(synth_field("NYX", 0, dims))
+    v = jnp.asarray(synth_field("NYX", 1, dims))
+    w = jnp.asarray(synth_field("NYX", 2, dims))
+    for name in COMPRESSORS:
+        comp = by_name(name)
+        cu = comp.compress(u, rel_eb=1e-3)
+        errs = {}
+        ref = float(H.mean(cu, Stage.F))
+        stages = [Stage.P, Stage.Q] + ([Stage.M] if comp.scheme.is_blockmean else [])
+        errs["mean"] = max(abs(float(H.mean(cu, s)) - ref) / max(abs(ref), 1e-12)
+                           for s in stages)
+        ref = float(H.std(cu, Stage.F))
+        errs["std"] = max(abs(float(H.std(cu, s)) - ref) / ref
+                          for s in (Stage.P, Stage.Q))
+        if comp.scheme.is_nd:
+            cv, cw = comp.compress(v, rel_eb=1e-3), comp.compress(w, rel_eb=1e-3)
+            for op_name, fn in (
+                    ("deriv", lambda s: H.derivative(cu, s, 0)),
+                    ("laplacian", lambda s: H.laplacian(cu, s)),
+                    ("div", lambda s: H.divergence([cu, cv, cw], s)),
+                    ("curl", lambda s: H.curl([cu, cv, cw], s)[0])):
+                refv = np.asarray(fn(Stage.F))
+                scale = max(np.abs(refv).max(), 1e-12)
+                errs[op_name] = max(
+                    float(np.abs(np.asarray(fn(s)) - refv).max()) / scale
+                    for s in (Stage.P, Stage.Q))
+        for k, val in errs.items():
+            row(f"table5/{name}/{k}", 0.0, f"max_rel_err={val:.2e}")
+
+
+def fw_checkpoint():
+    """HSZ checkpoints: bytes vs zstd-lossless + homomorphic validation."""
+    import os
+    import tempfile
+    from repro.train import checkpoint as ckpt
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(np.cumsum(rng.normal(0, 1e-2, (512, 256)),
+                                         axis=0).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(0, 1e-2, (4096,)).astype(np.float32))}
+    raw = sum(np.asarray(v).nbytes for v in params.values())
+    for mode in ("lossless", "hsz"):
+        with tempfile.TemporaryDirectory() as d:
+            t0 = time.perf_counter()
+            ckpt.save(d, 0, params, mode=mode, rel_eb=1e-4)
+            us = (time.perf_counter() - t0) * 1e6
+            step_dir = os.path.join(d, "step_00000000")
+            total = sum(os.path.getsize(os.path.join(step_dir, "arrays", f))
+                        for f in os.listdir(os.path.join(step_dir, "arrays")))
+            row(f"fw_ckpt/{mode}", us, f"bytes={total} ratio={raw/total:.2f}")
+
+
+def fw_collective_bytes():
+    """Wire bytes of the gradient all-reduce: f32 baseline vs hom-int16.
+
+    Static accounting (per the ring cost model, 2x payload); the dry-run
+    HLO confirms the wire dtype (EXPERIMENTS.md §Perf).
+    """
+    from repro.comm import bit_budget
+    n_params = 4_000_000_000
+    for world in (16, 256, 512):
+        f32 = 2 * n_params * 4
+        i16 = 2 * n_params * 2
+        bits = bit_budget(world)
+        row(f"fw_collective/world{world}", 0.0,
+            f"f32_GB={f32/1e9:.1f} hom16_GB={i16/1e9:.1f} budget_bits={bits}")
+
+
+BENCHES = [fig2_compression_ratio, fig34_decompression, fig58_statistics,
+           fig910_differentiation, fig1112_multivariate, table4_breakdown,
+           table5_op_errors, fw_checkpoint, fw_collective_bytes]
+
+
+def main() -> None:
+    global SCALE, REPS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    SCALE, REPS = args.scale, args.reps
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        if args.only and args.only not in bench.__name__:
+            continue
+        t0 = time.time()
+        bench()
+        print(f"# {bench.__name__} done in {time.time()-t0:.1f}s", flush=True)
+        while ROWS:
+            name, us, derived = ROWS.pop(0)
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

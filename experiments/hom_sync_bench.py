@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# isolated gradient-synchronization lowering: f32 baseline vs HSZ homomorphic
+# int16 all-reduce, on the production mesh.  (The fused train_step + hom path
+# trips an XLA CPU-partitioner CHECK — hlo_instruction.cc "Invalid binary
+# instruction opcode copy" — so the collective term is measured on the
+# isolated sync step; see EXPERIMENTS.md §Perf.)
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.comm import hom_collectives as hom
+from repro.configs import ARCHS
+from repro.launch import hlo_analysis
+from repro.models import get_model
+from repro.launch import mesh as mesh_lib
+
+
+def main(arch="qwen3-4b", multi_pod=False):
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    world = 1
+    for a in dp_axes:
+        world *= mesh.shape[a]
+    axis = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+
+    model = get_model(ARCHS[arch])
+    params_sds, specs = model.init(None)
+    # gradients live sharded like the params minus the data(FSDP) axis —
+    # for the sync comparison we treat per-shard grads as manual inputs
+    grads_sds = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), params_sds)
+
+    results = {}
+    for mode in ("f32", "hom16"):
+        def body(grads, residual):
+            if mode == "f32":
+                summed = jax.tree.map(
+                    lambda g: jax.lax.psum(g, axis) / world, grads)
+                return summed, residual
+            return hom.compressed_psum_tree(grads, residual, axis, world)
+
+        f = jax.shard_map(
+            body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+            axis_names=set(dp_axes), check_vma=False)
+        lowered = jax.jit(f).lower(grads_sds, grads_sds)
+        compiled = lowered.compile()
+        rec = hlo_analysis.analyze(compiled.as_text())
+        results[mode] = {
+            "wire_GB": rec["wire_bytes_total"] / 1e9,
+            "collectives": {k: {kk: round(vv, 2) if isinstance(vv, float) else vv
+                                for kk, vv in v.items()}
+                            for k, v in rec["collectives"].items()},
+        }
+        print(f"{arch} {('2x16x16' if multi_pod else '16x16')} {mode}: "
+              f"wire {results[mode]['wire_GB']:.1f} GB — "
+              f"{results[mode]['collectives']}")
+    out = f"experiments/hom_sync_{arch}_{'2x16x16' if multi_pod else '16x16'}.json"
+    with open(out, "w") as fh:
+        json.dump(results, fh, indent=1)
+    ratio = results["f32"]["wire_GB"] / max(results["hom16"]["wire_GB"], 1e-9)
+    print(f"==> gradient-sync wire reduction: {ratio:.2f}x")
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-4b"
+    mp = "--multi-pod" in sys.argv
+    main(arch, mp)

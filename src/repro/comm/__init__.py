@@ -1,0 +1,4 @@
+"""Homomorphic compressed collectives (paper technique on the wire)."""
+from . import hom_collectives
+from .hom_collectives import (bit_budget, compressed_psum_tree, init_residuals,
+                              packed_allgather, stage1_stats)

@@ -1,0 +1,10 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000; RG-LRU + local attention 1:2 (window 2048).
+[arXiv:2402.19427; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv=1, d_ff=12288, vocab=256000,
+    head_dim=256, act="gelu", window=2048, lru_width=4096, subquadratic=True,
+)

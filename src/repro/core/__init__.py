@@ -1,0 +1,21 @@
+"""HSZ core: error-controlled compression with multi-stage decompression and
+homomorphic analytical operations (the paper's contribution, in JAX)."""
+
+from .stages import Compressed, Encoded, Scheme, Stage
+from .pipeline import (
+    HSZCompressor,
+    UnsupportedStageError,
+    by_name,
+    hszp,
+    hszp_nd,
+    hszx,
+    hszx_nd,
+)
+from . import blocking, decorrelate, encode, error_analysis, homomorphic, quantize
+
+__all__ = [
+    "Compressed", "Encoded", "Scheme", "Stage",
+    "HSZCompressor", "UnsupportedStageError", "by_name",
+    "hszp", "hszp_nd", "hszx", "hszx_nd",
+    "blocking", "decorrelate", "encode", "error_analysis", "homomorphic", "quantize",
+]

@@ -1,0 +1,106 @@
+"""n-D data partition / unpartition (paper §IV "Data Partition").
+
+Data is padded (edge mode keeps residual entropy low) to block multiples and
+viewed either *spatially* (padded n-D layout — natural for stencils) or
+*blocked* ``(grid..., block...)`` (natural for per-block metadata/encoding).
+Both views are cheap reshape/transpose; XLA fuses them away.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def padded_shape(shape: Sequence[int], block: Sequence[int]) -> Tuple[int, ...]:
+    return tuple(-(-s // b) * b for s, b in zip(shape, block))
+
+
+def pad_to_blocks(x: jax.Array, block: Sequence[int]) -> jax.Array:
+    """Pad with edge values to block multiples (edge padding keeps |residual| small)."""
+    tgt = padded_shape(x.shape, block)
+    pads = [(0, t - s) for s, t in zip(x.shape, tgt)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, mode="edge")
+
+
+def crop(x: jax.Array, shape: Sequence[int]) -> jax.Array:
+    """Inverse of :func:`pad_to_blocks`."""
+    slices = tuple(slice(0, s) for s in shape)
+    return x[slices]
+
+
+def to_blocked(x: jax.Array, block: Sequence[int]) -> jax.Array:
+    """Spatial padded layout -> ``(g0, ..., gk, b0, ..., bk)``."""
+    nd = x.ndim
+    grid = tuple(s // b for s, b in zip(x.shape, block))
+    # interleave: (g0, b0, g1, b1, ...)
+    inter = []
+    for g, b in zip(grid, block):
+        inter += [g, b]
+    x = x.reshape(inter)
+    perm = list(range(0, 2 * nd, 2)) + list(range(1, 2 * nd, 2))
+    return x.transpose(perm)
+
+
+def from_blocked(x: jax.Array, block: Sequence[int]) -> jax.Array:
+    """Inverse of :func:`to_blocked`."""
+    nd = len(block)
+    grid = x.shape[:nd]
+    perm = []
+    for i in range(nd):
+        perm += [i, nd + i]
+    x = x.transpose(perm)
+    return x.reshape(tuple(g * b for g, b in zip(grid, block)))
+
+
+def block_grid(shape: Sequence[int], block: Sequence[int]) -> Tuple[int, ...]:
+    return tuple(p // b for p, b in zip(padded_shape(shape, block), block))
+
+
+def valid_counts(shape: Sequence[int], block: Sequence[int]) -> np.ndarray:
+    """Number of *valid* (non-padding) elements per block, row-major grid order.
+
+    Computed host-side (shapes are static) and attached to the container so
+    padding-aware homomorphic statistics stay exact.
+    """
+    grid = block_grid(shape, block)
+    per_axis = []
+    for s, b, g in zip(shape, block, grid):
+        idx = np.arange(g)
+        full = np.minimum((idx + 1) * b, s) - idx * b
+        per_axis.append(np.maximum(full, 0))
+    counts = per_axis[0]
+    for a in per_axis[1:]:
+        counts = np.multiply.outer(counts, a)
+    return counts.reshape(-1).astype(np.int32)
+
+
+def valid_mask(shape: Sequence[int], block: Sequence[int]) -> np.ndarray:
+    """Boolean spatial mask of valid elements in the padded layout."""
+    pshape = padded_shape(shape, block)
+    mask = np.ones(pshape, dtype=bool)
+    for axis, (s, p) in enumerate(zip(shape, pshape)):
+        if p > s:
+            idx = [slice(None)] * len(pshape)
+            idx[axis] = slice(s, p)
+            mask[tuple(idx)] = False
+    return mask
+
+
+def upsample_block_means(means: jax.Array, block: Sequence[int]) -> jax.Array:
+    """Broadcast per-block values back to the spatial padded layout.
+
+    ``means`` has grid shape ``(g0, ..., gk)``; result has shape
+    ``(g0*b0, ..., gk*bk)``.  Used by HSZx-family recorrelation and the
+    homomorphic border-correction stencils (paper §V-B②).
+    """
+    nd = means.ndim
+    x = means
+    for axis in range(nd):
+        x = jnp.repeat(x, block[axis], axis=axis)
+    return x

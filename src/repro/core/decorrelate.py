@@ -1,0 +1,102 @@
+"""Decorrelation / recorrelation transforms (paper §IV "Decorrelation").
+
+Two predictor families, each with 1-D and n-D variants:
+
+* **Lorenzo** (HSZp / HSZp-nd): ``p = (I - S_0)(I - S_1)...q`` where ``S_a`` is
+  the unit shift along axis ``a`` (zero boundary).  The paper's HSZp chains
+  predictions across block boundaries (§IV "HSZp"), so recorrelation is a
+  prefix sum along every axis — a *parallel scan* on TPU rather than the
+  paper's scalar CPU accumulator (DESIGN.md §3).
+
+* **Block-mean** (HSZx / HSZx-nd): ``p_i = q_i - M_b`` with the *rounded block
+  mean* ``M_b = round(mean(q | block b))`` stored as metadata — the paper's
+  §IV "HSZx" modification of SZx (mean of all data rather than (min+max)/2),
+  chosen precisely because it makes mean-related analytics metadata-only.
+
+Both transforms are linear (up to metadata rounding), which is what makes the
+homomorphic algorithms of §V possible — and what makes compressed-domain
+gradient accumulation valid (``repro.comm``).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import blocking
+
+
+# ---------------------------------------------------------------------------
+# Lorenzo (HSZp family)
+# ---------------------------------------------------------------------------
+
+def _shift_diff(x: jax.Array, axis: int) -> jax.Array:
+    """``x - shift(x)`` along ``axis`` with zero boundary (first slice kept)."""
+    shifted = jnp.concatenate(
+        [jnp.zeros_like(jax.lax.slice_in_dim(x, 0, 1, axis=axis)),
+         jax.lax.slice_in_dim(x, 0, x.shape[axis] - 1, axis=axis)],
+        axis=axis,
+    )
+    return x - shifted
+
+
+def lorenzo(q: jax.Array) -> jax.Array:
+    """n-D Lorenzo transform: residuals ``p`` from quantized data ``q``.
+
+    For 2-D this is ``p_ij = q_ij - q_{i,j-1} - q_{i-1,j} + q_{i-1,j-1}``; for
+    3-D the paper's 8-corner alternating sum — both factor into per-axis
+    first differences.
+    """
+    p = q
+    for axis in range(q.ndim):
+        p = _shift_diff(p, axis)
+    return p
+
+
+def unlorenzo(p: jax.Array) -> jax.Array:
+    """Inverse Lorenzo: prefix-sum along every axis (parallel scan on TPU)."""
+    q = p
+    for axis in range(p.ndim):
+        q = jnp.cumsum(q, axis=axis, dtype=q.dtype)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Block-mean (HSZx family)
+# ---------------------------------------------------------------------------
+
+def block_means(q: jax.Array, block: Sequence[int], valid: jax.Array | None = None) -> jax.Array:
+    """Rounded per-block integer means, grid layout.
+
+    ``valid`` is an optional boolean spatial mask; means are taken over valid
+    elements only so padding never biases stage-① statistics.
+    """
+    blocked = blocking.to_blocked(q, block)
+    nd = len(block)
+    reduce_axes = tuple(range(nd, 2 * nd))
+    # int32 accumulation: 2*|q|*block_elems must stay < 2^31 — true for the
+    # block sizes (<= 4096) and error bounds this framework configures.
+    if valid is None:
+        counts = 1
+        for b in block:
+            counts *= b
+        sums = jnp.sum(blocked, axis=reduce_axes, dtype=jnp.int32)
+    else:
+        vb = blocking.to_blocked(valid.astype(jnp.int32), block)
+        sums = jnp.sum(blocked * vb, axis=reduce_axes, dtype=jnp.int32)
+        counts = jnp.maximum(jnp.sum(vb, axis=reduce_axes, dtype=jnp.int32), 1)
+    # Exact integer round-half-up: round(s/c) = floor((2s + c) / (2c)); numpy
+    # integer // floors, which handles negative sums correctly.
+    means = (2 * sums + counts) // (2 * counts)
+    return means.astype(jnp.int32)
+
+
+def blockmean_decorrelate(q: jax.Array, means: jax.Array, block: Sequence[int]) -> jax.Array:
+    """``p = q - upsample(M)`` (HSZx / HSZx-nd)."""
+    return q - blocking.upsample_block_means(means, block)
+
+
+def blockmean_recorrelate(p: jax.Array, means: jax.Array, block: Sequence[int]) -> jax.Array:
+    """``q = p + upsample(M)``."""
+    return p + blocking.upsample_block_means(means, block)

@@ -1,0 +1,288 @@
+"""Homomorphic analytical operations on intermediate representations (paper §V).
+
+Six operations, three categories:
+
+* statistics — ``mean`` (stages ①②③④, ① HSZx-family only), ``std`` (②③④);
+* numerical differentiation — ``derivative``, ``laplacian`` (② nd-schemes, ③④ all);
+* multivariate derivation — ``divergence``, ``curl`` (same stage support).
+
+TPU adaptation (DESIGN.md §3): the paper's scalar accumulators become
+parallel prefix sums (`jnp.cumsum`), its per-block border branches become
+shifted-upsampled block-mean difference arrays, and the HSZp-2d weighted-sum
+mean becomes a rank-1 bilinear form ``w0ᵀ P w1`` (two matvecs — MXU work
+instead of a data-sized reduction tree).
+
+All stencil operators return the *common interior* of the field (every axis
+cropped by one at each end), matching the reference operators in
+``repro.kernels.ref`` exactly.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import blocking, encode, quantize
+from .pipeline import HSZCompressor, UnsupportedStageError, by_name
+from .stages import Compressed, Encoded, Scheme, Stage
+
+
+def _comp(c: Compressed) -> HSZCompressor:
+    return by_name(c.scheme.value, c.block)
+
+
+def _decode(c: Compressed | Encoded) -> Compressed:
+    return encode.decode_device(c) if isinstance(c, Encoded) else c
+
+
+def _valid_weight(c: Compressed) -> jax.Array | None:
+    """Spatial 0/1 mask of valid elements, or None when there is no padding."""
+    mask = blocking.valid_mask(c.shape if c.scheme.is_nd else (c.n,), c.block)
+    return None if mask.all() else jnp.asarray(mask, jnp.int32)
+
+
+# ===========================================================================
+# statistics (paper §V-A)
+# ===========================================================================
+
+def mean(c: Compressed | Encoded, stage: Stage) -> jax.Array:
+    """Field mean at a given decompression stage."""
+    n = c.n
+    if stage == Stage.M:
+        # ① ultra-fast metadata path: mu = (1/N) sum_b M_b S_b * 2eps  (V-A.1)
+        if not c.scheme.is_blockmean:
+            raise UnsupportedStageError("stage-1 mean needs HSZx-family metadata")
+        s = jnp.sum(c.metadata.reshape(-1) * c.valid_counts)
+        return s / n * (2.0 * c.eps)
+
+    c = _decode(c)
+    if stage == Stage.P:
+        p = c.residuals
+        if c.scheme.is_blockmean:
+            # ② sum of residuals + metadata term (V-A §②)
+            w = _valid_weight(c)
+            sp = jnp.sum(p if w is None else p * w)
+            sm = jnp.sum(c.metadata.reshape(-1) * c.valid_counts)
+            return (sp + sm) / n * (2.0 * c.eps)
+        # ② Lorenzo: sum q = weighted sum of residuals; the separable weights
+        # w_a[i] = (n_a - i) make this a rank-1 contraction (w0^T P w1 ...).
+        dims = c.shape if c.scheme.is_nd else (c.n,)
+        acc = p.astype(jnp.float32)
+        for axis, (npad, nvalid) in enumerate(zip(c.padded_shape, dims)):
+            w = jnp.clip(nvalid - jnp.arange(npad), 0).astype(jnp.float32)
+            acc = jnp.tensordot(acc, w, axes=[[0], [0]])  # consumes leading axis
+        return acc / n * (2.0 * c.eps)
+
+    comp = _comp(c)
+    if stage == Stage.Q:
+        q = comp.decompress(c, Stage.Q)
+        return jnp.mean(q.astype(jnp.float32)) * (2.0 * c.eps)
+    return jnp.mean(comp.decompress(c, Stage.F).astype(jnp.float32))
+
+
+def _sum_q_q2(c: Compressed) -> tuple[jax.Array, jax.Array]:
+    """(sum q, sum q^2) over valid elements, computed at stage ②."""
+    p = c.residuals
+    if c.scheme.is_blockmean:
+        q = p + blocking.upsample_block_means(c.metadata, c.block)
+    else:
+        q = p
+        for axis in range(p.ndim):
+            q = jnp.cumsum(q, axis=axis)
+    qf = q.astype(jnp.float32)
+    w = _valid_weight(c)
+    if w is not None:
+        qf = qf * w
+    return jnp.sum(qf), jnp.sum(qf * qf)
+
+
+def std(c: Compressed | Encoded, stage: Stage) -> jax.Array:
+    """Sample standard deviation at a given stage (paper §V-A.2)."""
+    n = c.n
+    if stage == Stage.M:
+        raise UnsupportedStageError("std needs pointwise info (stages 2-4)")
+    c = _decode(c)
+    if stage == Stage.P and c.scheme.is_blockmean:
+        # ② decompose (q - mu) = (p) + (M_b - mu~) with integer mean mu~ (V-A §②)
+        s = jnp.sum(c.metadata.reshape(-1) * c.valid_counts)
+        mu_int = jnp.round(s / n).astype(jnp.int32)
+        mdiff = blocking.upsample_block_means(c.metadata - mu_int, c.block)
+        x = (c.residuals + mdiff).astype(jnp.float32)
+        w = _valid_weight(c)
+        if w is not None:
+            x = x * w
+        ss = jnp.sum(x * x)
+        # the integer mean mu~ differs from the true mean by r~, |r~| <= 1/2;
+        # remove its first-order contribution exactly: sum (x - r)^2 over valid
+        r = s / n - mu_int
+        ss = ss - 2.0 * r * jnp.sum(x) + n * r * r
+        return jnp.sqrt(jnp.maximum(ss, 0.0) / (n - 1)) * (2.0 * c.eps)
+    if stage == Stage.P:
+        s1, s2 = _sum_q_q2(c)
+        var = (s2 - s1 * s1 / n) / (n - 1)
+        return jnp.sqrt(jnp.maximum(var, 0.0)) * (2.0 * c.eps)
+    comp = _comp(c)
+    if stage == Stage.Q:
+        q = comp.decompress(c, Stage.Q).astype(jnp.float32)
+        s1, s2 = jnp.sum(q), jnp.sum(q * q)
+        var = (s2 - s1 * s1 / n) / (n - 1)
+        return jnp.sqrt(jnp.maximum(var, 0.0)) * (2.0 * c.eps)
+    d = comp.decompress(c, Stage.F).astype(jnp.float32)
+    return jnp.std(d, ddof=1)
+
+
+# ===========================================================================
+# numerical differentiation (paper §V-B)
+# ===========================================================================
+
+def _interior(x: jax.Array) -> jax.Array:
+    """Crop one element at each end of every axis (common stencil interior)."""
+    return x[tuple(slice(1, -1) for _ in range(x.ndim))]
+
+
+def _shift_pair(x: jax.Array, axis: int) -> tuple[jax.Array, jax.Array]:
+    """(x_{+1}, x_{-1}) views cropped to the common interior."""
+    nd = x.ndim
+    idx_p = [slice(1, -1)] * nd
+    idx_m = [slice(1, -1)] * nd
+    idx_p[axis] = slice(2, None)
+    idx_m[axis] = slice(None, -2)
+    return x[tuple(idx_p)], x[tuple(idx_m)]
+
+
+def _q_spatial(c: Compressed) -> jax.Array:
+    """Stage-③ integers in the original spatial shape (cropped)."""
+    comp = _comp(c)
+    return comp.decompress(c, Stage.Q)
+
+
+def _require_stencil_stage(c: Compressed, stage: Stage) -> None:
+    if stage == Stage.M:
+        raise UnsupportedStageError("stencils need pointwise info")
+    if stage == Stage.P and not c.scheme.is_nd:
+        # paper §V-B: 1-D partitioning destroys multidimensional layout
+        raise UnsupportedStageError("stage-2 stencils require nd schemes")
+
+
+def _lorenzo_axis_diff(p: jax.Array, axis: int) -> jax.Array:
+    """D_a = q - shift_a(q) computed from residuals: cumsum over all axes != a."""
+    out = p
+    for a in range(p.ndim):
+        if a != axis:
+            out = jnp.cumsum(out, axis=a)
+    return out
+
+
+def derivative(c: Compressed | Encoded, stage: Stage, axis: int) -> jax.Array:
+    """Central difference along ``axis`` on the common interior (III-B.2)."""
+    c = _decode(c)
+    _require_stencil_stage(c, stage)
+    eps = c.eps
+
+    if stage == Stage.P:
+        p = blocking.crop(c.residuals, c.shape)
+        if c.scheme.is_lorenzo:
+            # q_{+1} - q_{-1} = D_a[+1] + D_a[0] with D_a the axis difference
+            # reconstructed by prefix sums over the other axes (V-B.1).
+            d = _lorenzo_axis_diff(c.residuals, axis)
+            d = blocking.crop(d, c.shape)
+            # derivative = (D[i+1] + D[i]) on the interior
+            sl_hi = [slice(1, -1)] * d.ndim
+            sl_hi[axis] = slice(2, None)
+            sl_lo = [slice(1, -1)] * d.ndim
+            sl_lo[axis] = slice(1, -1)
+            val = d[tuple(sl_hi)] + d[tuple(sl_lo)]
+            return val.astype(jnp.float32) * eps
+        # block-mean: (p_{+1} - p_{-1}) + (m_{+1} - m_{-1})  (V-B §② with the
+        # border Delta terms realized as a shifted upsampled-mean difference)
+        m = blocking.upsample_block_means(c.metadata, c.block)
+        p_hi, p_lo = _shift_pair(blocking.crop(c.residuals, c.shape), axis)
+        m_hi, m_lo = _shift_pair(blocking.crop(m, c.shape), axis)
+        return ((p_hi - p_lo) + (m_hi - m_lo)).astype(jnp.float32) * eps
+
+    if stage == Stage.Q:
+        q = _q_spatial(c)
+        hi, lo = _shift_pair(q, axis)
+        return (hi - lo).astype(jnp.float32) * eps  # (V-B.2)
+    d = _comp(c).decompress(c, Stage.F)
+    hi, lo = _shift_pair(d, axis)
+    return (hi - lo) * 0.5
+
+
+def gradient(c: Compressed | Encoded, stage: Stage) -> tuple[jax.Array, ...]:
+    nd = len(_decode(c).shape)
+    return tuple(derivative(c, stage, a) for a in range(nd))
+
+
+def laplacian(c: Compressed | Encoded, stage: Stage) -> jax.Array:
+    """2nd-order Laplacian stencil on the common interior (III-B.3)."""
+    c = _decode(c)
+    _require_stencil_stage(c, stage)
+    eps2 = 2.0 * c.eps
+
+    if stage == Stage.P:
+        if c.scheme.is_lorenzo:
+            # sum_a (D_a[+1] - D_a[0]) — paper Eq. V-B.3 generalized to n-D
+            total = None
+            for a in range(c.residuals.ndim):
+                d = blocking.crop(_lorenzo_axis_diff(c.residuals, a), c.shape)
+                sl_hi = [slice(1, -1)] * d.ndim
+                sl_hi[a] = slice(2, None)
+                sl_lo = [slice(1, -1)] * d.ndim
+                sl_lo[a] = slice(1, -1)
+                term = d[tuple(sl_hi)] - d[tuple(sl_lo)]
+                total = term if total is None else total + term
+            return total.astype(jnp.float32) * eps2
+        m = blocking.crop(blocking.upsample_block_means(c.metadata, c.block), c.shape)
+        p = blocking.crop(c.residuals, c.shape)
+        total = None
+        for x in (p, m):
+            acc = -2.0 * len(c.shape) * _interior(x).astype(jnp.float32)
+            for a in range(x.ndim):
+                hi, lo = _shift_pair(x, a)
+                acc = acc + hi.astype(jnp.float32) + lo.astype(jnp.float32)
+            total = acc if total is None else total + acc
+        return total * eps2
+
+    if stage == Stage.Q:
+        q = _q_spatial(c)
+        acc = -2.0 * len(c.shape) * _interior(q).astype(jnp.float32)
+        for a in range(q.ndim):
+            hi, lo = _shift_pair(q, a)
+            acc = acc + hi.astype(jnp.float32) + lo.astype(jnp.float32)
+        return acc * eps2  # (V-B.4)
+    d = _comp(c).decompress(c, Stage.F)
+    acc = -2.0 * len(c.shape) * _interior(d)
+    for a in range(d.ndim):
+        hi, lo = _shift_pair(d, a)
+        acc = acc + hi + lo
+    return acc
+
+
+# ===========================================================================
+# multivariate derivation (paper §V-C)
+# ===========================================================================
+
+def divergence(components: Sequence[Compressed | Encoded], stage: Stage) -> jax.Array:
+    """div F = sum_a  d(F_a)/d(x_a)  on the common interior (V-C.1/2)."""
+    total = None
+    for axis, comp in enumerate(components):
+        term = derivative(comp, stage, axis)
+        total = term if total is None else total + term
+    return total
+
+
+def curl(components: Sequence[Compressed | Encoded], stage: Stage):
+    """2-D: scalar dv/dx - du/dy (paper V-C.3 with (x,y)=(axis0,axis1));
+    3-D: the full vector curl."""
+    if len(components) == 2:
+        u, v = components
+        return derivative(u, stage, 1) - derivative(v, stage, 0)
+    u, v, w = components
+    return (
+        derivative(w, stage, 1) - derivative(v, stage, 2),
+        derivative(u, stage, 2) - derivative(w, stage, 0),
+        derivative(v, stage, 0) - derivative(u, stage, 1),
+    )

@@ -1,0 +1,149 @@
+"""HSZ compression pipeline with multi-stage decompression (paper §IV, Alg. 1-2).
+
+Four compressor instances share one pipeline::
+
+    quantize -> partition -> metadata -> decorrelate -> encode
+
+and decompression stops at any of the four stages (Table I).  The device
+pipeline is fully jit-able; `compress` is linear-algebraic (quantize +
+decorrelate are linear maps), which the homomorphic collectives in
+``repro.comm`` rely on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import blocking, decorrelate, encode, quantize
+from .stages import Compressed, Encoded, Scheme, Stage
+
+DEFAULT_BLOCKS = {1: (256,), 2: (16, 16), 3: (8, 8, 8)}
+
+
+class UnsupportedStageError(NotImplementedError):
+    """Raised when an operation is not defined at a decompression stage
+
+    (e.g. stage-① mean for HSZp-family, stage-② stencils for 1-D schemes —
+    paper §V-A/§V-B)."""
+
+
+@dataclass(frozen=True)
+class HSZCompressor:
+    """One of the paper's four compressors (Table II)."""
+
+    scheme: Scheme
+    block: Optional[Tuple[int, ...]] = None  # None -> per-rank default
+
+    # -- helpers -----------------------------------------------------------
+    def _layout(self, shape: Tuple[int, ...]) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+        """(logical working shape, block shape) for this scheme."""
+        if self.scheme.is_nd:
+            nd = len(shape)
+            if nd not in (1, 2, 3):
+                raise ValueError(f"nd schemes support 1-3 dims, got {nd}")
+            block = self.block or DEFAULT_BLOCKS[nd]
+            if len(block) != nd:
+                raise ValueError("block rank != data rank")
+            return shape, tuple(block)
+        # 1-D schemes flatten the data (paper §IV: "treat the original data
+        # as a 1D array regardless of their original dimensions")
+        n = 1
+        for s in shape:
+            n *= s
+        block = self.block or DEFAULT_BLOCKS[1]
+        return (n,), tuple(block)
+
+    # -- compression (Alg. 1) ---------------------------------------------
+    def compress(self, data: jax.Array, *, abs_eb: float | None = None,
+                 rel_eb: float | None = None, eps: jax.Array | None = None) -> Compressed:
+        orig_shape = tuple(data.shape)
+        work_shape, block = self._layout(orig_shape)
+        if eps is None:
+            eps = quantize.resolve_eps(data, abs_eb=abs_eb, rel_eb=rel_eb)
+        eps = jnp.asarray(eps, jnp.float32)
+        q = quantize.quantize(data.reshape(work_shape), eps)
+        q = blocking.pad_to_blocks(q, block)
+
+        vc = jnp.asarray(blocking.valid_counts(work_shape, block))
+        if self.scheme.is_blockmean:
+            mask = blocking.valid_mask(work_shape, block)
+            valid = None if mask.all() else jnp.asarray(mask)
+            means = decorrelate.block_means(q, block, valid=valid)
+            residuals = decorrelate.blockmean_decorrelate(q, means, block)
+            metadata = means
+        else:
+            residuals = decorrelate.lorenzo(q)
+            metadata = jnp.zeros((1,), jnp.int32)  # anchor q_0 lives in residuals
+
+        bitwidths = encode.bitwidth_per_block(residuals, block)
+        return Compressed(
+            residuals=residuals, metadata=metadata, bitwidths=bitwidths, eps=eps,
+            valid_counts=vc, scheme=self.scheme, shape=orig_shape,
+            padded_shape=tuple(residuals.shape), block=block,
+            orig_dtype=jnp.dtype(data.dtype),
+        )
+
+    # -- multi-stage decompression (Alg. 2) --------------------------------
+    def reconstruct_q(self, c: Compressed) -> jax.Array:
+        """Stage ③: recorrelate residuals back to quantization indices (padded)."""
+        if c.scheme.is_blockmean:
+            return decorrelate.blockmean_recorrelate(c.residuals, c.metadata, c.block)
+        return decorrelate.unlorenzo(c.residuals)
+
+    def decompress(self, c: Compressed | Encoded, stage: Stage = Stage.F, *, crop: bool = True):
+        """Return the intermediate representation at ``stage`` (paper Alg. 2)."""
+        if isinstance(c, Encoded) and stage != Stage.M:
+            c = encode.decode_device(c)
+        if stage == Stage.M:
+            return c.metadata
+        if stage == Stage.P:
+            return c.residuals
+        q = self.reconstruct_q(c)
+        if stage == Stage.Q:
+            return self._restore(q, c) if crop else q
+        d = quantize.dequantize(q, c.eps, dtype=c.orig_dtype)
+        return self._restore(d, c) if crop else d
+
+    def _restore(self, x: jax.Array, c: Compressed) -> jax.Array:
+        """Crop padding and restore the original (pre-flatten) shape."""
+        if self.scheme.is_nd:
+            return blocking.crop(x, c.shape)
+        n = c.n
+        return x.reshape(-1)[:n].reshape(c.shape)
+
+    # -- encoding ----------------------------------------------------------
+    def encode(self, c: Compressed, bits: int | None = None) -> Encoded:
+        """Bit-pack at uniform width; ``bits=None`` reads the exact max width
+        from the device (host sync) for a lossless container."""
+        if bits is None:
+            bits = int(jnp.max(c.bitwidths))
+        return encode.encode_device(c, bits)
+
+    # -- accounting ---------------------------------------------------------
+    def serialized_bits(self, c: Compressed | Encoded) -> jax.Array:
+        meta_bits = 32 if self.scheme.is_blockmean else 0
+        return encode.serialized_bits(c.bitwidths, c.valid_counts,
+                                      meta_bits_per_block=meta_bits)
+
+    def compression_ratio(self, c: Compressed | Encoded) -> jax.Array:
+        orig_bits = c.n * 32
+        return orig_bits / self.serialized_bits(c)
+
+
+# the paper's four instances (Table II)
+hszp = HSZCompressor(Scheme.HSZP)
+hszp_nd = HSZCompressor(Scheme.HSZP_ND)
+hszx = HSZCompressor(Scheme.HSZX)
+hszx_nd = HSZCompressor(Scheme.HSZX_ND)
+
+_BY_NAME = {"hszp": hszp, "hszp_nd": hszp_nd, "hszx": hszx, "hszx_nd": hszx_nd}
+
+
+def by_name(name: str, block: Optional[Tuple[int, ...]] = None) -> HSZCompressor:
+    base = _BY_NAME[name]
+    return HSZCompressor(base.scheme, block) if block is not None else base

@@ -1,0 +1,42 @@
+"""Linear-scaling quantization (paper §IV, "Quantization").
+
+``q_i = round(d_i / (2 eps))`` with round-half-even; decompression recovers
+``d'_i = 2 q_i eps`` which guarantees ``|d_i - d'_i| <= eps``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def resolve_eps(data: jax.Array, *, abs_eb: float | None = None, rel_eb: float | None = None) -> jax.Array:
+    """Resolve the absolute error bound.
+
+    ``rel_eb`` follows the paper's value-range-based relative bound:
+    ``eps = rel_eb * (max(d) - min(d))``.  Exactly one of ``abs_eb``/``rel_eb``
+    must be provided.
+    """
+    if (abs_eb is None) == (rel_eb is None):
+        raise ValueError("provide exactly one of abs_eb / rel_eb")
+    if abs_eb is not None:
+        return jnp.asarray(abs_eb, jnp.float32)
+    value_range = (jnp.max(data) - jnp.min(data)).astype(jnp.float32)
+    # Degenerate constant fields quantize to all-zero integers with any eps>0.
+    return jnp.where(value_range > 0, value_range * rel_eb, jnp.float32(1.0))
+
+
+def quantize(data: jax.Array, eps: jax.Array) -> jax.Array:
+    """Map floating-point data to int32 quantization indices.
+
+    Uses ``round(d * inv)`` with ``inv = 1/(2 eps)`` — the exact expression is
+    part of the format contract: every implementation (core, Pallas kernels,
+    collectives) must use the same one, or ulp-level tie-breaking diverges.
+    """
+    inv = 1.0 / (2.0 * eps)
+    q = jnp.round(data.astype(jnp.float32) * inv)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, eps: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Recover floating-point values: ``d' = 2 q eps``."""
+    return (q.astype(jnp.float32) * (2.0 * eps)).astype(dtype)

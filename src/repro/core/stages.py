@@ -1,0 +1,178 @@
+"""Data containers and stage definitions for the HSZ multi-stage pipeline.
+
+The paper (§III-C, Table I) defines four progressive decompression stages:
+
+    stage 1  D_m  metadata            (block anchors / block means, int)
+    stage 2  D_p  decorrelated data   (prediction residuals, int)
+    stage 3  D_q  quantized data      (linear-scaling quantization indices, int)
+    stage 4  D_f  floating-point data (fully decompressed values)
+
+On-device compressed arrays must be shape-stable under ``jax.jit`` (XLA has no
+dynamic shapes), so the device-resident container keeps a dense residual array
+plus per-block bitwidths; the *encoded* container additionally holds a
+bit-packed payload at a uniform (static) bitwidth.  True per-block
+variable-rate byte streams are produced only at the host serialization
+boundary (``repro.core.encode.serialize``).  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Stage(enum.IntEnum):
+    """Decompression stages, paper Table I."""
+
+    M = 1  # metadata
+    P = 2  # decorrelated residuals
+    Q = 3  # quantization integers
+    F = 4  # floating point
+
+
+class Scheme(str, enum.Enum):
+    """The four compressor instances implemented by the paper (§IV)."""
+
+    HSZP = "hszp"        # 1-D Lorenzo, inter-block chained (paper HSZp)
+    HSZP_ND = "hszp_nd"  # n-D Lorenzo (paper HSZp-nd)
+    HSZX = "hszx"        # 1-D block-mean predictor (paper HSZx)
+    HSZX_ND = "hszx_nd"  # n-D block-mean predictor (paper HSZx-nd)
+
+    @property
+    def is_nd(self) -> bool:
+        return self in (Scheme.HSZP_ND, Scheme.HSZX_ND)
+
+    @property
+    def is_lorenzo(self) -> bool:
+        return self in (Scheme.HSZP, Scheme.HSZP_ND)
+
+    @property
+    def is_blockmean(self) -> bool:
+        return self in (Scheme.HSZX, Scheme.HSZX_ND)
+
+
+def _dataclass_pytree(cls=None, *, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
+    """Register a dataclass as a pytree with explicit data/meta split."""
+
+    def wrap(c):
+        return jax.tree_util.register_dataclass(
+            c, data_fields=list(data_fields), meta_fields=list(meta_fields)
+        )
+
+    return wrap(cls) if cls is not None else wrap
+
+
+@partial(
+    _dataclass_pytree,
+    data_fields=("residuals", "metadata", "bitwidths", "eps", "valid_counts"),
+    meta_fields=("scheme", "shape", "padded_shape", "block", "orig_dtype"),
+)
+@dataclass(frozen=True)
+class Compressed:
+    """Device-resident compressed field (information-complete, shape-stable).
+
+    ``residuals`` is D_p in *spatial* layout (padded to block multiples);
+    ``metadata`` is D_m: block means for HSZx-family (block-grid layout) or the
+    global anchor for HSZp-family (shape ``(1,)``).  ``bitwidths`` is the exact
+    per-block fixed-rate code width (bits/value, sign included) used for size
+    accounting and serialization; blocks in row-major grid order.
+    """
+
+    residuals: jax.Array      # int32, spatial padded layout
+    metadata: jax.Array       # int32
+    bitwidths: jax.Array      # int32 (n_blocks,)
+    eps: jax.Array            # f32 scalar: absolute error bound
+    valid_counts: jax.Array   # int32 (n_blocks,): valid elements per block (padding-aware)
+
+    scheme: Scheme
+    shape: Tuple[int, ...]         # original (unpadded) data shape
+    padded_shape: Tuple[int, ...]  # residuals.shape
+    block: Tuple[int, ...]         # block shape (same rank as padded_shape)
+    orig_dtype: Any
+
+    @property
+    def n(self) -> int:
+        """Number of valid (original) elements."""
+        size = 1
+        for s in self.shape:
+            size *= s
+        return size
+
+    @property
+    def grid(self) -> Tuple[int, ...]:
+        return tuple(p // b for p, b in zip(self.padded_shape, self.block))
+
+    @property
+    def n_blocks(self) -> int:
+        size = 1
+        for g in self.grid:
+            size *= g
+        return size
+
+    @property
+    def block_elems(self) -> int:
+        size = 1
+        for b in self.block:
+            size *= b
+        return size
+
+
+@partial(
+    _dataclass_pytree,
+    data_fields=("payload", "metadata", "bitwidths", "eps", "valid_counts"),
+    meta_fields=("scheme", "shape", "padded_shape", "block", "orig_dtype", "bits"),
+)
+@dataclass(frozen=True)
+class Encoded:
+    """Bit-packed compressed field (stage-0 on-device representation).
+
+    ``payload`` packs zigzag-coded residuals at a *uniform* static width
+    ``bits`` into ``uint32`` words.  Decoding the payload is the stage-2
+    decompression step measured by the paper's throughput figures.
+    """
+
+    payload: jax.Array       # uint32 (n_words,)
+    metadata: jax.Array      # int32
+    bitwidths: jax.Array     # int32 (n_blocks,) exact per-block widths (accounting)
+    eps: jax.Array           # f32 scalar
+    valid_counts: jax.Array  # int32 (n_blocks,)
+
+    scheme: Scheme
+    shape: Tuple[int, ...]
+    padded_shape: Tuple[int, ...]
+    block: Tuple[int, ...]
+    orig_dtype: Any
+    bits: int                # uniform packed width (zigzag bits per value)
+
+    @property
+    def n(self) -> int:
+        size = 1
+        for s in self.shape:
+            size *= s
+        return size
+
+    @property
+    def grid(self) -> Tuple[int, ...]:
+        return tuple(p // b for p, b in zip(self.padded_shape, self.block))
+
+    @property
+    def n_blocks(self) -> int:
+        size = 1
+        for g in self.grid:
+            size *= g
+        return size
+
+    @property
+    def block_elems(self) -> int:
+        size = 1
+        for b in self.block:
+            size *= b
+        return size
+
+    def device_bytes(self) -> int:
+        """Actual on-device compressed bytes (payload + metadata)."""
+        return int(self.payload.size * 4 + self.metadata.size * 4 + self.bitwidths.size * 4)

@@ -1,0 +1,2 @@
+"""Data pipelines: synthetic LM tokens + compressed scientific fields."""
+from . import scientific, tokens

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for HSZ compute hot-spots (validated vs ref.py)."""
+
+from . import ops, ref
+from .ops import (
+    block_stats,
+    grad2d,
+    laplacian2d,
+    pack,
+    prefix_stats2d,
+    quant_lorenzo2d,
+    unpack,
+)

@@ -1,0 +1,83 @@
+"""Fixed-rate bitplane pack/unpack Pallas kernels.
+
+The encode/decode hot loop of the paper's fixed-rate coder (§IV "Encoding").
+Each grid step packs ``VALS`` zigzag values at a static width ``bits`` into
+``VALS*bits/32`` uint32 words entirely in VMEM via a bit-matrix contraction:
+
+    values (V,)  ->  bits (V, bits)  ->  reshape (V*bits/32, 32)  ->  · 2^j
+
+``VALS`` is chosen so V*bits is a multiple of 32 for every bits in 1..32
+(V = multiple of 32) and the bit matrix fits VMEM comfortably.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+VALS = 4096  # values per grid step; V*bits <= 128K int32 = 512 KiB VMEM
+
+
+def _pack_kernel(u_ref, o_ref, *, bits: int):
+    u = u_ref[...].astype(jnp.uint32)
+    shifts = jnp.arange(bits, dtype=jnp.uint32)
+    bitmat = (u[:, None] >> shifts[None, :]) & jnp.uint32(1)   # (V, bits)
+    stream = bitmat.reshape(-1, 32)                            # (V*bits/32, 32)
+    powers = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    o_ref[...] = jnp.sum(stream * powers[None, :], axis=1, dtype=jnp.uint32)
+
+
+def _unpack_kernel(w_ref, o_ref, *, bits: int):
+    w = w_ref[...].astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bitmat = ((w[:, None] >> shifts[None, :]) & jnp.uint32(1)).reshape(-1, bits)
+    powers = (jnp.uint32(1) << jnp.arange(bits, dtype=jnp.uint32))
+    o_ref[...] = jnp.sum(bitmat * powers[None, :], axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def pack(u: jax.Array, bits: int, *, interpret: bool = False) -> jax.Array:
+    """Pack flat zigzag uint32 values; ``u.size`` must be a VALS multiple.
+
+    Matches ``repro.core.encode.pack_uniform`` bit-exactly.
+    """
+    if bits == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    if bits == 32:
+        return u.astype(jnp.uint32)
+    n = u.shape[0]
+    if n % VALS:
+        raise ValueError(f"n={n} must be a multiple of {VALS}")
+    words_per = VALS * bits // 32
+    grid = (n // VALS,)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((VALS,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((words_per,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n * bits // 32,), jnp.uint32),
+        interpret=interpret,
+    )(u.astype(jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bits", "interpret"))
+def unpack(words: jax.Array, n: int, bits: int, *, interpret: bool = False) -> jax.Array:
+    """Inverse of :func:`pack`."""
+    if bits == 0:
+        return jnp.zeros((n,), jnp.uint32)
+    if bits == 32:
+        return words[:n].astype(jnp.uint32)
+    if n % VALS:
+        raise ValueError(f"n={n} must be a multiple of {VALS}")
+    words_per = VALS * bits // 32
+    grid = (n // VALS,)
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((words_per,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((VALS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=interpret,
+    )(words.astype(jnp.uint32))

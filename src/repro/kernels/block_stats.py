@@ -1,0 +1,46 @@
+"""Blockwise metadata reduction Pallas kernel (paper Alg. 1 line 6 + encode).
+
+One pass over the quantized blocks produces, per block:
+  * the rounded integer mean (HSZx-family metadata, exact int arithmetic), and
+  * the zigzag max (the fixed-rate bitwidth determinant, paper §IV Encoding).
+
+Fusing both reductions halves metadata-collection bandwidth vs. two passes.
+Layout: blocks are rows of a (n_blocks, S) int32 matrix; the grid tiles rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 256  # blocks per grid step
+
+
+def _kernel(q_ref, mean_ref, maxu_ref):
+    q = q_ref[...]
+    cnt = q.shape[1]
+    s = jnp.sum(q, axis=1, dtype=jnp.int32)
+    mean_ref[...] = (2 * s + cnt) // (2 * cnt)
+    u = ((q << 1) ^ (q >> 31)).astype(jnp.uint32)
+    maxu_ref[...] = jnp.max(u, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_stats(q_blocked: jax.Array, *, interpret: bool = False):
+    """Per-block (integer mean, zigzag max) for (n_blocks, S) int32 input."""
+    nb, s = q_blocked.shape
+    rows = min(ROWS, nb)
+    if nb % rows:
+        raise ValueError(f"n_blocks={nb} not a multiple of {rows}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, s), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows,), lambda i: (i,)),
+                   pl.BlockSpec((rows,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb,), jnp.int32),
+                   jax.ShapeDtypeStruct((nb,), jnp.uint32)],
+        interpret=interpret,
+    )(q_blocked)

@@ -1,0 +1,52 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container) every wrapper runs the kernel in ``interpret=True``
+mode; on TPU the compiled kernel runs natively.  The dispatch is a backend
+check, so framework code calls one API either way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bitpack as _bitpack
+from . import block_stats as _block_stats
+from . import prefix_stats as _prefix_stats
+from . import quant_lorenzo as _quant_lorenzo
+from . import stencil_dq as _stencil_dq
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quant_lorenzo2d(x: jax.Array, eps) -> jax.Array:
+    """Fused quantize + 2-D Lorenzo decorrelation (compression hot path)."""
+    return _quant_lorenzo.quant_lorenzo2d(x, eps, interpret=_interpret())
+
+
+def pack(u: jax.Array, bits: int) -> jax.Array:
+    return _bitpack.pack(u, bits, interpret=_interpret())
+
+
+def unpack(words: jax.Array, n: int, bits: int) -> jax.Array:
+    return _bitpack.unpack(words, n, bits, interpret=_interpret())
+
+
+def grad2d(q: jax.Array, eps):
+    """Fused stage-③ central differences (both axes, one pass)."""
+    return _stencil_dq.grad2d(q, eps, interpret=_interpret())
+
+
+def laplacian2d(q: jax.Array, eps):
+    return _stencil_dq.laplacian2d(q, eps, interpret=_interpret())
+
+
+def block_stats(q_blocked: jax.Array):
+    """Per-block (integer mean, zigzag max) metadata reduction."""
+    return _block_stats.block_stats(q_blocked, interpret=_interpret())
+
+
+def prefix_stats2d(p: jax.Array):
+    """Algorithm-4 (sum q, sum q^2) from residuals, no reconstruction."""
+    return _prefix_stats.prefix_stats2d(p, interpret=_interpret())

@@ -1,0 +1,65 @@
+"""Paper Algorithm 4 as a Pallas kernel: stage-② std without reconstruction.
+
+Computes (sum q, sum q^2) where q is the 2-D Lorenzo reconstruction of the
+residuals — *without materializing q in HBM*.  The paper's CPU algorithm
+carries a ``colSum`` row buffer (the previously reconstructed row) and a
+scalar prefix accumulator; the TPU adaptation (DESIGN.md §3) carries the
+``colSum`` row as a VMEM scratch buffer that persists across the sequential
+TPU grid, and replaces the scalar column loop with a vectorized ``cumsum``
+over the row band.
+
+Grid step i processes a (R, n2) row band:
+    rowcum  = cumsum(p_band, axis=1)              # prefix within each row
+    q_band  = colsum_carry + cumsum(rowcum, 0)    # Lorenzo reconstruction
+    s1/s2  += sum(q_band), sum(q_band^2)          # VMEM accumulators
+    colsum_carry = q_band[-1]                     # carried to band i+1
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS = 64
+
+
+def _kernel(p_ref, s_ref, col_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        col_ref[...] = jnp.zeros_like(col_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rowcum = jnp.cumsum(p_ref[...], axis=1, dtype=jnp.int32)
+    q = col_ref[...][None, :] + jnp.cumsum(rowcum, axis=0, dtype=jnp.int32)
+    qf = q.astype(jnp.float32)
+    acc_ref[0] += jnp.sum(qf)
+    acc_ref[1] += jnp.sum(qf * qf)
+    col_ref[...] = q[-1, :]
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _emit():
+        s_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefix_stats2d(p: jax.Array, *, interpret: bool = False):
+    """(sum q, sum q^2) for q = unlorenzo(p); p int32 (n0, n1), n0 % ROWS == 0."""
+    n0, n1 = p.shape
+    rows = min(ROWS, n0)
+    if n0 % rows:
+        raise ValueError(f"n0={n0} not a multiple of {rows}")
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n0 // rows,),
+        in_specs=[pl.BlockSpec((rows, n1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n1,), jnp.int32), pltpu.VMEM((2,), jnp.float32)],
+        interpret=interpret,
+    )(p)
+    return out[0], out[1]

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<name>.py`` kernel must match its oracle bit-exactly (integer paths)
+or to float tolerance (dequantized paths) across the shape/dtype sweeps in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- quant_lorenzo ---------------------------------------------------------
+
+def quant_lorenzo2d(x: jax.Array, eps: jax.Array) -> jax.Array:
+    """round(x/2eps) followed by the 2-D Lorenzo transform (zero boundary)."""
+    inv = 1.0 / (2.0 * eps)
+    q = jnp.round(x.astype(jnp.float32) * inv).astype(jnp.int32)
+    z = jnp.zeros_like
+    qr = jnp.pad(q, ((1, 0), (0, 0)))[:-1, :]
+    qc = jnp.pad(q, ((0, 0), (1, 0)))[:, :-1]
+    qrc = jnp.pad(q, ((1, 0), (1, 0)))[:-1, :-1]
+    return q - qr - qc + qrc
+
+
+# --- bitpack ---------------------------------------------------------------
+
+def pack_uniform(u: jax.Array, bits: int) -> jax.Array:
+    """Bit-exact mirror of repro.core.encode.pack_uniform (oracle copy)."""
+    from repro.core import encode
+
+    return encode.pack_uniform(u, bits)
+
+
+def unpack_uniform(words: jax.Array, n: int, bits: int) -> jax.Array:
+    from repro.core import encode
+
+    return encode.unpack_uniform(words, n, bits)
+
+
+# --- stencil_dq ------------------------------------------------------------
+
+def stencil_dq_grad2d(q: jax.Array, eps: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused dequantize+central-difference on quantized ints (stage ③)."""
+    d0 = (q[2:, 1:-1] - q[:-2, 1:-1]).astype(jnp.float32) * eps
+    d1 = (q[1:-1, 2:] - q[1:-1, :-2]).astype(jnp.float32) * eps
+    return d0, d1
+
+
+def stencil_dq_laplacian2d(q: jax.Array, eps: jax.Array) -> jax.Array:
+    acc = (q[2:, 1:-1] + q[:-2, 1:-1] + q[1:-1, 2:] + q[1:-1, :-2]
+           - 4 * q[1:-1, 1:-1])
+    return acc.astype(jnp.float32) * (2.0 * eps)
+
+
+# --- block_stats -----------------------------------------------------------
+
+def block_stats(q_blocked: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block (rounded integer mean, zigzag max) for metadata collection.
+
+    ``q_blocked``: (n_blocks, S) int32.  Mean uses round-half-up in exact
+    integer arithmetic (matches repro.core.decorrelate.block_means).
+    """
+    s = jnp.sum(q_blocked, axis=1, dtype=jnp.int32)
+    cnt = q_blocked.shape[1]
+    means = (2 * s + cnt) // (2 * cnt)
+    u = ((q_blocked << 1) ^ (q_blocked >> 31)).astype(jnp.uint32)
+    return means.astype(jnp.int32), jnp.max(u, axis=1)
+
+
+# --- prefix_stats (paper Algorithm 4) ---------------------------------------
+
+def prefix_stats2d(p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(sum q, sum q^2) where q = 2-D Lorenzo reconstruction of residuals p.
+
+    The oracle materializes q; the kernel must not (it carries the paper's
+    ``colSum`` row buffer across grid steps in VMEM scratch).
+    """
+    q = jnp.cumsum(jnp.cumsum(p, axis=0, dtype=jnp.int32), axis=1, dtype=jnp.int32)
+    qf = q.astype(jnp.float32)
+    return jnp.sum(qf), jnp.sum(qf * qf)

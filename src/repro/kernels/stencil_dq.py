@@ -1,0 +1,88 @@
+"""Fused dequantize + finite-difference stencils on stage-③ integers.
+
+The paper's fastest differentiation path computes stencils on D_q and scales
+once by eps (Eq. V-B.2/V-B.4).  Fusing the integer stencil with the eps
+scaling in VMEM avoids materializing either D_f or the int32 difference
+array in HBM — one read of q, one write of the f32 result.
+
+Halo handling: shifted HBM views (see quant_lorenzo.py).  Both central
+differences and the 5-point Laplacian are emitted by one kernel invocation
+each; ``grad2d`` returns both axis derivatives from a single pass over q
+(the multivariate operators in §V-C are compositions of these outputs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = (128, 256)
+
+
+def _grad_kernel(qn_ref, qs_ref, qw_ref, qe_ref, eps_ref, d0_ref, d1_ref):
+    eps = eps_ref[0]
+    d0_ref[...] = (qs_ref[...] - qn_ref[...]).astype(jnp.float32) * eps
+    d1_ref[...] = (qe_ref[...] - qw_ref[...]).astype(jnp.float32) * eps
+
+
+def _lap_kernel(qc_ref, qn_ref, qs_ref, qw_ref, qe_ref, eps_ref, o_ref):
+    eps2 = 2.0 * eps_ref[0]
+    acc = (qn_ref[...] + qs_ref[...] + qw_ref[...] + qe_ref[...]
+           - 4 * qc_ref[...])
+    o_ref[...] = acc.astype(jnp.float32) * eps2
+
+
+def _interior_views(q: jax.Array):
+    """(north, south, west, east, center) interior-aligned views of q."""
+    qn = q[:-2, 1:-1]
+    qs = q[2:, 1:-1]
+    qw = q[1:-1, :-2]
+    qe = q[1:-1, 2:]
+    qc = q[1:-1, 1:-1]
+    return qn, qs, qw, qe, qc
+
+
+def _tiles(shape, tile):
+    t0 = min(tile[0], shape[0])
+    t1 = min(tile[1], shape[1])
+    if shape[0] % t0 or shape[1] % t1:
+        raise ValueError(f"interior {shape} not a multiple of tile ({t0},{t1})")
+    return t0, t1
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def grad2d(q: jax.Array, eps: jax.Array, *, tile=DEFAULT_TILE, interpret: bool = False):
+    """(d/dx0, d/dx1) on the common interior; both from one pass over q."""
+    qn, qs, qw, qe, _ = _interior_views(q)
+    m0, m1 = qn.shape
+    t0, t1 = _tiles((m0, m1), tile)
+    spec = pl.BlockSpec((t0, t1), lambda i, j: (i, j))
+    eps_arr = jnp.asarray(eps, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=(m0 // t0, m1 // t1),
+        in_specs=[spec] * 4 + [pl.BlockSpec((1,), lambda i, j: (0,))],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((m0, m1), jnp.float32)] * 2,
+        interpret=interpret,
+    )(qn, qs, qw, qe, eps_arr)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def laplacian2d(q: jax.Array, eps: jax.Array, *, tile=DEFAULT_TILE, interpret: bool = False):
+    """5-point Laplacian on the common interior (Eq. V-B.4 fused with 2eps)."""
+    qn, qs, qw, qe, qc = _interior_views(q)
+    m0, m1 = qn.shape
+    t0, t1 = _tiles((m0, m1), tile)
+    spec = pl.BlockSpec((t0, t1), lambda i, j: (i, j))
+    eps_arr = jnp.asarray(eps, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _lap_kernel,
+        grid=(m0 // t0, m1 // t1),
+        in_specs=[spec] * 5 + [pl.BlockSpec((1,), lambda i, j: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m0, m1), jnp.float32),
+        interpret=interpret,
+    )(qc, qn, qs, qw, qe, eps_arr)

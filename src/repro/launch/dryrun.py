@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the production mesh (16x16 single-pod /
+2x16x16 multi-pod placeholder devices), lowers the appropriate step function
+against ShapeDtypeStruct inputs (no allocation), compiles it, and records:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits / flags it),
+  * cost_analysis()    — per-device HLO FLOPs + bytes for §Roofline,
+  * the collective table parsed from the post-SPMD HLO (op kind, dtype,
+    per-device bytes) — the collective roofline term,
+  * lower/compile wall time and any failure, per cell, to JSON.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--out experiments/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cell_supported
+from repro.models import get_model, input_specs as model_input_specs
+from repro.launch import hlo_analysis
+from repro.launch import mesh as mesh_lib
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+
+def _tokens_sharding(mesh, specs):
+    return mesh_lib.batch_shardings(mesh, specs)
+
+
+# activation-memory lever: grad-accumulation microbatches per train step
+# (the saved scan carries scale with per-device microbatch size)
+MICROBATCH = {
+    "deepseek-v3-671b": 8, "falcon-mamba-7b": 4, "recurrentgemma-9b": 4,
+    "minitron-4b": 2, "qwen3-4b": 2, "granite-3-2b": 2,
+    "granite-moe-3b-a800m": 2, "paligemma-3b": 2,
+}
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               hom_grads: bool = False, remat: Optional[str] = None,
+               seq_shard: bool = False, microbatch: Optional[int] = None,
+               kv_quant: bool = False, fsdp_bf16: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the result record."""
+    import dataclasses as dc
+
+    cfg = ARCHS[arch]
+    if remat is not None:
+        cfg = dc.replace(cfg, remat=remat)
+    if kv_quant:
+        cfg = dc.replace(cfg, kv_quant=True)
+    if fsdp_bf16:
+        cfg = dc.replace(cfg, fsdp_bf16_gather=True)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.kind, "hom_grads": hom_grads,
+        "kv_quant": kv_quant, "seq_shard": seq_shard,
+    }
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec["devices"] = n_dev
+    mesh_lib.activate(mesh, seq_shard=seq_shard)
+    try:
+        model = get_model(cfg)
+        params_sds, specs = model.init(None)      # abstract init: no allocation
+        rules = mesh_lib.logical_rules(mesh, seq_shard=seq_shard)
+        param_sh = mesh_lib.tree_shardings(mesh, specs, params_sds, seq_shard=seq_shard)
+        in_specs = model_input_specs(cfg, shape)
+        batch_sh = mesh_lib.batch_shardings(mesh, in_specs)
+
+        t0 = time.time()
+        if shape.kind == "train":
+            opt_cfg = opt_lib.AdamWConfig()
+            opt_sds = jax.eval_shape(opt_lib.init, params_sds)
+            opt_sh = ts_lib.TrainState(
+                params=param_sh,
+                opt=opt_lib.OptState(m=param_sh, v=param_sh,
+                                     count=NamedSharding(mesh, P())),
+                step=NamedSharding(mesh, P()),
+                ef_residual=param_sh if hom_grads else None,
+            )
+            state_sds = ts_lib.TrainState(
+                params=params_sds, opt=opt_sds, step=jax.ShapeDtypeStruct((), jnp.int32),
+                ef_residual=params_sds if hom_grads else None)
+            mode = "hom" if hom_grads else "gspmd"
+            dp_axes = ("pod", "data") if multi_pod else ("data",)
+            mb = microbatch if microbatch is not None else MICROBATCH.get(arch)
+            rec["microbatch"] = mb
+            step_fn = ts_lib.make_train_step(model, opt_cfg, mode=mode,
+                                             mesh=mesh, dp_axes=dp_axes,
+                                             microbatch=mb)
+            # donation + partial-manual shard_map trips an XLA copy-opcode
+            # CHECK in the CPU partitioner; donate only in the gspmd path
+            jitted = jax.jit(step_fn, in_shardings=(opt_sh, batch_sh),
+                             donate_argnums=(0,) if mode == "gspmd" else ())
+            lowered = jitted.lower(state_sds, in_specs)
+        elif shape.kind == "prefill":
+            # cache must cover prefix tokens (VLM) + prompt + a little headroom
+            max_len = shape.seq_len + cfg.prefix_tokens + 8
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, max_len)
+
+            jitted = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(params_sds, in_specs)
+        else:  # decode
+            B = shape.global_batch
+            cache_sds = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+            cache_logical = model.cache_specs(B, shape.seq_len)
+            cache_sh = mesh_lib.tree_shardings(mesh, cache_logical, cache_sds,
+                                               seq_shard=seq_shard)
+            tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            tok_sh = mesh_lib.batch_shardings(mesh, tok_sds)
+            jitted = jax.jit(model.decode_step,
+                             in_shardings=(param_sh, tok_sh, cache_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_sds, tok_sds, cache_sds)
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device_gib": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {"flops_raw": float(ca.get("flops", 0.0)),
+                       "bytes_accessed_raw": float(ca.get("bytes accessed", 0.0))}
+        # trip-count-aware analysis (scan bodies weighted by L) — see
+        # hlo_analysis.py; cost_analysis() counts each computation once.
+        rec["hlo"] = hlo_analysis.analyze(compiled.as_text())
+        rec["status"] = "ok"
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}"
+              f"{' hom' if hom_grads else ''}: ok "
+              f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s, "
+              f"peak {rec['memory']['peak_per_device_gib']} GiB/dev)")
+    except Exception as e:  # noqa: BLE001 — record per-cell failures
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: FAILED {rec['error']}")
+    finally:
+        mesh_lib.deactivate()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--hom-grads", action="store_true",
+                    help="compressed (int16) homomorphic gradient all-reduce")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--fsdp-bf16", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}" \
+                  + ("_hom" if args.hom_grads else "") \
+                  + ("_kvq" if args.kv_quant else "") \
+                  + (f"_{args.tag}" if args.tag else "")
+            out_path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(out_path):
+                print(f"[dryrun] {tag}: cached")
+                continue
+            rec = build_cell(arch, shape, multi_pod=mp, hom_grads=args.hom_grads,
+                             remat=args.remat, seq_shard=args.seq_shard,
+                             microbatch=args.microbatch, kv_quant=args.kv_quant,
+                             fsdp_bf16=args.fsdp_bf16)
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, all per-device:
+
+    compute    = HLO_dot_FLOPs / peak_FLOPs        (197 TF/s bf16, TPU v5e)
+    memory     = HLO_bytes_proxy / HBM_bw          (819 GB/s)
+    collective = wire_bytes / ICI_bw               (~50 GB/s/link; 2 links/axis
+                                                    usable per collective step)
+
+The dominant term is the bottleneck; roofline fraction = compute_term /
+max(all terms) (how close the cell is to being compute-bound, the ideal).
+MODEL_FLOPS uses 6·N·D (dense) or 6·N_active·D (MoE) for training; 2·N(_act)
+per generated/prefilled token for inference.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import ARCHS, SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (~2 usable links per collective)
+ICI_EFF = 2 * ICI_BW
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count if cfg.moe else cfg.param_count
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / devices
+    tokens = shape.global_batch  # one token per sequence per step
+    return 2.0 * n * tokens / devices
+
+
+def analyze_record(rec: Dict) -> Dict:
+    hlo = rec["hlo"]
+    flops = hlo["dot_flops"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hlo["bytes_proxy"] / HBM_BW
+    t_coll = hlo["wire_bytes_total"] / ICI_EFF
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["devices"])
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "roofline_fraction": t_compute / max(max(terms.values()), 1e-30),
+        "model_flops": mf,
+        "useful_ratio": mf / max(flops, 1e-30),
+        "peak_gib": rec["memory"]["peak_per_device_gib"],
+        "fits_16g": rec["memory"]["peak_per_device_gib"] <= 16.0,
+    }
+
+
+def load_all(dir_: str) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        rec = json.load(open(f))
+        rec["_file"] = os.path.basename(f)
+        out.append(rec)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16",
+                    help="mesh filter for the table (roofline is single-pod)")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    recs = [r for r in load_all(args.dir)
+            if r.get("mesh") == args.mesh and not r.get("hom_grads")]
+    header = (f"{'arch':22s} {'shape':12s} {'st':4s} {'comp_ms':>8s} {'mem_ms':>8s} "
+              f"{'coll_ms':>8s} {'domin':>7s} {'roofl%':>7s} {'useful%':>8s} "
+              f"{'GiB/dev':>8s}")
+    sep = "-" * len(header)
+    if args.markdown:
+        print("| arch | shape | status | compute ms | memory ms | collective ms "
+              "| dominant | roofline | useful | GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    else:
+        print(header)
+        print(sep)
+    for rec in recs:
+        arch, shape = rec["arch"], rec["shape"]
+        if rec["status"] == "skipped":
+            line = (f"{arch:22s} {shape:12s} skip  ({rec['reason'][:60]})")
+            if args.markdown:
+                print(f"| {arch} | {shape} | skipped | — | — | — | — | — | — | — |")
+            else:
+                print(line)
+            continue
+        if rec["status"] != "ok":
+            print(f"{arch:22s} {shape:12s} FAIL  {rec.get('error','')[:60]}")
+            continue
+        a = analyze_record(rec)
+        if args.markdown:
+            print(f"| {arch} | {shape} | ok | {a['compute_s']*1e3:.1f} | "
+                  f"{a['memory_s']*1e3:.1f} | {a['collective_s']*1e3:.2f} | "
+                  f"{a['dominant']} | {a['roofline_fraction']*100:.0f}% | "
+                  f"{min(a['useful_ratio'],9.99)*100:.0f}% | {a['peak_gib']:.1f} |")
+        else:
+            print(f"{arch:22s} {shape:12s} ok   {a['compute_s']*1e3:8.1f} "
+                  f"{a['memory_s']*1e3:8.1f} {a['collective_s']*1e3:8.2f} "
+                  f"{a['dominant']:>7s} {a['roofline_fraction']*100:6.0f}% "
+                  f"{min(a['useful_ratio'],9.99)*100:7.0f}% {a['peak_gib']:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

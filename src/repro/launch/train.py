@@ -1,0 +1,91 @@
+"""Training launcher: mesh-aware driver with checkpoint/restart.
+
+On real hardware this runs under ``jax.distributed`` (one process per host);
+on this container it drives the host mesh.  The dry-run (``dryrun.py``) is
+the multi-pod compile proof; this driver is the runnable small-scale path.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 50 --seq-len 64 --batch 4 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced as reduce_cfg
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.models import get_model
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+from repro.comm import stage1_stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=list(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--ckpt-mode", default="lossless", choices=["lossless", "hsz"])
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}{' (reduced)' if args.reduced else ''}: "
+          f"{n/1e6:.1f}M params on {len(jax.devices())} device(s)")
+
+    opt_cfg = opt_lib.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                  total_steps=max(args.steps, 100))
+    step = jax.jit(ts_lib.make_train_step(model, opt_cfg,
+                                          microbatch=args.microbatch),
+                   donate_argnums=(0,))
+    state = ts_lib.init_state(params)
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq_len, global_batch=args.batch))
+
+    if args.ckpt_dir:
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            restored = ckpt.restore(args.ckpt_dir, last,
+                                    state._asdict() | {"data": pipe.state_dict()})
+            pipe.load_state_dict(restored.pop("data"))
+            state = ts_lib.TrainState(**restored)
+            print(f"[train] resumed from step {last}")
+
+    t0 = time.time()
+    while int(state.step) < args.steps:
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        state, metrics = step(state, batch)
+        s = int(state.step)
+        if s % 10 == 0 or s == 1:
+            print(f"[train] step {s:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.0f}s)")
+        if args.ckpt_dir and s % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, s,
+                      state._asdict() | {"data": pipe.state_dict()},
+                      mode=args.ckpt_mode, keep=3)
+    print(f"[train] finished {args.steps} steps in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: 10 assigned architectures behind one functional facade."""
+from .zoo import Model, get_model, input_specs, make_batch

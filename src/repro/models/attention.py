@@ -1,0 +1,372 @@
+"""Attention variants: GQA (+qk-norm, RoPE, sliding window), MLA, KV caches.
+
+Covers every assigned architecture's attention: qwen3 (GQA + per-head
+qk-norm), granite/minitron (GQA), smollm (GQA kv=5), whisper (MHA + cross),
+recurrentgemma (local MQA), paligemma (MQA), deepseek-v3 (MLA with latent KV
+cache).  Decode paths read/write a preallocated cache (shape-stable); the
+cache optionally holds stage-③ quantized integers (HSZ residency, int8 +
+per-head scale) — the framework-level analogue of the paper's "operate on
+D_q instead of D_f".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Builder, axis_size, causal_mask, rms_norm, rope, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None      # sliding-window (local) attention
+    use_rope: bool = True
+    causal: bool = True
+    # MLA (deepseek-v3)
+    mla: bool = False
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope: int = 0
+    qk_rope: int = 0
+    v_dim: int = 0
+    # KV-cache quantization (HSZ stage-③ residency)
+    kv_quant: bool = False
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(b: Builder, cfg: AttnCfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    if cfg.mla:
+        p = {
+            "q_a": b.param((d, cfg.q_lora), ("embed_w", "lora")),
+            "q_a_norm": b.param((cfg.q_lora,), ("lora",), init="zeros"),
+            "q_b": b.param((cfg.q_lora, h * (cfg.qk_nope + cfg.qk_rope)), ("lora", "heads")),
+            "kv_a": b.param((d, cfg.kv_lora + cfg.qk_rope), ("embed_w", "lora")),
+            "kv_a_norm": b.param((cfg.kv_lora,), ("lora",), init="zeros"),
+            "kv_b": b.param((cfg.kv_lora, h * (cfg.qk_nope + cfg.v_dim)), ("lora", "heads")),
+            "o": b.param((h * cfg.v_dim, d), ("heads", "embed_w")),
+        }
+        return p
+    p = {
+        "wq": b.param((d, h * hd), ("embed_w", "heads")),
+        "wk": b.param((d, kv * hd), ("embed_w", "kv_heads")),
+        "wv": b.param((d, kv * hd), ("embed_w", "kv_heads")),
+        "wo": b.param((h * hd, d), ("heads", "embed_w")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = b.param((hd,), ("head_dim",), init="zeros")
+        p["k_norm"] = b.param((hd,), ("head_dim",), init="zeros")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core scaled-dot-product with GQA head grouping
+# ---------------------------------------------------------------------------
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array],
+         scale: float) -> jax.Array:
+    """q: (B,S,H,hd)  k/v: (B,T,Kh,hd or vd)  -> (B,S,H,vd).
+
+    Head grouping: H = Kh * G; computed grouped to avoid materializing
+    repeated K/V (the GQA memory win).
+    """
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, S, Kh, G, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :] if mask.ndim == 3 else mask,
+                           logits, jnp.float32(-1e30))
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, x, cfg: AttnCfg, positions):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, hd)
+    k = (x @ p["wk"]).reshape(B, S, kv, hd)
+    v = (x @ p["wv"]).reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if h % max(axis_size("heads"), 1) == 0:
+        q = shard(q, "batch", "seq", "heads", None)
+    else:
+        # sequence-parallel fallback: head count (e.g. 15, 8) does not divide
+        # the TP extent — shard attention over the query-sequence dim instead
+        # (Megatron-style context parallelism for the logits buffer).
+        q = shard(q, "batch", "seq_tp", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def forward(p, x: jax.Array, cfg: AttnCfg, positions: jax.Array,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """Self-attention over a full sequence (training / prefill)."""
+    if cfg.mla:
+        return _mla_forward(p, x, cfg, positions, mask)
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if mask is None and cfg.causal:
+        mask = causal_mask(S, S, window=cfg.window)
+    out = sdpa(q, k, v, mask, 1.0 / (cfg.head_dim ** 0.5))
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return shard(out @ p["wo"], "batch", "seq", "embed")
+
+
+def forward_chunked(p, x: jax.Array, cfg: AttnCfg, positions: jax.Array,
+                    q_chunk: int = 2048) -> jax.Array:
+    """Query-chunked attention for long prefill: bounds the live logits
+    buffer to (B, H, q_chunk, kv_len) — the XLA-level analogue of
+    flash-attention tiling (full fusion is a Pallas-kernel hillclimb lever).
+
+    For sliding-window configs, keys are pre-shifted so each query chunk
+    attends to a static (q_chunk + window) key band instead of the full
+    sequence — O(S·W) instead of O(S²).
+    """
+    B, S, _ = x.shape
+    if S <= q_chunk:
+        return forward(p, x, cfg, positions)
+    if S % q_chunk:  # prefix-LM shapes (e.g. 256+4096): largest divisor wins
+        q_chunk = next(d for d in range(q_chunk, 0, -1) if S % d == 0)
+        if q_chunk < 64:
+            return forward(p, x, cfg, positions)
+    if cfg.mla:
+        q, k, v, _, _ = _mla_qkv(p, x, cfg, positions)
+        scale = 1.0 / ((cfg.qk_nope + cfg.qk_rope) ** 0.5)
+        o_name, o_dim = "o", cfg.n_heads * cfg.v_dim
+    else:
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        scale = 1.0 / (cfg.head_dim ** 0.5)
+        o_name, o_dim = "wo", cfg.n_heads * cfg.head_dim
+    w = cfg.window
+    H = q.shape[2]
+    nc = S // q_chunk
+    # chunk axis leads so lax.scan slices it statically (keeps the seq-dim
+    # sharding of each chunk intact — a traced dynamic_slice would force
+    # GSPMD to materialize the full unsharded buffer)
+    q_chunks = jnp.moveaxis(q.reshape(B, nc, q_chunk, H, -1), 1, 0)
+    head_ok = H % max(axis_size("heads"), 1) == 0
+    q_axes = ("batch", "seq", "heads", None) if head_ok else \
+             ("batch", "seq_tp", "heads", None)
+
+    if w is not None:
+        band = ((w + q_chunk - 1) // q_chunk) * q_chunk  # static key look-back
+        kp = jnp.pad(k, ((0, 0), (band, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (band, 0), (0, 0), (0, 0)))
+
+        def body(_, inputs):
+            qi, idx = inputs
+            qi = shard(qi, *q_axes)
+            s0 = idx * q_chunk
+            ki = jax.lax.dynamic_slice_in_dim(kp, s0, band + q_chunk, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(vp, s0, band + q_chunk, axis=1)
+            q_pos = s0 + jnp.arange(q_chunk)[:, None]
+            kv_pos = s0 - band + jnp.arange(band + q_chunk)[None, :]
+            mask = (kv_pos <= q_pos) & (kv_pos > q_pos - w) & (kv_pos >= 0)
+            return _, sdpa(qi, ki, vi, mask, scale)
+    else:
+        def body(_, inputs):
+            qi, idx = inputs
+            qi = shard(qi, *q_axes)
+            q_pos = idx * q_chunk + jnp.arange(q_chunk)[:, None]
+            mask = jnp.arange(S)[None, :] <= q_pos
+            return _, sdpa(qi, k, v, mask, scale)
+
+    _, out = jax.lax.scan(body, 0, (q_chunks, jnp.arange(nc)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, o_dim)
+    return shard(out @ p[o_name], "batch", "seq", "embed")
+
+
+def cross_forward(p, x: jax.Array, kv_src: jax.Array, cfg: AttnCfg) -> jax.Array:
+    """Cross-attention (whisper decoder): queries from x, keys/values from
+    encoder output; no RoPE, no causal mask."""
+    B, S, _ = x.shape
+    T = kv_src.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, hd)
+    k = (kv_src @ p["wk"]).reshape(B, T, kv, hd)
+    v = (kv_src @ p["wv"]).reshape(B, T, kv, hd)
+    out = sdpa(q, k, v, None, 1.0 / hd ** 0.5).reshape(B, S, h * hd)
+    return out @ p["wo"]
+
+
+def project_kv(p, x: jax.Array, cfg: AttnCfg, positions: jax.Array):
+    """KV-cache entries for a full sequence (prefill cache construction).
+
+    GQA -> {'k','v'}: (B,S,kv,hd); MLA -> {'latent'}: (B,S,kv_lora+rope).
+    """
+    if cfg.mla:
+        kv_a = x @ p["kv_a"]
+        c_kv = rms_norm(kv_a[..., :cfg.kv_lora], p["kv_a_norm"])
+        k_rope = rope(kv_a[..., None, cfg.kv_lora:], positions, cfg.rope_theta)[:, :, 0]
+        return {"latent": jnp.concatenate([c_kv, k_rope], axis=-1)}
+    _, k, v = _project_qkv(p, x, cfg, positions)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: AttnCfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Preallocated cache; int8 payload + f32 scale when kv_quant is set."""
+    if cfg.mla:
+        width = cfg.kv_lora + cfg.qk_rope
+        if cfg.kv_quant:
+            return {"latent": jnp.zeros((batch, max_len, width), jnp.int8),
+                    "scale": jnp.ones((), jnp.float32)}
+        return {"latent": jnp.zeros((batch, max_len, width), dtype)}
+    kv_shape = (batch, max_len, cfg.n_kv, cfg.head_dim)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(kv_shape, jnp.int8), "v": jnp.zeros(kv_shape, jnp.int8),
+                "k_scale": jnp.ones((cfg.n_kv,), jnp.float32),
+                "v_scale": jnp.ones((cfg.n_kv,), jnp.float32)}
+    return {"k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype)}
+
+
+def _scale_for(cache, name, buf):
+    """Broadcast the per-head (or scalar) scale against (B, S, kv, hd)."""
+    scale = cache.get(f"{name}_scale", cache.get("scale"))
+    if scale.ndim == 1 and buf.ndim == 4:   # (kv,) -> (1, 1, kv, 1)
+        scale = scale[None, None, :, None]
+    return scale
+
+
+def _cache_write(cache, name, val, pos):
+    """Write (B, 1, ...) value at time pos (quantizing if the cache is int8)."""
+    buf = cache[name]
+    if buf.dtype == jnp.int8:
+        scale = _scale_for(cache, name, buf)
+        val = jnp.clip(jnp.round(val.astype(jnp.float32) / scale), -127, 127
+                       ).astype(jnp.int8)
+    return jax.lax.dynamic_update_slice_in_dim(buf, val.astype(buf.dtype), pos, axis=1)
+
+
+def _cache_read(cache, name):
+    buf = cache[name]
+    if buf.dtype == jnp.int8:
+        return buf.astype(jnp.float32) * _scale_for(cache, name, buf)
+    return buf
+
+
+def decode_step(p, x: jax.Array, cfg: AttnCfg, cache: Dict[str, Any],
+                pos: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token self-attention against the cache.  x: (B, 1, D)."""
+    if cfg.mla:
+        return _mla_decode(p, x, cfg, cache, pos)
+    B = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    cache = dict(cache)
+    cache["k"] = _cache_write(cache, "k", k_new, pos)
+    cache["v"] = _cache_write(cache, "v", v_new, pos)
+    k = _cache_read(cache, "k").astype(q.dtype)
+    v = _cache_read(cache, "v").astype(q.dtype)
+    T = k.shape[1]
+    valid = jnp.arange(T)[None, :] <= pos
+    if cfg.window is not None:
+        valid &= jnp.arange(T)[None, :] > pos - cfg.window
+    out = sdpa(q, k, v, valid[None, :, :], 1.0 / hd ** 0.5)
+    out = out.reshape(B, 1, h * hd)
+    return out @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(p, x, cfg: AttnCfg, positions):
+    """Project to per-head q/k/v from the latent (training path)."""
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    qa = rms_norm(x @ p["q_a"], p["q_a_norm"])
+    q = (qa @ p["q_b"]).reshape(B, S, h, cfg.qk_nope + cfg.qk_rope)
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["kv_a"]
+    c_kv = rms_norm(kv_a[..., :cfg.kv_lora], p["kv_a_norm"])
+    k_rope = rope(kv_a[..., None, cfg.kv_lora:], positions, cfg.rope_theta)  # 1 shared head
+    kvb = (c_kv @ p["kv_b"]).reshape(B, S, h, cfg.qk_nope + cfg.v_dim)
+    k_nope, v = kvb[..., :cfg.qk_nope], kvb[..., cfg.qk_nope:]
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, k_nope.shape[:-1] + (cfg.qk_rope,))], axis=-1)
+    q_full = shard(q_full, "batch", "seq", "heads", None)
+    k_full = shard(k_full, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+    return q_full, k_full, v, c_kv, kv_a[..., cfg.kv_lora:]
+
+
+def _mla_forward(p, x, cfg: AttnCfg, positions, mask):
+    B, S, _ = x.shape
+    q, k, v, _, _ = _mla_qkv(p, x, cfg, positions)
+    if mask is None and cfg.causal:
+        mask = causal_mask(S, S)
+    scale = 1.0 / ((cfg.qk_nope + cfg.qk_rope) ** 0.5)
+    out = sdpa(q, k, v, mask, scale).reshape(B, S, cfg.n_heads * cfg.v_dim)
+    return shard(out @ p["o"], "batch", "seq", "embed")
+
+
+def _mla_decode(p, x, cfg: AttnCfg, cache, pos):
+    """Latent-cache decode: cache holds (c_kv ++ rope_k) = 576 f/token —
+    MLA's compressed KV (itself a learned compression; composes with HSZ
+    int8 residency when kv_quant is on)."""
+    B = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    qa = rms_norm(x @ p["q_a"], p["q_a_norm"])
+    q = (qa @ p["q_b"]).reshape(B, 1, h, cfg.qk_nope + cfg.qk_rope)
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["kv_a"]
+    c_kv = rms_norm(kv_a[..., :cfg.kv_lora], p["kv_a_norm"])
+    k_rope_new = rope(kv_a[..., None, cfg.kv_lora:], positions, cfg.rope_theta)[:, :, 0]
+    latent_new = jnp.concatenate([c_kv, k_rope_new], axis=-1)
+    cache = dict(cache)
+    cache["latent"] = _cache_write(cache, "latent", latent_new, pos)
+    latent = _cache_read(cache, "latent")
+    c_all = latent[..., :cfg.kv_lora].astype(x.dtype)      # (B, T, kv_lora)
+    kr_all = latent[..., cfg.kv_lora:].astype(x.dtype)     # (B, T, rope)
+
+    # absorbed attention: score = q_nope^T (W_kb c) + q_rope^T k_rope
+    wkb = p["kv_b"].reshape(cfg.kv_lora, h, cfg.qk_nope + cfg.v_dim)
+    wk_nope = wkb[..., :cfg.qk_nope]      # (kv_lora, h, nope)
+    wv = wkb[..., cfg.qk_nope:]           # (kv_lora, h, vd)
+    q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope, wk_nope)  # project q into latent
+    T = c_all.shape[1]
+    scale = 1.0 / ((cfg.qk_nope + cfg.qk_rope) ** 0.5)
+    logits = (jnp.einsum("bqhl,btl->bhqt", q_abs, c_all)
+              + jnp.einsum("bqhr,btr->bhqt", q_rope, kr_all)).astype(jnp.float32) * scale
+    valid = jnp.arange(T)[None, None, None, :] <= pos
+    logits = jnp.where(valid, logits, jnp.float32(-1e30))
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqt,btl->bqhl", w, c_all)           # (B,1,h,kv_lora)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, wv).reshape(B, 1, h * cfg.v_dim)
+    return out @ p["o"], cache

@@ -1,0 +1,305 @@
+"""Feed-forward blocks: gated MLP (SwiGLU/GeGLU) and routed MoE.
+
+MoE is the TPU-native sort-based dropless-with-capacity router (MaxText
+style): tokens are sorted by expert, gathered into an (E, C, D) dispatch
+buffer (sharded on the expert axis -> GSPMD emits the EP all-to-all), run
+through batched expert einsums, and combined with top-k gate weights.
+Covers granite-moe (40e top-8) and deepseek-v3 (1 shared + 256 routed
+top-8 with sigmoid routing + bias-free norm-topk).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import CTX, Builder, axis_size, gelu_glu, shard, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class FfnCfg:
+    d_model: int
+    d_ff: int
+    act: str = "silu"          # 'silu' -> SwiGLU, 'gelu' -> GeGLU
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0          # shared (always-on) experts, deepseek-style
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_softmax: bool = True  # False -> sigmoid scores (deepseek-v3)
+
+
+def _glu(act: str):
+    return swiglu if act == "silu" else gelu_glu
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(b: Builder, cfg: FfnCfg, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "gate": b.param((d, f), ("embed_w", "mlp")),
+        "up": b.param((d, f), ("embed_w", "mlp")),
+        "down": b.param((f, d), ("mlp", "embed_w")),
+    }
+
+
+def dense(p, x: jax.Array, cfg: FfnCfg) -> jax.Array:
+    h = _glu(cfg.act)(x @ p["gate"], x @ p["up"])
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(h @ p["down"], "batch", "seq", "embed")
+
+
+def init_plain(b: Builder, d_model: int, d_ff: int):
+    """Ungated 2-layer MLP (whisper-style fc1 -> GELU -> fc2)."""
+    return {
+        "fc1": b.param((d_model, d_ff), ("embed_w", "mlp")),
+        "fc2": b.param((d_ff, d_model), ("mlp", "embed_w")),
+    }
+
+
+def plain(p, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["fc1"], approximate=True)
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(h @ p["fc2"], "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# routed MoE
+# ---------------------------------------------------------------------------
+
+def init_moe(b: Builder, cfg: FfnCfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": b.param((d, e), ("embed_w", "experts")),
+        "w_gate": b.param((e, d, f), ("experts", "embed_w", "mlp")),
+        "w_up": b.param((e, d, f), ("experts", "embed_w", "mlp")),
+        "w_down": b.param((e, f, d), ("experts", "mlp", "embed_w")),
+    }
+    if cfg.n_shared:
+        p["shared"] = init_dense(b, cfg, d_ff=cfg.shared_d_ff or cfg.d_ff * cfg.n_shared)
+    return p
+
+
+def moe(p, x: jax.Array, cfg: FfnCfg) -> jax.Array:
+    """Routed mixture with capacity; returns combined output (B, S, D)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = shard(x.reshape(T, D), "batch", None)
+
+    scores = (xt @ p["router"]).astype(jnp.float32)        # (T, E)
+    if cfg.router_softmax:
+        probs = jax.nn.softmax(scores, axis=-1)
+    else:  # deepseek-v3 sigmoid routing with top-k renormalization
+        probs = jax.nn.sigmoid(scores)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)        # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- routing plan in integer space (cheap: (T*K,) int32 tensors) ------
+    slots_e = expert_idx.reshape(-1)                       # (T*K,)
+    order = jnp.argsort(slots_e)
+    sorted_e = slots_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))     # first slot per expert
+    pos_in_e = jnp.arange(T * K) - starts[sorted_e]        # rank within expert
+    C = int(max(1, round(T * K / E * cfg.capacity_factor)))
+    dest = jnp.where(pos_in_e < C, sorted_e * C + pos_in_e, E * C)  # drop -> row E*C
+    src_token = order // K
+
+    # ---- dispatch: ONE gather straight into the (E, C, D) buffer ----------
+    # (never materializes a slot-major (T*K, D) tensor; the gather crosses
+    # the DP->EP sharding boundary, which GSPMD lowers to the all-to-all)
+    slot_src = jnp.full((E * C + 1,), T, jnp.int32).at[dest].set(
+        src_token, mode="drop")[: E * C]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, D), x.dtype)])  # row T = zeros
+    dispatch = shard(xt_pad[slot_src].reshape(E, C, D),
+                     "experts", "expert_cap", None)
+
+    # ---- expert compute ----------------------------------------------------
+    h = _glu(cfg.act)(
+        jnp.einsum("ecd,edf->ecf", dispatch, p["w_gate"]),
+        jnp.einsum("ecd,edf->ecf", dispatch, p["w_up"]),
+    )
+    h = shard(h, "experts", "expert_cap", None)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])     # (E, C, D)
+    out_e = shard(out_e, "experts", "expert_cap", None).reshape(E * C, D)
+    out_pad = jnp.concatenate([out_e, jnp.zeros((1, D), out_e.dtype)])
+
+    # ---- combine: K gathers in token order, weighted by gates --------------
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(T * K))
+    dest_tok = dest[inv].reshape(T, K)                     # row per (token, k)
+    combined = jnp.zeros((T, D), x.dtype)
+    for j in range(K):
+        rows = out_pad[dest_tok[:, j]]                     # dropped -> zeros row
+        combined = combined + shard(rows, "batch", None) * gate_vals[:, j:j + 1].astype(x.dtype)
+    combined = shard(combined, "batch", None)
+
+    if cfg.n_shared:
+        combined = combined + dense(p["shared"], xt[:, None, :], cfg)[:, 0, :]
+    return shard(combined.reshape(B, S, D), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# manual expert parallelism (shard_map + explicit all_to_all)
+# ---------------------------------------------------------------------------
+
+def _dp_axes():
+    rule = CTX.rules.get("batch")
+    return rule if isinstance(rule, tuple) else (rule,)
+
+
+def _can_manual_ep(cfg: FfnCfg, x: jax.Array) -> bool:
+    """Manual EP needs experts % tp == 0 and tokens to split over dp x tp."""
+    if CTX.mesh is None or "model" not in CTX.mesh.axis_names:
+        return False
+    if CTX.manual_dp:
+        return False  # already inside a manual-DP shard_map: no nesting
+    tp = CTX.mesh.shape["model"]
+    dp = 1
+    for a in _dp_axes():
+        if a not in CTX.mesh.axis_names:
+            return False
+        dp *= CTX.mesh.shape[a]
+    B, S, _ = x.shape
+    T = B * S
+    if tp <= 1 or B % dp or (T // dp) % tp:
+        return False
+    return (T // dp // tp) * cfg.top_k >= tp  # at least one slot per peer
+def moe_manual_ep(p, x: jax.Array, cfg: FfnCfg) -> jax.Array:
+    """Deepseek-scale MoE with explicit EP (DESIGN.md §6).
+
+    GSPMD cannot shard the irregular dispatch gathers of 256-expert MoE — it
+    materializes slot-major (T*K, D) buffers (hundreds of GiB/device at 1M
+    tokens).  This path does what production EP systems do: a partial-manual
+    ``shard_map`` over (dp..., model) where each device routes its local
+    token slice, exchanges expert-bound rows with ``lax.all_to_all`` over the
+    ``model`` axis (the EP group), runs its local experts, and reverses the
+    exchange.  Per-device buffers are O(T_local * K / tp * D).
+    """
+    mesh = CTX.mesh
+    tp = mesh.shape["model"]
+    dp_axes = _dp_axes()
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    # experts that don't divide the EP group count are padded with dead
+    # experts (zero weights, never routed to) — granite-moe's 40e on tp=16
+    E_pad = -(-E // tp) * tp
+    E_loc = E_pad // tp
+    cf = cfg.capacity_factor
+
+    from jax.sharding import PartitionSpec as P
+
+    def body(xb, router, w_gate, w_up, w_down):
+        # xb: (B_loc, S, D) local tokens; weights: local expert slices
+        Bl = xb.shape[0]
+        T_loc = Bl * S
+        Ts = T_loc // tp                         # tokens routed by this device
+        g_idx = jax.lax.axis_index("model")
+        xt = xb.reshape(T_loc, D)
+        xs = jax.lax.dynamic_slice_in_dim(xt, g_idx * Ts, Ts, axis=0)
+
+        scores = (xs @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, -1) if cfg.router_softmax else jax.nn.sigmoid(scores)
+        gate_vals, expert_idx = jax.lax.top_k(probs, K)    # (Ts, K)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        # ---- stage 1: route token-slots to expert groups (peers) ----------
+        flat_e = expert_idx.reshape(-1)                    # (Ts*K,)
+        dest_g = flat_e // E_loc
+        order1 = jnp.argsort(dest_g)
+        sorted_g = dest_g[order1]
+        starts = jnp.searchsorted(sorted_g, jnp.arange(tp))
+        pos1 = jnp.arange(Ts * K) - starts[sorted_g]
+        cap1 = int(max(1, round(Ts * K / tp * cf)))
+        slot1 = jnp.where(pos1 < cap1, sorted_g * cap1 + pos1, tp * cap1)
+        # send buffers: rows + local-expert ids (E_loc marks an empty slot)
+        src_tok = order1 // K
+        send_src = jnp.full((tp * cap1 + 1,), Ts, jnp.int32).at[slot1].set(
+            src_tok, mode="drop")[: tp * cap1]
+        xs_pad = jnp.concatenate([xs, jnp.zeros((1, D), xs.dtype)])
+        send_rows = xs_pad[send_src]                       # (tp*cap1, D)
+        send_le = jnp.full((tp * cap1 + 1,), E_loc, jnp.int32).at[slot1].set(
+            flat_e[order1] % E_loc, mode="drop")[: tp * cap1]
+        send_le = jnp.where(send_src == Ts, E_loc, send_le)
+
+        recv_rows = jax.lax.all_to_all(send_rows, "model", 0, 0, tiled=True)
+        recv_le = jax.lax.all_to_all(send_le, "model", 0, 0, tiled=True)
+
+        # ---- stage 2: local dispatch to this group's experts ---------------
+        R = tp * cap1
+        order2 = jnp.argsort(recv_le)                      # empties sort last
+        sorted_le = recv_le[order2]
+        starts2 = jnp.searchsorted(sorted_le, jnp.arange(E_loc))
+        pos2 = jnp.arange(R) - starts2[jnp.clip(sorted_le, 0, E_loc - 1)]
+        cap2 = int(max(1, round(R / E_loc * cf)))
+        slot2_sorted = jnp.where(
+            (sorted_le < E_loc) & (pos2 < cap2),
+            sorted_le * cap2 + pos2, E_loc * cap2)
+        slot2 = jnp.zeros((R,), jnp.int32).at[order2].set(slot2_sorted)
+        disp_src = jnp.full((E_loc * cap2 + 1,), R, jnp.int32).at[slot2].set(
+            jnp.arange(R), mode="drop")[: E_loc * cap2]
+        recv_pad = jnp.concatenate([recv_rows, jnp.zeros((1, D), recv_rows.dtype)])
+        disp = recv_pad[disp_src].reshape(E_loc, cap2, D)
+
+        h = _glu(cfg.act)(
+            jnp.einsum("ecd,edf->ecf", disp, w_gate),
+            jnp.einsum("ecd,edf->ecf", disp, w_up),
+        )
+        out_e = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E_loc * cap2, D)
+        out_pad = jnp.concatenate([out_e, jnp.zeros((1, D), out_e.dtype)])
+        y_rows = out_pad[slot2]                            # (R, D) recv order
+
+        # ---- return path + combine -----------------------------------------
+        y_back = jax.lax.all_to_all(y_rows, "model", 0, 0, tiled=True)
+        y_back = jnp.concatenate([y_back, jnp.zeros((1, D), y_back.dtype)])
+        slot1_tok = jnp.zeros((Ts * K,), jnp.int32).at[order1].set(
+            jnp.where(pos1 < cap1, slot1, tp * cap1)).reshape(Ts, K)
+        acc = jnp.zeros((Ts, D), xb.dtype)
+        for j in range(K):
+            acc = acc + y_back[slot1_tok[:, j]] * gate_vals[:, j:j + 1].astype(xb.dtype)
+        # reassemble the full local token set from the tp routing peers
+        y_full = jax.lax.all_gather(acc, "model", axis=0, tiled=True)  # (T_loc, D)
+        return y_full.reshape(Bl, S, D)
+
+    axis_names = set(a for a in dp_axes if a in mesh.axis_names) | {"model"}
+    mapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_axes if len(dp_axes) > 1 else dp_axes[0], None, None),
+                  P(), P("model"), P("model"), P("model")),
+        out_specs=P(dp_axes if len(dp_axes) > 1 else dp_axes[0], None, None),
+        axis_names=axis_names,
+        check_vma=False,  # the final all_gather replicates over 'model'
+    )
+
+    def pad_e(w):
+        if E_pad == E:
+            return w
+        return jnp.concatenate(
+            [w, jnp.zeros((E_pad - E,) + w.shape[1:], w.dtype)], axis=0)
+
+    out = mapped(x, p["router"].astype(x.dtype),
+                 pad_e(p["w_gate"].astype(x.dtype)),
+                 pad_e(p["w_up"].astype(x.dtype)),
+                 pad_e(p["w_down"].astype(x.dtype)))
+    if cfg.n_shared:
+        out = out + dense(p["shared"], x, cfg)
+    return shard(out, "batch", "seq", "embed")
+
+
+def init(b: Builder, cfg: FfnCfg):
+    return init_moe(b, cfg) if cfg.moe else init_dense(b, cfg)
+
+
+def forward(p, x: jax.Array, cfg: FfnCfg) -> jax.Array:
+    if not cfg.moe:
+        return dense(p, x, cfg)
+    if _can_manual_ep(cfg, x):
+        return moe_manual_ep(p, x, cfg)
+    return moe(p, x, cfg)

@@ -1,0 +1,278 @@
+"""RecurrentGemma-style hybrid LM (Griffin): RG-LRU + local attention, 1:2.
+
+Layer pattern: (recurrent, recurrent, local-attention) repeated; each layer
+is temporal-mix + GeGLU MLP with pre-norms.  38 layers = 12 full periods +
+2 trailing recurrent layers (scanned periods keep the HLO small; the
+remainder runs unscanned).  Local attention uses a *ring buffer* KV cache of
+exactly ``window`` slots, so decode memory is O(window) — with the RG-LRU's
+O(1) state this is what makes the 500k-context decode cell runnable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, ffn, ssm
+from .common import (Builder, cast_tree, rms_norm, shard, stack_layers,
+                     stacked_spec)
+
+PERIOD = ("rec", "rec", "attn")
+
+
+def _acfg(cfg) -> attention.AttnCfg:
+    return attention.AttnCfg(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        window=cfg.window, kv_quant=cfg.kv_quant)
+
+
+def _rcfg(cfg) -> ssm.RGLRUCfg:
+    return ssm.RGLRUCfg(d_model=cfg.d_model, lru_width=cfg.lru_width or cfg.d_model)
+
+
+def _pattern(cfg):
+    n_periods = cfg.n_layers // len(PERIOD)
+    remainder = tuple(PERIOD[: cfg.n_layers % len(PERIOD)])
+    return n_periods, remainder
+
+
+def init(cfg, key: jax.Array):
+    b = Builder(key, dtype=cfg.param_dtype)
+
+    def mix_layer(kind: str):
+        mixer = (ssm.init_rglru(b, _rcfg(cfg)) if kind == "rec"
+                 else attention.init(b, _acfg(cfg)))
+        return {
+            "ln1": b.param((cfg.d_model,), ("embed",), init="zeros"),
+            "mixer": mixer,
+            "ln2": b.param((cfg.d_model,), ("embed",), init="zeros"),
+            "mlp": ffn.init_dense(b, ffn.FfnCfg(cfg.d_model, cfg.d_ff, act="gelu")),
+        }
+
+    n_periods, remainder = _pattern(cfg)
+    periods = [{k: mix_layer(k2) for k, k2 in zip("abc", PERIOD)} for _ in range(n_periods)]
+    vals = [Builder.split(p)[0] for p in periods]
+    spec = stacked_spec(Builder.split(periods[0])[1])
+
+    tree = {
+        "embed": b.param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                         scale=1.0 / cfg.d_model ** 0.5),
+        "ln_f": b.param((cfg.d_model,), ("embed",), init="zeros"),
+        "lm_head": b.param((cfg.d_model, cfg.vocab), ("embed_w", "vocab")),
+    }
+    params, specs = Builder.split(tree)
+    params["periods"] = stack_layers(vals)
+    specs["periods"] = spec
+    tail = [Builder.split(mix_layer(k)) for k in remainder]
+    params["tail"] = [t[0] for t in tail]
+    specs["tail"] = [t[1] for t in tail]
+    return params, specs
+
+
+def _mix_forward(cfg, kind: str, lp, x, positions, long_seq: bool):
+    lp = cast_tree(lp, cfg.compute_dtype)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        h = ssm.rglru(lp["mixer"], h, _rcfg(cfg))
+    elif long_seq:
+        h = attention.forward_chunked(lp["mixer"], h, _acfg(cfg), positions)
+    else:
+        h = attention.forward(lp["mixer"], h, _acfg(cfg), positions)
+    x = x + h
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + ffn.dense(lp["mlp"], h, ffn.FfnCfg(cfg.d_model, cfg.d_ff, act="gelu"))
+
+
+def hidden_states(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    x = params["embed"].astype(cfg.compute_dtype)[batch["tokens"]]
+    x = shard(x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype),
+              "batch", "seq", "embed")
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    long_seq = S > 2048
+
+    def period_step(carry, pp):
+        for key, kind in zip("abc", PERIOD):
+            carry = _mix_forward(cfg, kind, pp[key], carry, positions, long_seq)
+        return carry, None
+
+    if cfg.remat != "none":
+        period_step = jax.checkpoint(period_step, prevent_cse=False)
+    x, _ = jax.lax.scan(period_step, x, params["periods"])
+    _, remainder = _pattern(cfg)
+    for lp, kind in zip(params["tail"], remainder):
+        x = _mix_forward(cfg, kind, lp, x, positions, long_seq)
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    x = hidden_states(cfg, params, batch)
+    return (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+
+
+def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    x = hidden_states(cfg, params, batch)
+    logits = (x[:, :-1, :] @ params["lm_head"].astype(cfg.compute_dtype)
+              ).astype(jnp.float32)
+    logits = shard(logits, "batch", "seq", "vocab")
+    targets = batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# decode: ring-buffer local KV + RG-LRU state
+# ---------------------------------------------------------------------------
+
+def _ring_cache(cfg, batch: int):
+    acfg = _acfg(cfg)
+    w = cfg.window
+    return {"k": jnp.zeros((batch, w, acfg.n_kv, acfg.head_dim), cfg.compute_dtype),
+            "v": jnp.zeros((batch, w, acfg.n_kv, acfg.head_dim), cfg.compute_dtype)}
+
+
+def _attn_ring_decode(cfg, lp, x, lc, pos):
+    """One-token local attention over a ``window``-slot ring buffer."""
+    acfg = _acfg(cfg)
+    B = x.shape[0]
+    w = cfg.window
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = attention._project_qkv(lp, x, acfg, positions)
+    slot = pos % w
+    k = jax.lax.dynamic_update_slice_in_dim(lc["k"], k_new.astype(lc["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(lc["v"], v_new.astype(lc["v"].dtype), slot, axis=1)
+    # slot s holds absolute position: the largest t <= pos with t % w == s
+    slots = jnp.arange(w)
+    abs_pos = pos - ((pos - slots) % w)
+    valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - w)
+    out = attention.sdpa(q, k.astype(q.dtype), v.astype(q.dtype),
+                         valid[None, None, :], 1.0 / acfg.head_dim ** 0.5)
+    out = out.reshape(B, 1, acfg.n_heads * acfg.head_dim)
+    return out @ lp["wo"], {"k": k, "v": v}
+
+
+def _mix_decode(cfg, kind: str, lp, x, lc, pos):
+    lp = cast_tree(lp, cfg.compute_dtype)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        h, lc = ssm.rglru_decode(lp["mixer"], h, _rcfg(cfg), lc)
+    else:
+        h, lc = _attn_ring_decode(cfg, lp["mixer"], h, lc, pos)
+    x = x + h
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + ffn.dense(lp["mlp"], h, ffn.FfnCfg(cfg.d_model, cfg.d_ff, act="gelu"))
+    return x, lc
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """max_len only bounds the ring window (decode memory is O(window))."""
+    n_periods, remainder = _pattern(cfg)
+    rec = ssm.rglru_state(_rcfg(cfg), batch)
+    ring = _ring_cache(cfg, batch)
+    one = {"a": rec, "b": rec, "c": ring}
+    periods = jax.tree.map(lambda l: jnp.tile(l[None], (n_periods,) + (1,) * l.ndim), one)
+    tail = [dict(rec) if k == "rec" else dict(ring) for k in remainder]
+    return {"periods": periods, "tail": tail, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg, batch: int, max_len: int):
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+    def spec_of(l):
+        if l.ndim == 5:      # (P, B, W, kv, hd) ring
+            return ("layers", "batch", None, "kv_heads", None)
+        if l.ndim == 4:      # (P, B, W, kv, hd) tail ring / (P,B,K-1,width) conv
+            return (None, "batch", None, "mlp")
+        if l.ndim == 3:      # (P, B, width) rnn state
+            return ("layers", "batch", "mlp")
+        if l.ndim == 2:      # tail rnn (B, width)
+            return ("batch", "mlp")
+        return tuple(None for _ in l.shape)
+
+    return jax.tree.map(spec_of, cache)
+
+
+def prefill(cfg, params, batch: Dict[str, jax.Array], max_len: int):
+    """Full-sequence forward that also builds the decode state: RG-LRU final
+    states + ring KV buffers holding the last ``window`` positions."""
+    x = params["embed"].astype(cfg.compute_dtype)[batch["tokens"]]
+    x = shard(x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype),
+              "batch", "seq", "embed")
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    long_seq = S > 2048
+    w = cfg.window
+
+    def mix_prefill(kind, lp, carry):
+        lp_c = cast_tree(lp, cfg.compute_dtype)
+        h = rms_norm(carry, lp_c["ln1"], cfg.norm_eps)
+        if kind == "rec":
+            y, conv_s, rnn_s = ssm._rglru_core(lp_c["mixer"], h, _rcfg(cfg), None, None)
+            state = {"conv": conv_s.astype(jnp.bfloat16), "rnn": rnn_s}
+        else:
+            acfg = _acfg(cfg)
+            if long_seq:
+                y = attention.forward_chunked(lp_c["mixer"], h, acfg, positions)
+            else:
+                y = attention.forward(lp_c["mixer"], h, acfg, positions)
+            kv = attention.project_kv(lp_c["mixer"], h, acfg, positions)
+            # last `window` positions land at slot = pos % window (ring)
+            take = min(w, S)
+            ks = kv["k"][:, S - take:, :, :]
+            vs = kv["v"][:, S - take:, :, :]
+            slots = jnp.arange(S - take, S) % w
+            ring_k = jnp.zeros((B, w) + ks.shape[2:], cfg.compute_dtype
+                               ).at[:, slots].set(ks.astype(cfg.compute_dtype))
+            ring_v = jnp.zeros((B, w) + vs.shape[2:], cfg.compute_dtype
+                               ).at[:, slots].set(vs.astype(cfg.compute_dtype))
+            state = {"k": ring_k, "v": ring_v}
+        carry = carry + y
+        h = rms_norm(carry, lp_c["ln2"], cfg.norm_eps)
+        carry = carry + ffn.dense(lp_c["mlp"], h, ffn.FfnCfg(cfg.d_model, cfg.d_ff, act="gelu"))
+        return carry, state
+
+    def period_step(carry, pp):
+        states = {}
+        for key, kind in zip("abc", PERIOD):
+            carry, states[key] = mix_prefill(kind, pp[key], carry)
+        return carry, states
+
+    if cfg.remat != "none":
+        period_step = jax.checkpoint(period_step, prevent_cse=False)
+    x, period_states = jax.lax.scan(period_step, x, params["periods"])
+    _, remainder = _pattern(cfg)
+    tail_states = []
+    for lp, kind in zip(params["tail"], remainder):
+        x, st = mix_prefill(kind, lp, x)
+        tail_states.append(st)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x[:, -1:, :] @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, {"periods": period_states, "tail": tail_states,
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(cfg, params, tokens: jax.Array, cache):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    pos = cache["pos"]
+
+    def period_step(carry, scanned):
+        pp, pc = scanned
+        new_pc = {}
+        for key, kind in zip("abc", PERIOD):
+            carry, new_pc[key] = _mix_decode(cfg, kind, pp[key], carry, pc[key], pos)
+        return carry, new_pc
+
+    x, new_periods = jax.lax.scan(period_step, x, (params["periods"], cache["periods"]))
+    _, remainder = _pattern(cfg)
+    new_tail = []
+    for lp, lc, kind in zip(params["tail"], cache["tail"], remainder):
+        x, lc = _mix_decode(cfg, kind, lp, x, lc, pos)
+        new_tail.append(lc)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, {"periods": new_periods, "tail": new_tail, "pos": pos + 1}

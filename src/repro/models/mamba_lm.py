@@ -1,0 +1,135 @@
+"""Falcon-Mamba-style attention-free LM (mamba-1 blocks, no MLP).
+
+64 identical blocks: ``x += mamba(rms_norm(x))``; pure SSM (d_ff = 0 in the
+assignment spec).  Decode carries (conv, ssm) states — O(1) per token, so
+the 500k-context decode cell is runnable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm
+from .common import (Builder, cast_tree, rms_norm, shard, stack_layers,
+                     stacked_spec)
+
+
+def _mcfg(cfg) -> ssm.MambaCfg:
+    return ssm.MambaCfg(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                        d_conv=cfg.d_conv, expand=cfg.expand)
+
+
+def init(cfg, key: jax.Array):
+    b = Builder(key, dtype=cfg.param_dtype)
+    mcfg = _mcfg(cfg)
+
+    def one_layer():
+        return {"ln": b.param((cfg.d_model,), ("embed",), init="zeros"),
+                "mixer": ssm.init_mamba(b, mcfg)}
+
+    layers = [one_layer() for _ in range(cfg.n_layers)]
+    vals = [Builder.split(l)[0] for l in layers]
+    spec = stacked_spec(Builder.split(layers[0])[1])
+    tree = {
+        "embed": b.param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                         scale=1.0 / cfg.d_model ** 0.5),
+        "ln_f": b.param((cfg.d_model,), ("embed",), init="zeros"),
+        "lm_head": b.param((cfg.d_model, cfg.vocab), ("embed_w", "vocab")),
+    }
+    params, specs = Builder.split(tree)
+    params["layers"] = stack_layers(vals)
+    specs["layers"] = spec
+    return params, specs
+
+
+def _embed(cfg, params, tokens):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    return shard(x, "batch", "seq", "embed")
+
+
+def hidden_states(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    x = _embed(cfg, params, batch["tokens"])
+    mcfg = _mcfg(cfg)
+
+    def step(carry, lp):
+        lp = cast_tree(lp, cfg.compute_dtype)
+        h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+        return carry + ssm.mamba(lp["mixer"], h, mcfg), None
+
+    if cfg.remat != "none":
+        step = jax.checkpoint(step, prevent_cse=False)
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    x = hidden_states(cfg, params, batch)
+    return (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+
+
+def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    x = hidden_states(cfg, params, batch)
+    logits = (x[:, :-1, :] @ params["lm_head"].astype(cfg.compute_dtype)
+              ).astype(jnp.float32)
+    logits = shard(logits, "batch", "seq", "vocab")
+    targets = batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """State cache is O(1) in context length — max_len unused by design."""
+    one = ssm.mamba_state(_mcfg(cfg), batch)
+    layers = jax.tree.map(lambda l: jnp.tile(l[None], (cfg.n_layers,) + (1,) * l.ndim), one)
+    return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg, batch: int, max_len: int):
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return jax.tree.map(
+        lambda l: ("layers", "batch", "mlp") if l.ndim == 3
+        else (("layers", "batch", None, "mlp") if l.ndim == 4 else
+              tuple(None for _ in l.shape)),
+        cache)
+
+
+def decode_step(cfg, params, tokens: jax.Array, cache):
+    x = _embed(cfg, params, tokens)
+    mcfg = _mcfg(cfg)
+
+    def step(carry, scanned):
+        lp, lc = scanned
+        lp = cast_tree(lp, cfg.compute_dtype)
+        h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+        h, lc = ssm.mamba_decode(lp["mixer"], h, mcfg, lc)
+        return carry + h, lc
+
+    x, new_layers = jax.lax.scan(step, x, (params["layers"], cache["layers"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, {"layers": new_layers, "pos": cache["pos"] + 1}
+
+
+def prefill(cfg, params, batch: Dict[str, jax.Array], max_len: int):
+    """Run the sequence through, carrying final states into the cache."""
+    x = _embed(cfg, params, batch["tokens"])
+    mcfg = _mcfg(cfg)
+    B, S, _ = x.shape
+
+    def step(carry, lp):
+        lp = cast_tree(lp, cfg.compute_dtype)
+        h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+        xz = h @ lp["mixer"]["in_proj"]
+        y, conv_s, ssm_s = ssm._mamba_core(lp["mixer"], xz, mcfg, None, None)
+        return carry + y, {"conv": conv_s.astype(jnp.bfloat16), "ssm": ssm_s}
+
+    if cfg.remat != "none":
+        step = jax.checkpoint(step, prevent_cse=False)
+    x, states = jax.lax.scan(step, x, params["layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x[:, -1:, :] @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, {"layers": states, "pos": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,237 @@
+"""State-space blocks: Mamba-1 selective scan and RG-LRU (RecurrentGemma).
+
+Both recurrences are evaluated with a *chunked associative scan*: the
+sequence is split into chunks; within a chunk the linear recurrence runs as
+``jax.lax.associative_scan`` (parallel, depth log C), and a ``lax.scan``
+carries the state across chunks.  This bounds the scan workspace to one
+chunk (VMEM-friendly) while keeping the sequential depth at S/C — the
+standard TPU adaptation of CUDA selective-scan kernels (DESIGN.md §3).
+
+Decode paths carry (conv_state, ssm_state) explicitly: O(1) per token, which
+is what makes the 500k-context decode shape runnable for these families.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Builder, shard
+
+CHUNK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, self.d_model // 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUCfg:
+    d_model: int
+    lru_width: int
+    d_conv: int = 4
+    c: float = 8.0  # RG-LRU forget-rate temperature
+
+
+# ---------------------------------------------------------------------------
+# shared linear-recurrence machinery:  h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                        chunk: int = CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """Scan h_t = a_t h_{t-1} + b_t along axis 1 (seq).  Returns (h_all, h_last).
+
+    a, b: (B, S, ...); h0: (B, ...).  S must be a chunk multiple (callers pad).
+    """
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"seq {S} not a multiple of chunk {chunk}")
+    n_chunks = S // chunk
+    a_c = a.reshape((B, n_chunks, chunk) + a.shape[2:])
+    b_c = b.reshape((B, n_chunks, chunk) + b.shape[2:])
+
+    def step(h, ab):
+        a_i, b_i = ab  # (B, chunk, ...)
+        acc_a, acc_b = jax.lax.associative_scan(_assoc_combine, (a_i, b_i), axis=1)
+        h_all = acc_a * h[:, None] + acc_b
+        return h_all[:, -1], h_all
+
+    # scan over chunks (axis 1): move chunk axis to front for lax.scan
+    a_s = jnp.moveaxis(a_c, 1, 0)
+    b_s = jnp.moveaxis(b_c, 1, 0)
+    h_last, h_chunks = jax.lax.scan(step, h0, (a_s, b_s))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape((B, S) + a.shape[2:])
+    return h_all, h_last
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv.  x: (B, S, C), w: (K, C).  Returns (y, new_state)
+    where state carries the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return y, xp[:, -(K - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def init_mamba(b: Builder, cfg: MambaCfg):
+    d, di, st, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    return {
+        "in_proj": b.param((d, 2 * di), ("embed_w", "mlp")),
+        "conv_w": b.param((cfg.d_conv, di), ("conv", "mlp"), scale=0.5),
+        "x_proj": b.param((di, r + 2 * st), ("mlp", "lora")),
+        "dt_proj": b.param((r, di), ("lora", "mlp")),
+        "dt_bias": b.param((di,), ("mlp",), init="zeros"),
+        "A_log": b.param((di, st), ("mlp", "state"), init="ones"),
+        "D": b.param((di,), ("mlp",), init="ones"),
+        "out_proj": b.param((di, d), ("mlp", "embed_w")),
+    }
+
+
+def _mamba_core(p, xz: jax.Array, cfg: MambaCfg, conv_state, ssm_state):
+    """Shared train/decode body.  xz: (B, S, 2*di).
+
+    The (B, S, di, st) transition tensors are never materialized at full
+    sequence length: each chunk computes its own a/b terms, scans them, and
+    immediately contracts against C — the TPU analogue of the fused CUDA
+    selective-scan (workspace = one chunk in VMEM/HBM).
+    """
+    di, st = cfg.d_inner, cfg.d_state
+    B, S = xz.shape[0], xz.shape[1]
+    x, z = xz[..., :di], xz[..., di:]
+    x, new_conv = causal_conv1d(x, p["conv_w"], conv_state)
+    x = jax.nn.silu(x)
+    x = shard(x, "batch", "seq", "mlp")
+
+    proj = x @ p["x_proj"]                                  # (B,S,r+2st)
+    dt = jax.nn.softplus(proj[..., :cfg.dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    Bm = proj[..., cfg.dt_rank:cfg.dt_rank + st]            # (B,S,st)
+    Cm = proj[..., cfg.dt_rank + st:]                       # (B,S,st)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di,st)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, di, st), jnp.float32)
+    chunk = min(CHUNK, S)
+    if S % chunk:
+        raise ValueError(f"seq {S} not a multiple of chunk {chunk}")
+    n_chunks = S // chunk
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((B, n_chunks, chunk) + t.shape[2:]), 1, 0)
+
+    def step(h, inputs):
+        dt_i, x_i, b_i, c_i = inputs                        # (B, chunk, ...)
+        a_i = jnp.exp(dt_i[..., None].astype(jnp.float32) * A[None, None])
+        bu_i = (dt_i * x_i)[..., None].astype(jnp.float32) * b_i[:, :, None, :].astype(jnp.float32)
+        acc_a, acc_b = jax.lax.associative_scan(_assoc_combine, (a_i, bu_i), axis=1)
+        h_all = acc_a * h[:, None] + acc_b                  # (B, chunk, di, st)
+        y_i = jnp.einsum("bsdn,bsn->bsd", h_all, c_i.astype(jnp.float32))
+        return h_all[:, -1], y_i
+
+    h_last, y_chunks = jax.lax.scan(
+        step, ssm_state, (to_chunks(dt), to_chunks(x), to_chunks(Bm), to_chunks(Cm)))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B, S, di)
+    y = (y.astype(x.dtype) + x * p["D"]) * jax.nn.silu(z)
+    return y @ p["out_proj"], new_conv, h_last
+
+
+def mamba(p, x: jax.Array, cfg: MambaCfg) -> jax.Array:
+    """Training / prefill forward.  x: (B, S, D)."""
+    xz = x @ p["in_proj"]
+    y, _, _ = _mamba_core(p, xz, cfg, None, None)
+    return shard(y, "batch", "seq", "embed")
+
+
+def mamba_decode(p, x: jax.Array, cfg: MambaCfg, state: Dict[str, Any]):
+    """One-token step.  x: (B, 1, D); state: {'conv': (B,K-1,di), 'ssm': (B,di,st)}."""
+    xz = x @ p["in_proj"]
+    y, new_conv, new_ssm = _mamba_core(p, xz, cfg, state["conv"], state["ssm"])
+    return y, {"conv": new_conv, "ssm": new_ssm}
+
+
+def mamba_state(cfg: MambaCfg, batch: int) -> Dict[str, Any]:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+def init_rglru(b: Builder, cfg: RGLRUCfg):
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "in_x": b.param((d, w), ("embed_w", "mlp")),
+        "in_gate": b.param((d, w), ("embed_w", "mlp")),
+        "conv_w": b.param((cfg.d_conv, w), ("conv", "mlp"), scale=0.5),
+        "gate_a": b.param((w, w), ("mlp", "mlp"), scale=0.01),
+        "gate_x": b.param((w, w), ("mlp", "mlp"), scale=0.01),
+        "lambda_p": b.param((w,), ("mlp",), init="ones"),
+        "out": b.param((w, d), ("mlp", "embed_w")),
+    }
+
+
+def _rglru_core(p, x: jax.Array, cfg: RGLRUCfg, conv_state, rnn_state):
+    u = x @ p["in_x"]
+    gate_branch = jax.nn.gelu(x @ p["in_gate"], approximate=True)
+    u, new_conv = causal_conv1d(u, p["conv_w"], conv_state)
+    u = shard(u, "batch", "seq", "mlp")
+
+    r = jax.nn.sigmoid(u @ p["gate_a"])                 # recurrence gate
+    i = jax.nn.sigmoid(u @ p["gate_x"])                 # input gate
+    log_a = -cfg.c * jax.nn.softplus(p["lambda_p"]).astype(jnp.float32) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i * u).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * gated
+    if rnn_state is None:
+        rnn_state = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+    h_all, h_last = chunked_linear_scan(a, b, rnn_state)
+    y = (h_all.astype(x.dtype) * gate_branch) @ p["out"]
+    return y, new_conv, h_last
+
+
+def rglru(p, x: jax.Array, cfg: RGLRUCfg) -> jax.Array:
+    y, _, _ = _rglru_core(p, x, cfg, None, None)
+    return shard(y, "batch", "seq", "embed")
+
+
+def rglru_decode(p, x: jax.Array, cfg: RGLRUCfg, state: Dict[str, Any]):
+    y, new_conv, new_rnn = _rglru_core(p, x, cfg, state["conv"], state["rnn"])
+    return y, {"conv": new_conv, "rnn": new_rnn}
+
+
+def rglru_state(cfg: RGLRUCfg, batch: int) -> Dict[str, Any]:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.lru_width), jnp.bfloat16),
+        "rnn": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

@@ -1,0 +1,268 @@
+"""Config-driven decoder-only transformer LM.
+
+One assembly covers seven assigned architectures: qwen3-4b (GQA+qk-norm),
+granite-3-2b, smollm-360m, minitron-4b (dense GQA), granite-moe-3b (routed
+MoE), deepseek-v3-671b (MLA + first-k-dense + shared-expert MoE), and the
+paligemma-3b decoder (MQA + prefix embeds).  Layers are *grouped* by kind
+and each group runs under ``jax.lax.scan`` over stacked params (HLO size
+O(groups), not O(layers)), with configurable remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, ffn
+from .common import (Builder, cast_tree, rms_norm, shard, stack_layers,
+                     stacked_spec)
+
+LONG_PREFILL = 2048  # query-chunk attention above this (bounds logits VMEM/HBM)
+
+
+def _attn_cfg(cfg) -> attention.AttnCfg:
+    return attention.AttnCfg(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        mla=cfg.mla, q_lora=cfg.q_lora, kv_lora=cfg.kv_lora,
+        qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_dim=cfg.v_head,
+        kv_quant=cfg.kv_quant,
+    )
+
+
+def _ffn_cfg(cfg, kind: str) -> ffn.FfnCfg:
+    if kind == "moe":
+        return ffn.FfnCfg(
+            d_model=cfg.d_model, d_ff=cfg.moe_d_ff or cfg.d_ff, act=cfg.act,
+            moe=True, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            n_shared=cfg.n_shared, shared_d_ff=(cfg.moe_d_ff or cfg.d_ff) * max(cfg.n_shared, 1),
+            router_softmax=cfg.router_softmax, capacity_factor=cfg.capacity_factor,
+        )
+    return ffn.FfnCfg(d_model=cfg.d_model, d_ff=cfg.d_ff, act=cfg.act)
+
+
+def layer_groups(cfg) -> List[Tuple[int, str]]:
+    """[(n_layers, 'dense'|'moe')] — deepseek-style first-k-dense supported."""
+    if cfg.moe:
+        k = cfg.first_k_dense
+        groups = []
+        if k:
+            groups.append((k, "dense"))
+        groups.append((cfg.n_layers - k, "moe"))
+        return groups
+    return [(cfg.n_layers, "dense")]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(cfg, key: jax.Array):
+    """Returns (params, logical-spec tree)."""
+    b = Builder(key, dtype=cfg.param_dtype)
+    acfg = _attn_cfg(cfg)
+
+    def one_layer(kind: str):
+        return {
+            "ln1": b.param((cfg.d_model,), ("embed",), init="zeros"),
+            "attn": attention.init(b, acfg),
+            "ln2": b.param((cfg.d_model,), ("embed",), init="zeros"),
+            "ffn": ffn.init(b, _ffn_cfg(cfg, kind)),
+        }
+
+    groups_p, groups_s = [], []
+    for count, kind in layer_groups(cfg):
+        layers = [one_layer(kind) for _ in range(count)]
+        vals = [Builder.split(l)[0] for l in layers]
+        spec = Builder.split(layers[0])[1]
+        groups_p.append(stack_layers(vals))
+        groups_s.append(stacked_spec(spec))
+
+    tree = {
+        "embed": b.param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                         scale=1.0 / cfg.d_model ** 0.5),
+        "ln_f": b.param((cfg.d_model,), ("embed",), init="zeros"),
+        "lm_head": b.param((cfg.d_model, cfg.vocab), ("embed_w", "vocab")),
+    }
+    params, specs = Builder.split(tree)
+    params["groups"] = groups_p
+    specs["groups"] = groups_s
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_forward(cfg, kind: str, lp, x, positions, long_seq: bool):
+    lp = cast_tree(lp, cfg.compute_dtype)
+    acfg = _attn_cfg(cfg)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if long_seq:
+        h = attention.forward_chunked(lp["attn"], h, acfg, positions)
+    else:
+        h = attention.forward(lp["attn"], h, acfg, positions)
+    x = x + h
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + ffn.forward(lp["ffn"], h, _ffn_cfg(cfg, kind))
+    return x
+
+
+def _run_groups(cfg, params, x, positions, *, long_seq: bool):
+    for (count, kind), gp in zip(layer_groups(cfg), params["groups"]):
+        if cfg.fsdp_bf16_gather:
+            # cast the sharded master weights BEFORE the scan: the FSDP
+            # all-gather then moves bf16 (2x fewer collective bytes); the
+            # f32 master stays the optimizer's copy (autodiff casts back)
+            gp = cast_tree(gp, cfg.compute_dtype)
+        body = functools.partial(_layer_forward, cfg, kind)
+
+        def step(carry, lp):
+            return body(lp, carry, positions, long_seq), None
+
+        if cfg.remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            step = jax.checkpoint(step, policy=policy, prevent_cse=False)
+        x, _ = jax.lax.scan(step, x, gp)
+    return x
+
+
+def embed_tokens(cfg, params, tokens: jax.Array) -> jax.Array:
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def hidden_states(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Token (+ optional prefix) embedding -> final hidden states."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.prefix_tokens:
+        # VLM stub frontend: precomputed patch embeddings (assignment spec)
+        prefix = batch["prefix_embeds"].astype(cfg.compute_dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _run_groups(cfg, params, x, positions, long_seq=S > LONG_PREFILL)
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def logits_fn(cfg, params, x: jax.Array) -> jax.Array:
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Logits at every (text) position — decode-parity tests/serving."""
+    x = hidden_states(cfg, params, batch)
+    if cfg.prefix_tokens:
+        x = x[:, cfg.prefix_tokens:, :]
+    return logits_fn(cfg, params, x).astype(jnp.float32)
+
+
+def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Next-token cross entropy (mean over tokens)."""
+    x = hidden_states(cfg, params, batch)
+    if cfg.prefix_tokens:
+        x = x[:, cfg.prefix_tokens:, :]  # loss only on text positions
+    logits = logits_fn(cfg, params, x[:, :-1, :]).astype(jnp.float32)
+    targets = batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Per-group stacked KV caches (+ scalar position)."""
+    acfg = _attn_cfg(cfg)
+    caches = []
+    for count, _ in layer_groups(cfg):
+        one = attention.init_cache(acfg, batch, max_len, dtype=cfg.compute_dtype)
+        caches.append(jax.tree.map(
+            lambda l: jnp.tile(l[None], (count,) + (1,) * l.ndim), one))
+    return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg, batch: int, max_len: int):
+    """Logical sharding specs matching init_cache output."""
+    def spec_of(name, leaf):
+        if leaf.ndim >= 4:   # (L, B, S, kv, hd)
+            return ("layers", "batch", "kv_seq", "kv_heads", None)
+        if leaf.ndim == 3:   # (L, B, S) scales or latent w/o head dim
+            return ("layers", "batch", "kv_seq")
+        return tuple(None for _ in leaf.shape)
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return jax.tree.map(lambda l: spec_of("", l), cache)
+
+
+def decode_step(cfg, params, tokens: jax.Array, cache):
+    """One decode step for the whole stack.  tokens: (B, 1) int32."""
+    acfg = _attn_cfg(cfg)
+    x = embed_tokens(cfg, params, tokens)
+    pos = cache["pos"]
+    new_layers = []
+    for (count, kind), gp, gc in zip(layer_groups(cfg), params["groups"], cache["layers"]):
+
+        def step(carry, scanned):
+            lp, lc = scanned
+            lp = cast_tree(lp, cfg.compute_dtype)
+            h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            h, lc = attention.decode_step(lp["attn"], h, acfg, lc, pos)
+            carry = carry + h
+            h = rms_norm(carry, lp["ln2"], cfg.norm_eps)
+            carry = carry + ffn.forward(lp["ffn"], h, _ffn_cfg(cfg, kind))
+            return carry, lc
+
+        x, new_gc = jax.lax.scan(step, x, (gp, gc))
+        new_layers.append(new_gc)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x)
+    return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+def prefill(cfg, params, batch: Dict[str, jax.Array], max_len: int):
+    """Full-sequence forward that also builds the decode cache.
+
+    Returns (last-position logits, cache).  KV entries are produced by a
+    second pass over the hidden states (prefill is compute-dominated by the
+    main pass; the extra projections are O(S·D·kv·hd)).
+    """
+    acfg = _attn_cfg(cfg)
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.prefix_tokens:
+        prefix = batch["prefix_embeds"].astype(cfg.compute_dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    long_seq = S > LONG_PREFILL
+
+    caches = []
+    for (count, kind), gp in zip(layer_groups(cfg), params["groups"]):
+
+        def step(carry, lp):
+            lp = cast_tree(lp, cfg.compute_dtype)
+            kv_in = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            kv = attention.project_kv(lp["attn"], kv_in, acfg, positions)
+            out = _layer_forward(cfg, kind, lp, carry, positions, long_seq)
+            return out, kv
+
+        if cfg.remat != "none":
+            step = jax.checkpoint(step, prevent_cse=False)
+        x, kv_stack = jax.lax.scan(step, x, gp)   # kv leaves: (L, B, S, ...)
+        pad = max_len - S
+        kv_stack = jax.tree.map(
+            lambda l: jnp.pad(l, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (l.ndim - 3)),
+            kv_stack)
+        caches.append(kv_stack)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x[:, -1:, :])
+    return logits, {"layers": caches, "pos": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,183 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, n_frames, d_model) — the backbone is the
+deliverable.  Encoder: bidirectional self-attention; decoder: causal
+self-attention + cross-attention.  Sinusoidal positions (whisper uses
+absolute positions, not RoPE).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, ffn
+from .common import (Builder, cast_tree, rms_norm, shard,
+                     sinusoidal_positions, stack_layers, stacked_spec)
+
+
+def _acfg(cfg) -> attention.AttnCfg:
+    return attention.AttnCfg(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, use_rope=False, kv_quant=cfg.kv_quant)
+
+
+def init(cfg, key: jax.Array):
+    b = Builder(key, dtype=cfg.param_dtype)
+    acfg = _acfg(cfg)
+
+    def enc_layer():
+        return {"ln1": b.param((cfg.d_model,), ("embed",), init="zeros"),
+                "attn": attention.init(b, acfg),
+                "ln2": b.param((cfg.d_model,), ("embed",), init="zeros"),
+                "mlp": ffn.init_plain(b, cfg.d_model, cfg.d_ff)}
+
+    def dec_layer():
+        return {"ln1": b.param((cfg.d_model,), ("embed",), init="zeros"),
+                "attn": attention.init(b, acfg),
+                "ln_x": b.param((cfg.d_model,), ("embed",), init="zeros"),
+                "xattn": attention.init(b, acfg),
+                "ln2": b.param((cfg.d_model,), ("embed",), init="zeros"),
+                "mlp": ffn.init_plain(b, cfg.d_model, cfg.d_ff)}
+
+    enc = [enc_layer() for _ in range(cfg.enc_layers)]
+    dec = [dec_layer() for _ in range(cfg.n_layers)]
+    tree = {
+        "embed": b.param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                         scale=1.0 / cfg.d_model ** 0.5),
+        "ln_enc": b.param((cfg.d_model,), ("embed",), init="zeros"),
+        "ln_f": b.param((cfg.d_model,), ("embed",), init="zeros"),
+        "lm_head": b.param((cfg.d_model, cfg.vocab), ("embed_w", "vocab")),
+    }
+    params, specs = Builder.split(tree)
+    params["enc"] = stack_layers([Builder.split(l)[0] for l in enc])
+    specs["enc"] = stacked_spec(Builder.split(enc[0])[1])
+    params["dec"] = stack_layers([Builder.split(l)[0] for l in dec])
+    specs["dec"] = stacked_spec(Builder.split(dec[0])[1])
+    return params, specs
+
+
+def encode(cfg, params, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d_model) stub embeddings -> encoder output."""
+    acfg = _acfg(cfg)
+    B, F, _ = frames.shape
+    x = frames.astype(cfg.compute_dtype) + sinusoidal_positions(F, cfg.d_model
+                                                                ).astype(cfg.compute_dtype)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+    bidir = attention.AttnCfg(**{**acfg.__dict__, "causal": False})
+
+    def step(carry, lp):
+        lp = cast_tree(lp, cfg.compute_dtype)
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        carry = carry + attention.forward(lp["attn"], h, bidir, positions)
+        h = rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        return carry + ffn.plain(lp["mlp"], h), None
+
+    if cfg.remat != "none":
+        step = jax.checkpoint(step, prevent_cse=False)
+    x, _ = jax.lax.scan(step, x, params["enc"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_embed(cfg, params, tokens, pos0=0):
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    pe = sinusoidal_positions(pos0 + S, cfg.d_model)[pos0:].astype(cfg.compute_dtype)
+    return shard(x + pe, "batch", "seq", "embed")
+
+
+def decode_train(cfg, params, tokens: jax.Array, enc_out: jax.Array) -> jax.Array:
+    acfg = _acfg(cfg)
+    B, S = tokens.shape
+    x = _dec_embed(cfg, params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def step(carry, lp):
+        lp = cast_tree(lp, cfg.compute_dtype)
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        if S > 2048:
+            carry = carry + attention.forward_chunked(lp["attn"], h, acfg, positions)
+        else:
+            carry = carry + attention.forward(lp["attn"], h, acfg, positions)
+        h = rms_norm(carry, lp["ln_x"], cfg.norm_eps)
+        carry = carry + attention.cross_forward(lp["xattn"], h, enc_out, acfg)
+        h = rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        return carry + ffn.plain(lp["mlp"], h), None
+
+    if cfg.remat != "none":
+        step = jax.checkpoint(step, prevent_cse=False)
+    x, _ = jax.lax.scan(step, x, params["dec"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    x = decode_train(cfg, params, batch["tokens"], enc_out)
+    return (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+
+
+def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    x = decode_train(cfg, params, batch["tokens"], enc_out)
+    logits = (x[:, :-1, :] @ params["lm_head"].astype(cfg.compute_dtype)
+              ).astype(jnp.float32)
+    logits = shard(logits, "batch", "seq", "vocab")
+    targets = batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving: decoder self cache + precomputed cross KV
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    acfg = _acfg(cfg)
+    self_c = attention.init_cache(acfg, batch, max_len, dtype=cfg.compute_dtype)
+    cross = {"k": jnp.zeros((batch, cfg.enc_frames, cfg.n_kv, cfg.head_dim), cfg.compute_dtype),
+             "v": jnp.zeros((batch, cfg.enc_frames, cfg.n_kv, cfg.head_dim), cfg.compute_dtype)}
+    one = {"self": self_c, "cross": cross}
+    layers = jax.tree.map(lambda l: jnp.tile(l[None], (cfg.n_layers,) + (1,) * l.ndim), one)
+    return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg, batch: int, max_len: int):
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return jax.tree.map(
+        lambda l: ("layers", "batch", "kv_seq", "kv_heads", None) if l.ndim == 5
+        else tuple(None for _ in l.shape), cache)
+
+
+def decode_step(cfg, params, tokens: jax.Array, cache):
+    acfg = _acfg(cfg)
+    pos = cache["pos"]
+    max_len = cache["layers"]["self"]["k"].shape[2]
+    pe = sinusoidal_positions(max_len, cfg.d_model)
+    x = (params["embed"].astype(cfg.compute_dtype)[tokens]
+         + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None].astype(cfg.compute_dtype))
+
+    def step(carry, scanned):
+        lp, lc = scanned
+        lp = cast_tree(lp, cfg.compute_dtype)
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        h, new_self = attention.decode_step(lp["attn"], h, acfg, lc["self"], pos)
+        carry = carry + h
+        h = rms_norm(carry, lp["ln_x"], cfg.norm_eps)
+        q = (h @ lp["xattn"]["wq"]).reshape(h.shape[0], 1, cfg.n_heads, cfg.head_dim)
+        ctx = attention.sdpa(q, lc["cross"]["k"].astype(h.dtype),
+                             lc["cross"]["v"].astype(h.dtype), None,
+                             1.0 / cfg.head_dim ** 0.5)
+        ctx = ctx.reshape(h.shape[0], 1, cfg.n_heads * cfg.head_dim)
+        carry = carry + ctx @ lp["xattn"]["wo"]
+        h = rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        carry = carry + ffn.plain(lp["mlp"], h)
+        return carry, {"self": new_self, "cross": lc["cross"]}
+
+    x, new_layers = jax.lax.scan(step, x, (params["dec"], cache["layers"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, {"layers": new_layers, "pos": pos + 1}

@@ -1,0 +1,117 @@
+"""Model factory: ArchConfig -> uniform Model facade.
+
+Every architecture exposes the same five entry points, so the launcher,
+dry-run, trainer and server are architecture-agnostic:
+
+    init(key) -> (params, logical_specs)
+    loss_fn(params, batch) -> scalar            (train_* shapes)
+    prefill(params, batch, max_len) -> (logits, cache)   (prefill_* shapes)
+    decode_step(params, tokens, cache) -> (logits, cache) (decode_* shapes)
+    init_cache(batch, max_len) / cache_specs(batch, max_len)
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input of
+an (arch × shape) cell — the dry-run lowers against these (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from . import griffin, mamba_lm, transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[[Any, Dict[str, jax.Array]], jax.Array]
+    full_logits: Callable[[Any, Dict[str, jax.Array]], jax.Array]
+    decode_step: Callable[[Any, jax.Array, Any], Any]
+    prefill: Callable[[Any, Dict[str, jax.Array], int], Any]
+    init_cache: Callable[[int, int], Any]
+    cache_specs: Callable[[int, int], Any]
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba_lm,
+    "hybrid": griffin,
+    "audio": whisper,
+}
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    mod = _FAMILY_MODULES[cfg.family]
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(mod.init, cfg),
+            loss_fn=functools.partial(mod.loss_fn, cfg),
+            full_logits=functools.partial(mod.full_logits, cfg),
+            decode_step=functools.partial(mod.decode_step, cfg),
+            prefill=functools.partial(_whisper_prefill, cfg),
+            init_cache=functools.partial(mod.init_cache, cfg),
+            cache_specs=functools.partial(mod.cache_specs, cfg),
+        )
+    prefill = getattr(mod, "prefill", None)
+    return Model(
+        cfg=cfg,
+        init=functools.partial(mod.init, cfg),
+        loss_fn=functools.partial(mod.loss_fn, cfg),
+        full_logits=functools.partial(mod.full_logits, cfg),
+        decode_step=functools.partial(mod.decode_step, cfg),
+        prefill=functools.partial(prefill, cfg) if prefill else None,
+        init_cache=functools.partial(mod.init_cache, cfg),
+        cache_specs=functools.partial(mod.cache_specs, cfg),
+    )
+
+
+def _whisper_prefill(cfg, params, batch, max_len):
+    """Whisper prefill: encode frames, then run the decoder prefix through
+    decode_train and build the cross cache from encoder output."""
+    enc_out = whisper.encode(cfg, params, batch["frames"])
+    x = whisper.decode_train(cfg, params, batch["tokens"], enc_out)
+    logits = x[:, -1:, :] @ params["lm_head"].astype(cfg.compute_dtype)
+    cache = whisper.init_cache(cfg, batch["tokens"].shape[0], max_len)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    B = shape.global_batch
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return specs
+    S = shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.prefix_tokens, cfg.d_model), jnp.float32)
+    return specs
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    """Concrete random batch matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sds in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sds.shape, 0, cfg.vocab, sds.dtype)
+        else:
+            out[name] = jax.random.normal(sub, sds.shape, sds.dtype)
+    return out

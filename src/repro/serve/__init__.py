@@ -1,0 +1,2 @@
+"""Batched serving engine."""
+from .engine import Engine, Request

@@ -1,0 +1,158 @@
+"""Fault-tolerant sharded checkpointing with HSZ integration.
+
+Layout (one directory per step, atomic rename commit):
+
+    ckpt_dir/
+      step_000123.tmp/ -> step_000123/
+        manifest.json        # tree structure, shapes, dtypes, stats, mode
+        arrays/<idx>.bin     # zstd(raw) | HSZ stream per leaf
+
+Features mapped to the 1000-node requirements:
+
+* **atomic commit + retention** — a crash mid-write never corrupts the
+  latest checkpoint; keep-last-k pruning;
+* **async save** — serialization runs on a background thread (training
+  continues; ``wait()`` joins before the next save);
+* **elastic restore** — leaves are loaded host-side and ``device_put`` with
+  the *current* mesh sharding: restart on a different pod count/mesh shape
+  re-shards transparently;
+* **HSZ mode** (the paper): float leaves stored as error-bounded HSZ
+  streams; the manifest records stage-① homomorphic validation stats
+  (mean/std from metadata) so restore can verify integrity *without
+  decompression* — the paper's regional-statistics use case at the
+  checkpoint layer.  Lossless mode (zstd) is the default for bit-exact
+  resume.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+import zstandard
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Stage, encode as hsz_encode, hszp, homomorphic
+
+_FLOAT_KINDS = ("f",)
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+             for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, mode: str = "lossless",
+         rel_eb: float = 1e-4, keep: int = 3, blocking: bool = True,
+         extra_meta: Optional[Dict] = None) -> threading.Thread | None:
+    """Serialize ``tree`` to ``ckpt_dir/step_{step:08d}`` atomically."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    # pull to host before handing to the writer thread
+    host_leaves = [np.asarray(l) for l in leaves]
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(os.path.join(tmp, "arrays"), exist_ok=True)
+        manifest = {"step": step, "mode": mode, "rel_eb": rel_eb,
+                    "time": time.time(), "leaves": [],
+                    "extra": extra_meta or {}}
+        cctx = zstandard.ZstdCompressor(level=3)
+        for i, (path, arr) in enumerate(zip(paths, host_leaves)):
+            entry = {"path": path, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype), "file": f"arrays/{i}.bin"}
+            use_hsz = (mode == "hsz" and arr.dtype.kind in _FLOAT_KINDS
+                       and arr.size >= 1024)
+            if use_hsz:
+                c = hszp.compress(jnp.asarray(arr, jnp.float32), rel_eb=rel_eb)
+                blob = hsz_encode.serialize(c)
+                # stage-① homomorphic validation stats (no decompression at load)
+                entry["codec"] = "hsz"
+                entry["stats"] = {
+                    "mean": float(homomorphic.mean(c, Stage.P)),
+                    "std": float(homomorphic.std(c, Stage.P)),
+                }
+                entry["ratio"] = float(arr.nbytes * 8) / float(hszp.serialized_bits(c))
+            else:
+                blob = cctx.compress(arr.tobytes())
+                entry["codec"] = "zstd"
+            with open(os.path.join(tmp, entry["file"]), "wb") as f:
+                f.write(blob)
+            manifest["leaves"].append(entry)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        _prune(ckpt_dir, keep)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree: Any, *,
+            shardings: Any = None, verify: bool = True) -> Any:
+    """Load into the structure of ``target_tree`` (elastic re-shard via
+    ``shardings`` — a matching tree of NamedSharding or None)."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, leaves, treedef = _flatten_with_paths(target_tree)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    dctx = zstandard.ZstdDecompressor()
+    out = []
+    for path, ref, shd in zip(paths, leaves, shard_leaves):
+        entry = by_path[path]
+        with open(os.path.join(final, entry["file"]), "rb") as f:
+            blob = f.read()
+        if entry["codec"] == "hsz":
+            c = hsz_encode.deserialize(blob)
+            if verify and "stats" in entry:
+                mu = float(homomorphic.mean(c, Stage.M)) if c.scheme.is_blockmean \
+                    else float(homomorphic.mean(c, Stage.P))
+                ref_mu = entry["stats"]["mean"]
+                eps = float(np.asarray(c.eps))
+                if abs(mu - ref_mu) > max(2 * eps, 1e-6 * max(abs(ref_mu), 1)):
+                    raise ValueError(
+                        f"homomorphic integrity check failed for {path}: "
+                        f"mean {mu} vs manifest {ref_mu}")
+            arr = np.asarray(hszp.decompress(c, Stage.F)).reshape(entry["shape"])
+            arr = arr.astype(entry["dtype"])
+        else:
+            arr = np.frombuffer(dctx.decompress(blob), dtype=entry["dtype"]
+                                ).reshape(entry["shape"])
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch for {path}")
+        arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
+        out.append(jax.device_put(arr, shd) if shd is not None else jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

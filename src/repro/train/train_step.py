@@ -1,0 +1,126 @@
+"""Train step construction: GSPMD baseline and homomorphic-compressed DP.
+
+Two gradient-synchronization modes:
+
+* ``gspmd`` (baseline): one ``jax.jit`` over the global batch; the data-
+  parallel gradient all-reduce is implicit (f32 wire) — this is the
+  paper-faithful baseline recorded in EXPERIMENTS.md §Perf.
+
+* ``hom`` (the paper's technique on the wire): a *partial-manual*
+  ``shard_map`` over the DP axes computes unreduced per-shard gradients
+  (TP stays GSPMD-auto on the ``model`` axis), then
+  ``comm.compressed_psum_tree`` performs the all-reduce in the quantized
+  integer domain (int16 wire, shared-eps, error feedback).  The collective
+  bytes drop ~2x — measured by the dry-run roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import hom_collectives as hom
+from . import optimizer as opt_lib
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_lib.OptState
+    step: jax.Array
+    ef_residual: Any | None = None   # error-feedback state (hom mode)
+
+
+def init_state(params, *, hom_mode: bool = False) -> TrainState:
+    return TrainState(
+        params=params, opt=opt_lib.init(params), step=jnp.zeros((), jnp.int32),
+        ef_residual=hom.init_residuals(params) if hom_mode else None)
+
+
+def make_train_step(model, opt_cfg: opt_lib.AdamWConfig, *,
+                    mode: str = "gspmd", mesh=None,
+                    dp_axes: tuple = ("data",), microbatch: Optional[int] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_of(params, batch):
+        return model.loss_fn(params, batch)
+
+    def grads_of(params, batch):
+        if microbatch is None:
+            return jax.value_and_grad(loss_of)(params, batch)
+        # gradient accumulation over leading-dim microbatch splits
+        def split(x):
+            return x.reshape((microbatch, x.shape[0] // microbatch) + x.shape[1:])
+        mb = jax.tree.map(split, batch)
+
+        def acc_step(carry, b):
+            loss, g = jax.value_and_grad(loss_of)(params, b)
+            return carry, (loss, g)
+
+        _, (losses, gs) = jax.lax.scan(acc_step, 0.0, mb)
+        g = jax.tree.map(lambda x: jnp.mean(x, axis=0), gs)
+        return jnp.mean(losses), g
+
+    if mode == "gspmd":
+        def train_step(state: TrainState, batch):
+            loss, grads = grads_of(state.params, batch)
+            new_params, new_opt, stats = opt_lib.update(
+                opt_cfg, grads, state.opt, state.params)
+            metrics = {"loss": loss, **stats}
+            return TrainState(new_params, new_opt, state.step + 1,
+                              state.ef_residual), metrics
+        return train_step
+
+    if mode != "hom":
+        raise ValueError(f"unknown mode {mode}")
+    if mesh is None:
+        raise ValueError("hom mode needs the mesh")
+    world = 1
+    for a in dp_axes:
+        world *= mesh.shape[a]
+    axis = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+
+    def local_grads(params, residual, batch):
+        """shard_map body: manual over DP axes, auto over 'model'.
+
+        Inside the body the DP axes are manual, so model-internal sharding
+        constraints must not mention them: the logical rules are rebased
+        (batch/expert_cap -> None) for the duration of the trace.
+        """
+        from repro.models.common import CTX
+        old_rules = dict(CTX.rules)
+        old_manual = CTX.manual_dp
+        CTX.rules = {**old_rules, "batch": None, "expert_cap": None}
+        CTX.manual_dp = True
+        try:
+            loss, grads = grads_of(params, batch)
+        finally:
+            CTX.rules = old_rules
+            CTX.manual_dp = old_manual
+        # the paper's homomorphism: add in the quantized domain
+        grads, new_residual = hom.compressed_psum_tree(
+            grads, residual, axis, world)
+        loss = jax.lax.pmean(loss, axis)
+        return loss, grads, new_residual
+
+    def batch_spec(x):
+        return P(axis)
+
+    def train_step(state: TrainState, batch):
+        shmapped = jax.shard_map(
+            functools.partial(local_grads),
+            mesh=mesh,
+            in_specs=(P(), P(), jax.tree.map(batch_spec, batch)),
+            out_specs=(P(), P(), P()),
+            axis_names=set(dp_axes),
+        )
+        loss, grads, new_residual = shmapped(state.params, state.ef_residual, batch)
+        new_params, new_opt, stats = opt_lib.update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": loss, **stats}
+        return TrainState(new_params, new_opt, state.step + 1, new_residual), metrics
+
+    return train_step

@@ -1,0 +1,37 @@
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# CI-friendly hypothesis profile: jit compilation makes examples expensive
+settings.register_profile(
+    "ci", max_examples=12, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def field_2d():
+    """Smooth-ish 2D scientific field (paper-style Ocean analogue)."""
+    rng = np.random.default_rng(0)
+    x = np.linspace(0, 4 * np.pi, 181)[:, None] + np.linspace(0, 2 * np.pi, 97)[None, :]
+    return (np.sin(x) * 3 + np.cos(2 * x) + rng.normal(0, 0.05, (181, 97))
+            ).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def field_3d():
+    rng = np.random.default_rng(1)
+    d = rng.normal(0, 1, (24, 40, 33)).astype(np.float32)
+    return (np.cumsum(np.cumsum(np.cumsum(d, 0), 1), 2) * 1e-2).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def vector_field_2d():
+    rng = np.random.default_rng(2)
+    g = np.linspace(0, 2 * np.pi, 128)
+    u = (np.sin(g)[:, None] * np.cos(g)[None, :]).astype(np.float32)
+    v = (np.cos(g)[:, None] * np.sin(g)[None, :]).astype(np.float32)
+    u += rng.normal(0, 0.01, u.shape).astype(np.float32)
+    v += rng.normal(0, 0.01, v.shape).astype(np.float32)
+    return u, v

@@ -1,0 +1,136 @@
+"""Homomorphic compressed collectives: correctness on a multi-device mesh.
+
+Runs in a subprocess with 8 fake devices (XLA device count is locked at
+first jax init, so the main test process must stay single-device).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comm import hom_collectives as hom
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+world = 8
+
+# --- compressed psum vs exact mean -----------------------------------------
+rng = np.random.default_rng(0)
+grads = {"a": rng.normal(0, 1e-3, (8, 64, 32)).astype(np.float32),
+         "b": rng.normal(0, 3e-4, (8, 128,)).astype(np.float32)}
+
+def body(g, r):
+    local = {k: v[0] for k, v in g.items()}
+    mean, new_r = hom.compressed_psum_tree(local, r, "data", world)
+    return mean, new_r
+
+res0 = {k: np.zeros(v.shape[1:], np.float32) for k, v in grads.items()}
+f = jax.shard_map(body, mesh=mesh,
+                  in_specs=({"a": P("data"), "b": P("data")}, {"a": P(), "b": P()}),
+                  out_specs=(P(), P()), check_vma=False)
+mean, resid = jax.jit(f)(
+    {k: jnp.asarray(v).reshape((8, 1) + v.shape[1:]) for k, v in grads.items()},
+    {k: jnp.asarray(v) for k, v in res0.items()})
+
+out = {}
+bits = hom.bit_budget(world)
+for k in grads:
+    exact = grads[k].mean(axis=0)
+    got = np.asarray(mean[k])
+    vmax = np.abs(grads[k]).max()
+    qmax = 2 ** (bits - 1) - 1
+    bound = 2 * (vmax / qmax * 0.5) / 1.0  # eps per worker, worst case mean err
+    out[k + "_err"] = float(np.abs(got - exact).max())
+    out[k + "_bound"] = float(bound)
+    out[k + "_resid_finite"] = bool(np.isfinite(np.asarray(resid[k])).all())
+
+# --- packed allgather --------------------------------------------------------
+x = rng.normal(0, 1.0, (8, 96)).astype(np.float32)
+def body2(xs):
+    return hom.packed_allgather(xs[0], "data", bits=12)
+g = jax.shard_map(body2, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
+                  check_vma=False)
+gathered = np.asarray(jax.jit(g)(jnp.asarray(x).reshape(8, 1, 96)))
+gathered = gathered.reshape(8, 96)   # (world, 1, 96) -> per-source rows
+err = np.abs(gathered - x).max()
+out["allgather_err"] = float(err)
+out["allgather_bound"] = float(np.abs(x).max() / (2**11 - 1) * 1.01)
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def comm_results():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-3000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def test_compressed_psum_error_bounded(comm_results):
+    for k in ("a", "b"):
+        assert comm_results[f"{k}_err"] <= comm_results[f"{k}_bound"], comm_results
+        assert comm_results[f"{k}_resid_finite"]
+
+
+def test_packed_allgather_roundtrip(comm_results):
+    assert comm_results["allgather_err"] <= comm_results["allgather_bound"]
+
+
+def test_bit_budget():
+    from repro.comm import bit_budget
+    assert bit_budget(1) == 15
+    assert bit_budget(256) == 7
+    assert bit_budget(512) == 6
+    # int16 container can hold 512 workers x 6-bit magnitudes: 512*31 < 2^15
+    assert 512 * (2 ** (6 - 1) - 1) < 2 ** 15
+
+
+def test_stage1_stats_matches_numpy():
+    import jax.numpy as jnp
+    from repro.comm import stage1_stats
+    rng = np.random.default_rng(3)
+    tree = {"w": jnp.asarray(rng.normal(0.1, 2.0, (513, 37)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(-1, 0.5, (1000,)).astype(np.float32))}
+    got = stage1_stats(tree, block=256)
+    flat = np.concatenate([np.asarray(v).ravel() for v in tree.values()])
+    np.testing.assert_allclose(float(got["mean"]), flat.mean(), rtol=1e-4)
+    np.testing.assert_allclose(float(got["std"]), flat.std(), rtol=1e-3)
+    np.testing.assert_allclose(float(got["norm"]),
+                               np.linalg.norm(flat), rtol=1e-4)
+
+
+def test_error_feedback_convergence():
+    """With error feedback, the accumulated mean over steps converges to the
+    true mean (residual carries what quantization dropped)."""
+    import jax, jax.numpy as jnp
+    from repro.comm import hom_collectives as hom
+    # single-worker world: psum over a size-1 axis via vmap-like trick
+    rng = np.random.default_rng(1)
+    g_true = jnp.asarray(rng.normal(0, 1e-4, (256,)).astype(np.float32))
+
+    mesh = None
+    # emulate: quantize/dequantize with error feedback, no collective needed
+    bits = hom.bit_budget(1)
+    qmax = float(2 ** (bits - 1) - 1)
+    resid = jnp.zeros_like(g_true)
+    acc = jnp.zeros_like(g_true)
+    for step in range(20):
+        v = g_true + resid
+        eps = jnp.maximum(jnp.max(jnp.abs(v)) / qmax, 1e-30) * 0.5
+        q = jnp.clip(jnp.round(v / (2 * eps)), -qmax, qmax)
+        deq = q * 2 * eps
+        resid = v - deq
+        acc = acc + deq
+    mean_est = acc / 20
+    assert float(jnp.max(jnp.abs(mean_est - g_true))) < 1e-6

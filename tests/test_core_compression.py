@@ -1,0 +1,107 @@
+"""Core HSZ invariants: error bound, roundtrips, size accounting (paper §III-IV)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from repro.core import (Scheme, Stage, by_name, encode, hszp, hszp_nd, hszx,
+                        hszx_nd)
+
+ALL = [hszp, hszx, hszp_nd, hszx_nd]
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("rel_eb", [1e-1, 1e-2, 1e-3, 1e-4])
+def test_error_bound_2d(comp, rel_eb, field_2d):
+    c = comp.compress(jnp.asarray(field_2d), rel_eb=rel_eb)
+    out = np.asarray(comp.decompress(c, Stage.F))
+    assert out.shape == field_2d.shape
+    # eps + f32 round-off of d' = 2*q*eps (a few ulps of |d|, paper §V-D.2)
+    tol = float(c.eps) + 4 * np.finfo(np.float32).eps * np.abs(field_2d).max()
+    assert np.max(np.abs(out - field_2d)) <= tol
+
+
+@pytest.mark.parametrize("comp", [hszp_nd, hszx_nd], ids=lambda c: c.scheme.value)
+def test_error_bound_3d(comp, field_3d):
+    c = comp.compress(jnp.asarray(field_3d), rel_eb=1e-3)
+    out = np.asarray(comp.decompress(c, Stage.F))
+    tol = float(c.eps) + 4 * np.finfo(np.float32).eps * np.abs(field_3d).max()
+    assert np.max(np.abs(out - field_3d)) <= tol
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_stagewise_consistency(comp, field_2d):
+    """Stage Q/P/M representations reproduce stage F when completed manually."""
+    c = comp.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+    q = comp.decompress(c, Stage.Q, crop=False)
+    df = np.asarray(comp.decompress(c, Stage.F))
+    manual = np.asarray(q).astype(np.float32) * 2.0 * float(c.eps)
+    manual = manual.reshape(-1)[: df.size].reshape(df.shape) if not comp.scheme.is_nd \
+        else manual[tuple(slice(0, s) for s in df.shape)]
+    np.testing.assert_array_equal(manual.astype(np.float32), df)
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_encoded_roundtrip_bitexact(comp, field_2d):
+    c = comp.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+    e = comp.encode(c)
+    c2 = encode.decode_device(e)
+    np.testing.assert_array_equal(np.asarray(c2.residuals), np.asarray(c.residuals))
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_serialize_roundtrip(comp, field_2d):
+    c = comp.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+    blob = encode.serialize(c)
+    c2 = encode.deserialize(blob)
+    assert c2.scheme == c.scheme
+    np.testing.assert_array_equal(np.asarray(c2.residuals), np.asarray(c.residuals))
+    np.testing.assert_array_equal(np.asarray(c2.metadata), np.asarray(c.metadata))
+    # exact size accounting: stream length matches serialized_bits payload
+    assert len(blob) * 8 >= float(comp.serialized_bits(c)) - 64 * 8
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_compression_ratio_sane(comp, field_2d):
+    tight = comp.compress(jnp.asarray(field_2d), rel_eb=1e-4)
+    loose = comp.compress(jnp.asarray(field_2d), rel_eb=1e-1)
+    rt, rl = float(comp.compression_ratio(tight)), float(comp.compression_ratio(loose))
+    assert 1.0 < rt < rl, (rt, rl)  # looser bound -> higher ratio
+
+
+@given(st.integers(10, 2000), st.floats(1e-4, 1e-1),
+       st.sampled_from(["hszp", "hszx", "hszp_nd", "hszx_nd"]))
+def test_error_bound_property(n, rel_eb, name):
+    """|d - d'| <= eps for arbitrary 1-D inputs (hypothesis)."""
+    rng = np.random.default_rng(n)
+    d = rng.normal(0, 10, n).astype(np.float32)
+    comp = by_name(name)
+    c = comp.compress(jnp.asarray(d), rel_eb=rel_eb)
+    out = np.asarray(comp.decompress(c, Stage.F))
+    tol = float(c.eps) + 4 * np.finfo(np.float32).eps * np.abs(d).max()
+    assert np.max(np.abs(out - d)) <= tol
+
+
+@given(st.integers(0, 32))
+def test_pack_unpack_property(bits):
+    rng = np.random.default_rng(bits)
+    n = 256
+    maxv = (1 << bits) - 1 if bits < 32 else 0xFFFFFFFF
+    u = jnp.asarray(rng.integers(0, maxv + 1 if maxv < 2**63 else maxv,
+                                 n, dtype=np.uint32) & np.uint32(maxv))
+    packed = encode.pack_uniform(u, bits)
+    out = encode.unpack_uniform(packed, n, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(u))
+
+
+def test_constant_field():
+    """Degenerate constant input: near-zero-width blocks, bounded recovery."""
+    d = jnp.full((64, 64), 3.25, jnp.float32)
+    for comp in ALL:
+        c = comp.compress(d, rel_eb=1e-3)
+        # all blocks except (possibly) the Lorenzo anchor block are 0-width
+        widths = np.asarray(c.bitwidths)
+        assert np.median(widths) == 0
+        assert float(comp.compression_ratio(c)) > 3.0
+        out = comp.decompress(c, Stage.F)
+        assert float(jnp.max(jnp.abs(out - d))) <= float(c.eps)

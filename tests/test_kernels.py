@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(128, 256), (256, 512), (384, 256)])
+@pytest.mark.parametrize("eps", [1e-1, 1e-3])
+def test_quant_lorenzo2d(shape, eps):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = jnp.asarray(rng.normal(0, 3, shape).astype(np.float32))
+    got = ops.quant_lorenzo2d(x, jnp.float32(eps))
+    want = ref.quant_lorenzo2d(x, jnp.float32(eps))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", list(range(0, 33)))
+def test_bitpack_all_widths(bits):
+    rng = np.random.default_rng(bits)
+    n = 8192
+    if bits == 0:
+        u = jnp.zeros((n,), jnp.uint32)
+    else:
+        maxv = (1 << bits) - 1 if bits < 32 else 0xFFFFFFFF
+        u = jnp.asarray((rng.integers(0, 2**31, n, dtype=np.uint32)
+                         & np.uint32(maxv)))
+    packed = ops.pack(u, bits)
+    want = ref.pack_uniform(u, bits)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(want))
+    out = ops.unpack(packed, n, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(u))
+
+
+@pytest.mark.parametrize("shape", [(130, 258), (258, 514)])
+def test_stencils(shape):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.integers(-10000, 10000, shape, dtype=np.int32))
+    eps = jnp.float32(5e-3)
+    d0, d1 = ops.grad2d(q, eps)
+    r0, r1 = ref.stencil_dq_grad2d(q, eps)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(r0))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(r1))
+    lap = ops.laplacian2d(q, eps)
+    rl = ref.stencil_dq_laplacian2d(q, eps)
+    np.testing.assert_array_equal(np.asarray(lap), np.asarray(rl))
+
+
+@pytest.mark.parametrize("nb,s", [(256, 128), (512, 256), (1024, 64)])
+def test_block_stats(nb, s):
+    rng = np.random.default_rng(nb)
+    qb = jnp.asarray(rng.integers(-50000, 50000, (nb, s), dtype=np.int32))
+    gm, gx = ops.block_stats(qb)
+    rm, rx = ref.block_stats(qb)
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(rm))
+    np.testing.assert_array_equal(np.asarray(gx), np.asarray(rx))
+
+
+@pytest.mark.parametrize("shape", [(128, 256), (256, 384)])
+def test_prefix_stats(shape):
+    rng = np.random.default_rng(3)
+    p = jnp.asarray(rng.integers(-8, 8, shape, dtype=np.int32))
+    s1, s2 = ops.prefix_stats2d(p)
+    r1, r2 = ref.prefix_stats2d(p)
+    np.testing.assert_allclose(float(s1), float(r1), rtol=1e-5)
+    np.testing.assert_allclose(float(s2), float(r2), rtol=1e-5)
+
+
+@given(st.integers(1, 31), st.integers(1, 4))
+def test_bitpack_roundtrip_property(bits, blocks):
+    rng = np.random.default_rng(bits * 131 + blocks)
+    n = 4096 * blocks
+    u = jnp.asarray(rng.integers(0, 1 << bits, n, dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.unpack(ops.pack(u, bits), n, bits)), np.asarray(u))
+
+
+def test_kernel_pipeline_consistency(field_2d):
+    """Fused kernels reproduce the reference pipeline end to end."""
+    from repro.core import Stage, hszp_nd, homomorphic as H
+    import repro.core.blocking as blocking
+    x = jnp.asarray(np.ascontiguousarray(field_2d[:128, :64]))
+    eps = jnp.float32(1e-3)
+    p_kernel = ops.quant_lorenzo2d(x, eps)
+    c = hszp_nd.compress(x, eps=eps)
+    p_pipeline = blocking.crop(c.residuals, x.shape)
+    np.testing.assert_array_equal(np.asarray(p_kernel), np.asarray(p_pipeline))
