@@ -210,6 +210,39 @@ def fw_checkpoint():
             row(f"fw_ckpt/{mode}", us, f"bytes={total} ratio={raw/total:.2f}")
 
 
+def fw_batched_analytics():
+    """Batched vmap analytics vs an equal-work per-field jitted loop.
+
+    Same fields, same op, same stage: the batched engine issues ONE dispatch
+    (stack fused into the compiled program) where the loop issues one per
+    field.  The workload is the serving regime this engine exists for — many
+    small same-layout fields (timestep/variable tiles), where per-call
+    dispatch dominates — so the tile size is fixed rather than scaled by
+    ``--scale`` (per-op throughput vs size is covered by fig3-12).
+    """
+    from repro.analytics import BatchedAnalytics, plan_stage
+
+    batch, tile = 64, (64, 64)
+    for name in ("hszp_nd", "hszx_nd"):
+        comp = by_name(name)
+        fields = [comp.compress(jnp.asarray(synth_field("Ocean", 0, tile, seed=i)),
+                                rel_eb=1e-2) for i in range(batch)]
+        eng = BatchedAnalytics()
+        for op_name, op in (("mean", H.mean), ("std", H.std),
+                            ("derivative", lambda c, s: H.derivative(c, s, 0))):
+            stage = plan_stage(comp.scheme, op_name)
+            us_batched, _ = timeit(lambda fs: eng.run(fs, op_name, stage), fields)
+            loop_fn = jax.jit(lambda c, s=stage, o=op: o(c, s))
+
+            def per_field_loop(fs):
+                return [loop_fn(c) for c in fs]
+
+            us_loop, _ = timeit(per_field_loop, fields)
+            row(f"fw_batched_analytics/{name}/{op_name}", us_batched,
+                f"loop_us={us_loop:.1f} speedup={us_loop / us_batched:.2f}x "
+                f"batch={batch} stage={stage.name}")
+
+
 def fw_collective_bytes():
     """Wire bytes of the gradient all-reduce: f32 baseline vs hom-int16.
 
@@ -228,7 +261,8 @@ def fw_collective_bytes():
 
 BENCHES = [fig2_compression_ratio, fig34_decompression, fig58_statistics,
            fig910_differentiation, fig1112_multivariate, table4_breakdown,
-           table5_op_errors, fw_checkpoint, fw_collective_bytes]
+           table5_op_errors, fw_batched_analytics, fw_checkpoint,
+           fw_collective_bytes]
 
 
 def main() -> None:

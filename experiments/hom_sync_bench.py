@@ -10,7 +10,7 @@ import sys
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.comm import hom_collectives as hom
 from repro.configs import ARCHS

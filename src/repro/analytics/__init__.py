@@ -1,0 +1,27 @@
+"""Batched homomorphic analytics: automatic stage planning + vmap execution.
+
+The paper's Table I says *which* decompression stage each analytical
+operation can run at; its §V timings say stage choice is where the speedups
+live.  This package turns that into an engine:
+
+* :mod:`repro.analytics.planner` — the feasibility matrix as data, plus a
+  cost model (optionally calibrated from ``benchmarks/run.py`` CSV) that
+  picks the cheapest feasible stage automatically;
+* :mod:`repro.analytics.engine` — stacks same-layout compressed fields into
+  a leading batch axis (``repro.core.batch_stack``) and runs the homomorphic
+  op once, ``vmap``-ed and ``jit``-ed, with a compilation cache keyed on
+  ``(scheme, block, shape, op, stage)``;
+* :mod:`repro.analytics.query` — ``query(fields, op=..., stage="auto")``:
+  groups arbitrary field collections by layout, plans each group, executes
+  batched, and returns results in input order.
+"""
+from .planner import (CostModel, FEASIBILITY, MULTIVARIATE, OPS, as_stage,
+                      check_feasible, feasible_stages, is_feasible, plan_stage)
+from .engine import BatchedAnalytics, batch_key
+from .query import QueryResult, query
+
+__all__ = [
+    "OPS", "MULTIVARIATE", "FEASIBILITY", "as_stage",
+    "feasible_stages", "is_feasible", "check_feasible", "plan_stage",
+    "CostModel", "BatchedAnalytics", "batch_key", "QueryResult", "query",
+]

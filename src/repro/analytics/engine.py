@@ -1,0 +1,148 @@
+"""Batch executor: stack same-layout fields, run one jitted vmap per op.
+
+Many timesteps/variables of a scientific dataset share one compression
+layout, so their homomorphic analytics compile to a *single* XLA program
+with a leading batch axis instead of one dispatch per field.  The jit cache
+is keyed on ``(scheme, block, shape, op, stage, container, axis, batch)`` —
+the full static signature of the compiled program — so repeated queries over
+rolling data reuse the compiled executable.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Sequence, Tuple, Union
+
+import jax
+
+from repro.core import (Compressed, Encoded, Stage, batch_stack, layout_key,
+                        homomorphic as H)
+
+from .planner import MULTIVARIATE, OPS, CostModel, plan_stage
+
+Field = Union[Compressed, Encoded]
+
+#: univariate ops: field -> array; ``derivative`` additionally takes an axis.
+_UNIVARIATE_OPS = {
+    "mean": lambda c, stage, axis: H.mean(c, stage),
+    "std": lambda c, stage, axis: H.std(c, stage),
+    "derivative": lambda c, stage, axis: H.derivative(c, stage, axis),
+    "laplacian": lambda c, stage, axis: H.laplacian(c, stage),
+}
+_MULTIVARIATE_OPS = {
+    "divergence": lambda comps, stage: H.divergence(comps, stage),
+    "curl": lambda comps, stage: H.curl(comps, stage),
+}
+
+
+def batch_key(first: Field, op: str, stage: Stage, axis: int = 0,
+              n_components: int = 1, batch: int = 1) -> Tuple:
+    """Static signature of one compiled batched-analytics program.
+
+    The batch size is part of the key: stacking happens *inside* the jitted
+    program (one dispatch for stack + op, and XLA elides copies the op never
+    reads — e.g. residuals under a stage-① metadata mean), so the program
+    arity depends on it.
+    """
+    return layout_key(first) + (op, Stage(stage), axis, n_components, batch)
+
+
+class BatchedAnalytics:
+    """Executes one homomorphic op over a batch of same-layout fields.
+
+    One instance owns one jit cache; module-level :data:`default_engine`
+    is shared by :func:`repro.analytics.query.query` and the serve frontend.
+
+    ``bucket_batches`` pads each batch to the next power of two (repeating
+    the last field; padded results are sliced off) so a serving queue with
+    fluctuating depth compiles O(log max_batch) programs per op instead of
+    one per distinct length.  The cache is LRU-bounded by ``cache_limit``.
+    """
+
+    def __init__(self, cost_model: CostModel | None = None, *,
+                 bucket_batches: bool = True, cache_limit: int = 128):
+        self.cost_model = cost_model
+        self.bucket_batches = bucket_batches
+        self.cache_limit = cache_limit
+        self._jitted: OrderedDict[Tuple, object] = OrderedDict()
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        return 1 << (n - 1).bit_length()
+
+    # -- compiled-program cache -------------------------------------------
+    def _compiled(self, key: Tuple, op: str, stage: Stage, axis: int,
+                  n_components: int, batch: int):
+        fn = self._jitted.get(key)
+        if fn is not None:
+            self._jitted.move_to_end(key)
+        else:
+            if op in MULTIVARIATE:
+                base = _MULTIVARIATE_OPS[op]
+
+                def run(*flat, _base=base, _stage=stage, _b=batch,
+                        _nc=n_components):
+                    comps = [batch_stack(flat[i * _b:(i + 1) * _b])
+                             for i in range(_nc)]
+                    return jax.vmap(lambda *cs: _base(list(cs), _stage))(*comps)
+            else:
+                base = _UNIVARIATE_OPS[op]
+
+                def run(*fields, _base=base, _stage=stage, _axis=axis):
+                    stacked = batch_stack(fields)
+                    return jax.vmap(lambda c: _base(c, _stage, _axis))(stacked)
+
+            fn = jax.jit(run)
+            self._jitted[key] = fn
+            while len(self._jitted) > self.cache_limit:
+                self._jitted.popitem(last=False)
+        return fn
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._jitted)
+
+    # -- execution ---------------------------------------------------------
+    def run(self, fields: Sequence, op: str,
+            stage: Union[Stage, str, int] = "auto", *, axis: int = 0):
+        """Run ``op`` over ``fields`` in one jitted, vmapped call.
+
+        ``fields`` is a sequence of same-layout :class:`Compressed` /
+        :class:`Encoded` fields — or, for ``divergence``/``curl``, a sequence
+        of equal-length component tuples.  Returns the batched result (leading
+        axis = ``len(fields)``); ``curl`` in 3-D returns a tuple of three
+        batched components, matching the unbatched op.
+        """
+        if op not in OPS:
+            raise ValueError(f"unknown operation {op!r}; expected one of {OPS}")
+        if not fields:
+            raise ValueError("empty batch")
+
+        b = len(fields)
+        padded = list(fields)
+        if self.bucket_batches:
+            padded += [fields[-1]] * (self._bucket(b) - b)
+
+        if op in MULTIVARIATE:
+            n_comp = len(fields[0])
+            if any(len(f) != n_comp for f in fields):
+                raise ValueError("all vector fields must have the same number "
+                                 "of components")
+            first = fields[0][0]
+            stage = plan_stage(first.scheme, op, stage, self.cost_model)
+            key = batch_key(first, op, stage, 0, n_comp, len(padded))
+            # component-major flat args: (f0[c], f1[c], ...) for each c
+            flat = tuple(f[i] for i in range(n_comp) for f in padded)
+            out = self._compiled(key, op, stage, 0, n_comp, len(padded))(*flat)
+        else:
+            first = fields[0]
+            stage = plan_stage(first.scheme, op, stage, self.cost_model)
+            d_axis = axis if op == "derivative" else 0
+            key = batch_key(first, op, stage, d_axis, 1, len(padded))
+            out = self._compiled(key, op, stage, d_axis, 1, len(padded))(*padded)
+        if len(padded) == b:
+            return out
+        return jax.tree.map(lambda x: x[:b], out)
+
+
+#: process-wide engine (shared jit cache) used by the query front-end.
+default_engine = BatchedAnalytics()

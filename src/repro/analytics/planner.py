@@ -1,0 +1,172 @@
+"""Stage planner: the paper's Table I feasibility matrix + cost-based choice.
+
+``FEASIBILITY[(scheme, op)]`` lists the stages the operation is defined at,
+cheapest first.  The matrix mirrors — and is pinned by tests to — the actual
+raise/no-raise behavior of :mod:`repro.core.homomorphic`:
+
+* ``mean``: stage ① only for the HSZx (block-mean) family, ②③④ for all;
+* ``std``: ②③④ (① carries no pointwise information);
+* stencils (``derivative``/``laplacian``/``divergence``/``curl``): stage ②
+  only for nd schemes (1-D partitioning destroys the spatial layout, §V-B),
+  ③④ for all.
+
+``plan_stage`` resolves ``stage="auto"`` to the cheapest feasible stage.  By
+default "cheapest" is stage order (①<②<③<④ — monotone in decompression work,
+which matches the paper's measurements); a :class:`CostModel` calibrated from
+``benchmarks/run.py`` CSV output refines the choice with measured
+microseconds per call.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+
+from repro.core import Scheme, Stage, UnsupportedStageError
+
+OPS: Tuple[str, ...] = ("mean", "std", "derivative", "laplacian",
+                        "divergence", "curl")
+#: ops that take a sequence of component fields instead of a single field
+MULTIVARIATE = frozenset({"divergence", "curl"})
+
+_STENCILS = ("derivative", "laplacian", "divergence", "curl")
+
+
+def _build_matrix() -> Dict[Tuple[Scheme, str], Tuple[Stage, ...]]:
+    matrix: Dict[Tuple[Scheme, str], Tuple[Stage, ...]] = {}
+    for scheme in Scheme:
+        matrix[(scheme, "mean")] = tuple(
+            ([Stage.M] if scheme.is_blockmean else [])
+            + [Stage.P, Stage.Q, Stage.F])
+        matrix[(scheme, "std")] = (Stage.P, Stage.Q, Stage.F)
+        stencil = tuple(([Stage.P] if scheme.is_nd else [])
+                        + [Stage.Q, Stage.F])
+        for op in _STENCILS:
+            matrix[(scheme, op)] = stencil
+    return matrix
+
+
+#: Table I: (scheme, op) -> stages the op is defined at, cheapest first.
+FEASIBILITY: Dict[Tuple[Scheme, str], Tuple[Stage, ...]] = _build_matrix()
+
+
+def as_stage(stage: Union[Stage, str, int]) -> Stage:
+    """Coerce ``Stage`` / int / name ("M", "p", ...) to a :class:`Stage`."""
+    if isinstance(stage, str):
+        try:
+            return Stage[stage.upper()]
+        except KeyError:
+            raise ValueError(f"unknown stage {stage!r}; expected one of "
+                             f"{[s.name for s in Stage]} or 'auto'")
+    return Stage(stage)
+
+
+def feasible_stages(scheme: Scheme, op: str) -> Tuple[Stage, ...]:
+    """Stages ``op`` is defined at for ``scheme``, cheapest first."""
+    try:
+        return FEASIBILITY[(Scheme(scheme), op)]
+    except KeyError:
+        raise ValueError(f"unknown operation {op!r}; expected one of {OPS}")
+
+
+def is_feasible(scheme: Scheme, op: str, stage: Stage) -> bool:
+    return Stage(stage) in feasible_stages(scheme, op)
+
+
+def check_feasible(scheme: Scheme, op: str, stage: Stage) -> Stage:
+    """Validate an explicit stage choice with the ops' own error semantics."""
+    stage = as_stage(stage)
+    if not is_feasible(scheme, op, stage):
+        raise UnsupportedStageError(
+            f"{op} is not defined at stage {stage.name} for scheme "
+            f"{Scheme(scheme).value}; feasible stages: "
+            f"{[s.name for s in feasible_stages(scheme, op)]}")
+    return stage
+
+
+class CostModel:
+    """Per-``(scheme, op, stage)`` cost estimates in microseconds per call.
+
+    Uncalibrated cells fall back to a stage-ordered default (stage index
+    scaled to rank *below* any measured cost is wrong — instead the default
+    is only used when the whole ``(scheme, op)`` row is unmeasured, so mixed
+    calibration never compares measured against made-up numbers).
+    """
+
+    def __init__(self, table: Optional[Dict[Tuple[Scheme, str, Stage], float]] = None):
+        self.table: Dict[Tuple[Scheme, str, Stage], float] = dict(table or {})
+        self._counts: Dict[Tuple[Scheme, str, Stage], int] = {
+            k: 1 for k in self.table}
+
+    # -- calibration -------------------------------------------------------
+    _BENCH_OP_ALIASES = {"deriv": "derivative", "div": "divergence"}
+    _BENCH_STAGE_TAGS = {"m": Stage.M, "p": Stage.P, "q": Stage.Q, "f": Stage.F}
+
+    def record(self, scheme: Scheme, op: str, stage: Stage, us: float) -> None:
+        key = (Scheme(scheme), op, Stage(stage))
+        # true running mean over repeated observations (multiple datasets):
+        # order-independent, every observation weighted equally
+        n = self._counts.get(key, 0)
+        prev = self.table.get(key, 0.0)
+        self.table[key] = (prev * n + us) / (n + 1)
+        self._counts[key] = n + 1
+
+    @classmethod
+    def from_benchmark_csv(cls, rows: Union[str, Iterable[str]]) -> "CostModel":
+        """Calibrate from ``benchmarks/run.py`` output.
+
+        Parses the op-throughput rows (``fig58/…``, ``fig910/…``,
+        ``fig1112/…``), whose names encode ``…/<op>/<scheme>-<stage_tag>``;
+        other rows are ignored.
+        """
+        model = cls()
+        if isinstance(rows, str):
+            rows = rows.splitlines()
+        for line in rows:
+            line = line.strip()
+            if not line or line.startswith(("#", "name,")):
+                continue
+            name, _, rest = line.partition(",")
+            us_text = rest.partition(",")[0]
+            parts = name.split("/")
+            if len(parts) != 4 or parts[0] not in ("fig58", "fig910", "fig1112"):
+                continue
+            op = cls._BENCH_OP_ALIASES.get(parts[2], parts[2])
+            scheme_name, _, tag = parts[3].rpartition("-")
+            if op not in OPS or tag not in cls._BENCH_STAGE_TAGS:
+                continue
+            try:
+                scheme = Scheme(scheme_name)
+                us = float(us_text)
+            except ValueError:
+                continue
+            model.record(scheme, op, cls._BENCH_STAGE_TAGS[tag], us)
+        return model
+
+    # -- lookup ------------------------------------------------------------
+    def cost(self, scheme: Scheme, op: str, stage: Stage) -> Optional[float]:
+        return self.table.get((Scheme(scheme), op, Stage(stage)))
+
+    def cheapest(self, scheme: Scheme, op: str,
+                 stages: Sequence[Stage]) -> Stage:
+        costs = {s: self.cost(scheme, op, s) for s in stages}
+        if any(c is None for c in costs.values()):
+            # incomplete row: fall back to stage order rather than mixing
+            # measured numbers with fabricated defaults
+            return min(stages, key=int)
+        return min(stages, key=lambda s: (costs[s], int(s)))
+
+
+def plan_stage(scheme: Scheme, op: str,
+               stage: Union[Stage, str, int] = "auto",
+               cost_model: Optional[CostModel] = None) -> Stage:
+    """Resolve the execution stage for ``op`` on ``scheme``.
+
+    ``stage="auto"`` picks the cheapest feasible stage (never one that would
+    raise :class:`UnsupportedStageError`); an explicit stage is validated
+    against the feasibility matrix.
+    """
+    if stage != "auto":
+        return check_feasible(scheme, op, stage)
+    stages = feasible_stages(scheme, op)
+    if cost_model is not None:
+        return cost_model.cheapest(scheme, op, stages)
+    return stages[0]

@@ -1,0 +1,98 @@
+"""Query front-end: analytics over arbitrary collections of compressed fields.
+
+``query`` accepts any mix of layouts (different datasets, shapes, schemes),
+groups the fields by their static layout signature, plans the execution
+stage per group (``stage="auto"`` → cheapest feasible per Table I), runs one
+batched vmap call per group through the shared :class:`BatchedAnalytics`
+engine, and scatters results back into input order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.core import Compressed, Encoded, Stage, layout_key
+
+from .engine import BatchedAnalytics, default_engine
+from .planner import MULTIVARIATE, OPS, CostModel, plan_stage
+
+Field = Union[Compressed, Encoded]
+FieldOrVector = Union[Field, Sequence[Field]]
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Per-field results in input order, plus the plan that produced them."""
+
+    values: List[jax.Array]        # result per input field / vector tuple
+    stages: List[Stage]            # execution stage per input
+    op: str
+    n_batches: int                 # number of jitted batched calls issued
+
+    def __iter__(self):
+        return iter(self.values)
+
+    def __len__(self):
+        return len(self.values)
+
+
+def _group_signature(item: FieldOrVector, op: str) -> Tuple:
+    if op in MULTIVARIATE:
+        return tuple(layout_key(c) for c in item)
+    return layout_key(item)
+
+
+def _unbatch(batched, i: int):
+    """Extract item ``i`` of a batched result (tuple results per component)."""
+    if isinstance(batched, tuple):
+        return tuple(b[i] for b in batched)
+    return batched[i]
+
+
+def query(fields: Sequence[FieldOrVector], op: str,
+          stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
+          cost_model: Optional[CostModel] = None,
+          engine: Optional[BatchedAnalytics] = None) -> QueryResult:
+    """Run one analytical operation over many compressed fields.
+
+    Parameters
+    ----------
+    fields:
+        For ``mean``/``std``/``derivative``/``laplacian``: a sequence of
+        :class:`Compressed`/:class:`Encoded` fields.  For ``divergence``/
+        ``curl``: a sequence of vector fields, each a tuple of component
+        fields (one per spatial axis).
+    op:
+        One of :data:`repro.analytics.OPS`.
+    stage:
+        ``"auto"`` (cheapest feasible stage per group, never one that raises
+        :class:`~repro.core.UnsupportedStageError`), or an explicit
+        :class:`Stage` / stage name validated against the feasibility matrix.
+    axis:
+        Differentiation axis for ``op="derivative"``.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown operation {op!r}; expected one of {OPS}")
+    if engine is None:
+        engine = default_engine
+
+    # group by static layout signature, preserving input order within groups
+    groups: Dict[Tuple, List[int]] = {}
+    for i, item in enumerate(fields):
+        groups.setdefault(_group_signature(item, op), []).append(i)
+
+    values: List = [None] * len(fields)
+    stages: List = [None] * len(fields)
+    for indices in groups.values():
+        group = [fields[i] for i in indices]
+        first = group[0][0] if op in MULTIVARIATE else group[0]
+        planned = plan_stage(first.scheme, op, stage,
+                             cost_model or engine.cost_model)
+        batched = engine.run(group, op, planned, axis=axis)
+        for j, i in enumerate(indices):
+            values[i] = _unbatch(batched, j)
+            stages[i] = planned
+    return QueryResult(values=values, stages=stages, op=op,
+                       n_batches=len(groups))

@@ -23,7 +23,7 @@ gradients — O(n_blocks) work, no decompression.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

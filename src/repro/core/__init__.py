@@ -1,7 +1,8 @@
 """HSZ core: error-controlled compression with multi-stage decompression and
 homomorphic analytical operations (the paper's contribution, in JAX)."""
 
-from .stages import Compressed, Encoded, Scheme, Stage
+from .stages import (Compressed, Encoded, Scheme, Stage, batch_size,
+                     batch_stack, batch_unstack, layout_key)
 from .pipeline import (
     HSZCompressor,
     UnsupportedStageError,
@@ -15,6 +16,7 @@ from . import blocking, decorrelate, encode, error_analysis, homomorphic, quanti
 
 __all__ = [
     "Compressed", "Encoded", "Scheme", "Stage",
+    "batch_stack", "batch_unstack", "batch_size", "layout_key",
     "HSZCompressor", "UnsupportedStageError", "by_name",
     "hszp", "hszp_nd", "hszx", "hszx_nd",
     "blocking", "decorrelate", "encode", "error_analysis", "homomorphic", "quantize",

@@ -7,7 +7,6 @@ Both views are cheap reshape/transpose; XLA fuses them away.
 """
 from __future__ import annotations
 
-import math
 from typing import Sequence, Tuple
 
 import numpy as np
@@ -17,6 +16,15 @@ import jax.numpy as jnp
 
 def padded_shape(shape: Sequence[int], block: Sequence[int]) -> Tuple[int, ...]:
     return tuple(-(-s // b) * b for s, b in zip(shape, block))
+
+
+def has_padding(shape: Sequence[int], block: Sequence[int]) -> bool:
+    """Static predicate: does blocking ``shape`` introduce padding?
+
+    Decided from shapes alone so callers can skip building ``valid_mask``
+    (and its host-side ``.all()`` reduction) inside traced code.
+    """
+    return any(s % b for s, b in zip(shape, block))
 
 
 def pad_to_blocks(x: jax.Array, block: Sequence[int]) -> jax.Array:

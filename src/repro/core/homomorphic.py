@@ -20,13 +20,12 @@ from __future__ import annotations
 
 from typing import Sequence
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import blocking, encode, quantize
+from . import blocking, encode
 from .pipeline import HSZCompressor, UnsupportedStageError, by_name
-from .stages import Compressed, Encoded, Scheme, Stage
+from .stages import Compressed, Encoded, Stage
 
 
 def _comp(c: Compressed) -> HSZCompressor:
@@ -38,9 +37,15 @@ def _decode(c: Compressed | Encoded) -> Compressed:
 
 
 def _valid_weight(c: Compressed) -> jax.Array | None:
-    """Spatial 0/1 mask of valid elements, or None when there is no padding."""
-    mask = blocking.valid_mask(c.shape if c.scheme.is_nd else (c.n,), c.block)
-    return None if mask.all() else jnp.asarray(mask, jnp.int32)
+    """Spatial 0/1 mask of valid elements, or None when there is no padding.
+
+    The padding decision is static (shape/block only), so no mask is built —
+    let alone reduced — inside traced code unless padding actually exists.
+    """
+    shape = c.shape if c.scheme.is_nd else (c.n,)
+    if not blocking.has_padding(shape, c.block):
+        return None
+    return jnp.asarray(blocking.valid_mask(shape, c.block), jnp.int32)
 
 
 # ===========================================================================
@@ -55,7 +60,7 @@ def mean(c: Compressed | Encoded, stage: Stage) -> jax.Array:
         if not c.scheme.is_blockmean:
             raise UnsupportedStageError("stage-1 mean needs HSZx-family metadata")
         s = jnp.sum(c.metadata.reshape(-1) * c.valid_counts)
-        return s / n * (2.0 * c.eps)
+        return s / n * c.eps * 2.0
 
     c = _decode(c)
     if stage == Stage.P:
@@ -65,7 +70,7 @@ def mean(c: Compressed | Encoded, stage: Stage) -> jax.Array:
             w = _valid_weight(c)
             sp = jnp.sum(p if w is None else p * w)
             sm = jnp.sum(c.metadata.reshape(-1) * c.valid_counts)
-            return (sp + sm) / n * (2.0 * c.eps)
+            return (sp + sm) / n * c.eps * 2.0
         # ② Lorenzo: sum q = weighted sum of residuals; the separable weights
         # w_a[i] = (n_a - i) make this a rank-1 contraction (w0^T P w1 ...).
         dims = c.shape if c.scheme.is_nd else (c.n,)
@@ -73,12 +78,12 @@ def mean(c: Compressed | Encoded, stage: Stage) -> jax.Array:
         for axis, (npad, nvalid) in enumerate(zip(c.padded_shape, dims)):
             w = jnp.clip(nvalid - jnp.arange(npad), 0).astype(jnp.float32)
             acc = jnp.tensordot(acc, w, axes=[[0], [0]])  # consumes leading axis
-        return acc / n * (2.0 * c.eps)
+        return acc / n * c.eps * 2.0
 
     comp = _comp(c)
     if stage == Stage.Q:
         q = comp.decompress(c, Stage.Q)
-        return jnp.mean(q.astype(jnp.float32)) * (2.0 * c.eps)
+        return jnp.mean(q.astype(jnp.float32)) * c.eps * 2.0
     return jnp.mean(comp.decompress(c, Stage.F).astype(jnp.float32))
 
 
@@ -118,17 +123,17 @@ def std(c: Compressed | Encoded, stage: Stage) -> jax.Array:
         # remove its first-order contribution exactly: sum (x - r)^2 over valid
         r = s / n - mu_int
         ss = ss - 2.0 * r * jnp.sum(x) + n * r * r
-        return jnp.sqrt(jnp.maximum(ss, 0.0) / (n - 1)) * (2.0 * c.eps)
+        return jnp.sqrt(jnp.maximum(ss, 0.0) / (n - 1)) * c.eps * 2.0
     if stage == Stage.P:
         s1, s2 = _sum_q_q2(c)
         var = (s2 - s1 * s1 / n) / (n - 1)
-        return jnp.sqrt(jnp.maximum(var, 0.0)) * (2.0 * c.eps)
+        return jnp.sqrt(jnp.maximum(var, 0.0)) * c.eps * 2.0
     comp = _comp(c)
     if stage == Stage.Q:
         q = comp.decompress(c, Stage.Q).astype(jnp.float32)
         s1, s2 = jnp.sum(q), jnp.sum(q * q)
         var = (s2 - s1 * s1 / n) / (n - 1)
-        return jnp.sqrt(jnp.maximum(var, 0.0)) * (2.0 * c.eps)
+        return jnp.sqrt(jnp.maximum(var, 0.0)) * c.eps * 2.0
     d = comp.decompress(c, Stage.F).astype(jnp.float32)
     return jnp.std(d, ddof=1)
 

@@ -12,10 +12,8 @@ decorrelate are linear maps), which the homomorphic collectives in
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Optional, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -71,8 +69,10 @@ class HSZCompressor:
 
         vc = jnp.asarray(blocking.valid_counts(work_shape, block))
         if self.scheme.is_blockmean:
-            mask = blocking.valid_mask(work_shape, block)
-            valid = None if mask.all() else jnp.asarray(mask)
+            # padding is a static property of (shape, block): decide it without
+            # materializing the mask so compress stays vmap/jit-composable
+            valid = (jnp.asarray(blocking.valid_mask(work_shape, block))
+                     if blocking.has_padding(work_shape, block) else None)
             means = decorrelate.block_means(q, block, valid=valid)
             residuals = decorrelate.blockmean_decorrelate(q, means, block)
             metadata = means
@@ -117,11 +117,23 @@ class HSZCompressor:
         return x.reshape(-1)[:n].reshape(c.shape)
 
     # -- encoding ----------------------------------------------------------
+    def max_bits(self, c: Compressed) -> int:
+        """Exact max per-block width as a Python int (host device sync)."""
+        try:
+            return int(jnp.max(c.bitwidths))
+        except jax.errors.JAXTypeError as e:  # traced: no concrete value
+            raise ValueError(
+                "max_bits() syncs the bitwidth to host and cannot run inside "
+                "jit/vmap; compute it outside the traced region and pass the "
+                "static result to encode(bits=...)") from e
+
     def encode(self, c: Compressed, bits: int | None = None) -> Encoded:
         """Bit-pack at uniform width; ``bits=None`` reads the exact max width
-        from the device (host sync) for a lossless container."""
+        from the device (host sync) for a lossless container.  Inside traced
+        code the packed width must be static: pass ``bits`` explicitly
+        (``comp.max_bits(c)`` ahead of the trace gives a lossless choice)."""
         if bits is None:
-            bits = int(jnp.max(c.bitwidths))
+            bits = self.max_bits(c)
         return encode.encode_device(c, bits)
 
     # -- accounting ---------------------------------------------------------

@@ -17,9 +17,9 @@ boundary (``repro.core.encode.serialize``).  See DESIGN.md §3.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Any, Tuple
+from typing import Any, List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -176,3 +176,56 @@ class Encoded:
     def device_bytes(self) -> int:
         """Actual on-device compressed bytes (payload + metadata)."""
         return int(self.payload.size * 4 + self.metadata.size * 4 + self.bitwidths.size * 4)
+
+
+# ===========================================================================
+# batch-stackable view (substrate for `repro.analytics`)
+# ===========================================================================
+
+Field = Union[Compressed, Encoded]
+
+#: static (pytree-meta) layout signature two fields must share to be stacked.
+def layout_key(c: Field) -> Tuple:
+    """Hashable static layout of a field: every pytree-meta field, i.e.
+    everything that must agree across batch items for the treedefs to match
+    and `jax.vmap` to apply (the data leaves may differ freely)."""
+    key: Tuple = (type(c).__name__, c.scheme, c.shape, c.padded_shape, c.block,
+                  jnp.dtype(c.orig_dtype))
+    if isinstance(c, Encoded):
+        key = key + (c.bits,)
+    return key
+
+
+def batch_stack(fields: Sequence[Field]) -> Field:
+    """Stack same-layout fields into a leading batch axis on every data leaf.
+
+    The result reuses the *unbatched* static metadata (``shape``,
+    ``padded_shape``, ...), so it is **not** a valid single field — it is a
+    view meant to be consumed through ``jax.vmap`` (axis 0), under which each
+    program instance again sees metadata-consistent leaves.  Use
+    :func:`batch_unstack` to recover the individual fields.
+    """
+    if not fields:
+        raise ValueError("batch_stack needs at least one field")
+    key0 = layout_key(fields[0])
+    for i, f in enumerate(fields[1:], 1):
+        if layout_key(f) != key0:
+            raise ValueError(
+                f"cannot stack fields with different layouts: field 0 has "
+                f"{key0}, field {i} has {layout_key(f)}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *fields)
+
+
+def batch_size(c: Field) -> int:
+    """Leading batch-axis length of a :func:`batch_stack` view."""
+    lead = c.residuals if isinstance(c, Compressed) else c.payload
+    extra = lead.ndim - (len(c.padded_shape) if isinstance(c, Compressed) else 1)
+    if extra != 1:
+        raise ValueError("not a batch_stack view (no leading batch axis)")
+    return int(lead.shape[0])
+
+
+def batch_unstack(c: Field) -> List[Field]:
+    """Inverse of :func:`batch_stack`: split the leading axis back into fields."""
+    b = batch_size(c)
+    return [jax.tree.map(lambda x: x[i], c) for i in range(b)]

@@ -11,11 +11,9 @@ loss and hide optimizer bugs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,7 +7,6 @@ check, so framework code calls one API either way.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from . import bitpack as _bitpack
 from . import block_stats as _block_stats

@@ -21,7 +21,6 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
 import traceback
 from typing import Any, Dict, Optional
@@ -154,6 +153,8 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
                  + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+            ca = ca[0] if ca else {}
         rec["cost"] = {"flops_raw": float(ca.get("flops", 0.0)),
                        "bytes_accessed_raw": float(ca.get("bytes accessed", 0.0))}
         # trip-count-aware analysis (scan bodies weighted by L) — see

@@ -18,7 +18,6 @@ Numbers are per-device (the module is the per-device SPMD program).
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple

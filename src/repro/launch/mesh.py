@@ -17,19 +17,27 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import common as model_common
 
 
+def auto_axis_types(n_axes: int) -> Dict[str, Tuple]:
+    """``axis_types`` kwargs for ``jax.make_mesh``, portable across jax
+    versions (older releases predate ``jax.sharding.AxisType``; their meshes
+    are implicitly Auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def make_host_mesh(shape: Tuple[int, ...] = (1, 1), axes=("data", "model")):
     """Tiny mesh over however many (CPU) devices exist — smoke tests."""
     n = len(jax.devices())
     shape = (n, 1)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def logical_rules(mesh, *, seq_shard: bool = False) -> Dict[str, Optional[str]]:

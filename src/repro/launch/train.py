@@ -10,7 +10,6 @@ the multi-pod compile proof; this driver is the runnable small-scale path.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import time
 
@@ -24,7 +23,6 @@ from repro.models import get_model
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt_lib
 from repro.train import train_step as ts_lib
-from repro.comm import stage1_stats
 
 
 def main():

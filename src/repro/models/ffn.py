@@ -10,12 +10,12 @@ top-8 with sigmoid routing + bias-free norm-topk).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .common import CTX, Builder, axis_size, gelu_glu, shard, swiglu
+from .common import CTX, Builder, gelu_glu, shard, swiglu
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,8 +9,7 @@ O(1) state this is what makes the 500k-context decode cell runnable.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -6,8 +6,7 @@ the 500k-context decode cell is runnable (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

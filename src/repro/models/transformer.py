@@ -9,9 +9,8 @@ O(groups), not O(layers)), with configurable remat.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ absolute positions, not RoPE).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,2 +1,5 @@
-"""Batched serving engine."""
+"""Serving: batched token generation + batched homomorphic analytics."""
 from .engine import Engine, Request
+from .analytics import AnalyticsFrontend, AnalyticsRequest
+
+__all__ = ["Engine", "Request", "AnalyticsFrontend", "AnalyticsRequest"]

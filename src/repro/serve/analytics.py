@@ -1,0 +1,98 @@
+"""Analytics serving: the second request type next to token generation.
+
+Mirrors the token engine's continuous-batching contract (``add_request`` /
+``step`` / ``run_until_drained``) for homomorphic analytics over compressed
+fields.  Each ``step`` drains the queue, groups requests by
+``(op, stage directive, axis)`` and — via the query front-end — by field
+layout, and issues one jitted vmap call per group, so N concurrent requests
+over same-layout fields cost one dispatch instead of N.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.analytics import CostModel, query
+from repro.analytics.engine import BatchedAnalytics
+from repro.analytics.query import _group_signature
+from repro.core import Compressed, Encoded, Stage
+
+Field = Union[Compressed, Encoded]
+
+
+@dataclasses.dataclass
+class AnalyticsRequest:
+    """One analytical operation over one (possibly vector) compressed field."""
+
+    uid: int
+    fields: Union[Field, Sequence[Field]]  # single field, or components for
+                                           # divergence/curl
+    op: str = "mean"
+    stage: Union[Stage, str, int] = "auto"
+    axis: int = 0                          # derivative only
+    result: Any = None
+    result_stage: Optional[Stage] = None
+    error: Optional[str] = None            # set instead of result on rejection
+    done: bool = False
+
+
+class AnalyticsFrontend:
+    """Batching frontend for analytics requests (no model, no slots: the
+    batch axis is formed per step from whatever is queued)."""
+
+    def __init__(self, cost_model: Optional[CostModel] = None,
+                 max_batch: int = 256):
+        self.engine = BatchedAnalytics(cost_model)
+        self.max_batch = max_batch
+        self._queue: List[AnalyticsRequest] = []
+
+    def add_request(self, req: AnalyticsRequest) -> None:
+        self._queue.append(req)
+
+    # -- one serving step --------------------------------------------------
+    @staticmethod
+    def _reject(req: AnalyticsRequest, exc: Exception) -> AnalyticsRequest:
+        req.error = f"{type(exc).__name__}: {exc}"
+        req.done = True
+        return req
+
+    def step(self) -> List[AnalyticsRequest]:
+        """Serve up to ``max_batch`` queued requests; returns those finished.
+
+        Requests are grouped by (op, stage directive, axis, field layout), so
+        a rejection — infeasible stage, malformed fields — only affects its
+        own group; everything servable in the step is served.
+        """
+        batch, self._queue = self._queue[:self.max_batch], self._queue[self.max_batch:]
+        finished: List[AnalyticsRequest] = []
+        groups: Dict[Tuple, List[AnalyticsRequest]] = {}
+        for req in batch:
+            try:
+                sig = (req.op, str(req.stage), req.axis,
+                       _group_signature(req.fields, req.op))
+            except Exception as e:  # fields aren't compressed containers
+                finished.append(self._reject(req, e))
+                continue
+            groups.setdefault(sig, []).append(req)
+        for group in groups.values():
+            try:
+                res = query([r.fields for r in group], group[0].op,
+                            group[0].stage, axis=group[0].axis,
+                            engine=self.engine)
+            except Exception as e:
+                # reject only this group (bad op / infeasible stage / ...);
+                # every request is always either answered or errored
+                finished.extend(self._reject(r, e) for r in group)
+                continue
+            for req, value, stage in zip(group, res.values, res.stages):
+                req.result = value
+                req.result_stage = stage
+                req.done = True
+                finished.append(req)
+        return finished
+
+    def run_until_drained(self) -> List[AnalyticsRequest]:
+        finished: List[AnalyticsRequest] = []
+        while self._queue:
+            finished.extend(self.step())
+        return finished

@@ -30,10 +30,15 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Dict, Optional
 
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib lossless codec
+    zstandard = None
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +48,24 @@ from repro.core import Stage, encode as hsz_encode, hszp, homomorphic
 _FLOAT_KINDS = ("f",)
 
 
+def _lossless_codec():
+    """(codec name, compress fn) — zstd when available, else stdlib zlib."""
+    if zstandard is not None:
+        return "zstd", zstandard.ZstdCompressor(level=3).compress
+    return "zlib", lambda raw: zlib.compress(raw, 6)
+
+
+def _lossless_decompress(codec: str, blob: bytes) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not installed")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
+
+
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
              for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
@@ -66,7 +87,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, mode: str = "lossless",
         manifest = {"step": step, "mode": mode, "rel_eb": rel_eb,
                     "time": time.time(), "leaves": [],
                     "extra": extra_meta or {}}
-        cctx = zstandard.ZstdCompressor(level=3)
+        lossless_codec, lossless_compress = _lossless_codec()
         for i, (path, arr) in enumerate(zip(paths, host_leaves)):
             entry = {"path": path, "shape": list(arr.shape),
                      "dtype": str(arr.dtype), "file": f"arrays/{i}.bin"}
@@ -83,8 +104,8 @@ def save(ckpt_dir: str, step: int, tree: Any, *, mode: str = "lossless",
                 }
                 entry["ratio"] = float(arr.nbytes * 8) / float(hszp.serialized_bits(c))
             else:
-                blob = cctx.compress(arr.tobytes())
-                entry["codec"] = "zstd"
+                blob = lossless_compress(arr.tobytes())
+                entry["codec"] = lossless_codec
             with open(os.path.join(tmp, entry["file"]), "wb") as f:
                 f.write(blob)
             manifest["leaves"].append(entry)
@@ -129,7 +150,6 @@ def restore(ckpt_dir: str, step: int, target_tree: Any, *,
     by_path = {e["path"]: e for e in manifest["leaves"]}
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                     else [None] * len(leaves))
-    dctx = zstandard.ZstdDecompressor()
     out = []
     for path, ref, shd in zip(paths, leaves, shard_leaves):
         entry = by_path[path]
@@ -149,8 +169,8 @@ def restore(ckpt_dir: str, step: int, target_tree: Any, *,
             arr = np.asarray(hszp.decompress(c, Stage.F)).reshape(entry["shape"])
             arr = arr.astype(entry["dtype"])
         else:
-            arr = np.frombuffer(dctx.decompress(blob), dtype=entry["dtype"]
-                                ).reshape(entry["shape"])
+            arr = np.frombuffer(_lossless_decompress(entry["codec"], blob),
+                                dtype=entry["dtype"]).reshape(entry["shape"])
         if tuple(arr.shape) != tuple(np.shape(ref)):
             raise ValueError(f"shape mismatch for {path}")
         arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr

@@ -15,14 +15,14 @@ Two gradient-synchronization modes:
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.comm import hom_collectives as hom
 from . import optimizer as opt_lib
 
@@ -110,7 +110,7 @@ def make_train_step(model, opt_cfg: opt_lib.AdamWConfig, *,
         return P(axis)
 
     def train_step(state: TrainState, batch):
-        shmapped = jax.shard_map(
+        shmapped = compat.shard_map(
             functools.partial(local_grads),
             mesh=mesh,
             in_specs=(P(), P(), jax.tree.map(batch_spec, batch)),

@@ -1,13 +1,17 @@
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-# CI-friendly hypothesis profile: jit compilation makes examples expensive
-settings.register_profile(
-    "ci", max_examples=12, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("ci")
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # optional dep: property-based tests self-skip without it
+    settings = None
+else:
+    # CI-friendly hypothesis profile: jit compilation makes examples expensive
+    settings.register_profile(
+        "ci", max_examples=12, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,263 @@
+"""Batched analytics engine: planner matrix, vmap bit-exactness, serving.
+
+The feasibility matrix test is the drift guard demanded by the planner's
+contract: every (scheme, op, stage) cell is asserted against the actual
+raise/no-raise behavior of ``repro.core.homomorphic``, so the planner can
+never silently diverge from the ops.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import analytics
+from repro.core import (Stage, UnsupportedStageError, batch_stack,
+                        batch_unstack, by_name, homomorphic as H, hszp,
+                        hszp_nd, hszx, hszx_nd)
+from repro.serve import AnalyticsFrontend, AnalyticsRequest
+
+ALL = [hszp, hszx, hszp_nd, hszx_nd]
+UNIVARIATE = ["mean", "std", "derivative", "laplacian"]
+
+
+def _compress_many(comp, n, shape=(37, 53), rel_eb=1e-3, seed=0):
+    rng = np.random.default_rng(seed)
+    return [comp.compress(jnp.asarray(rng.normal(0, 1, shape).astype(np.float32)),
+                          rel_eb=rel_eb) for _ in range(n)]
+
+
+def _apply(op, c, stage, axis=0):
+    if op == "mean":
+        return H.mean(c, stage)
+    if op == "std":
+        return H.std(c, stage)
+    if op == "derivative":
+        return H.derivative(c, stage, axis)
+    if op == "laplacian":
+        return H.laplacian(c, stage)
+    if op == "divergence":
+        return H.divergence(list(c), stage)
+    return H.curl(list(c), stage)
+
+
+# -- feasibility matrix: planner pinned to op behavior ------------------------
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("op", analytics.OPS)
+@pytest.mark.parametrize("stage", list(Stage))
+def test_feasibility_matrix_matches_ops(comp, op, stage, field_2d):
+    """Every Table I cell: planner says feasible <=> the op does not raise."""
+    if op in analytics.MULTIVARIATE:
+        item = (comp.compress(jnp.asarray(field_2d), rel_eb=1e-3),
+                comp.compress(jnp.asarray(field_2d[::-1].copy()), rel_eb=1e-3))
+    else:
+        item = comp.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+    feasible = analytics.is_feasible(comp.scheme, op, stage)
+    if feasible:
+        out = _apply(op, item, stage)  # must not raise
+        assert all(np.isfinite(np.asarray(x)).all()
+                   for x in jax.tree.leaves(out))
+    else:
+        with pytest.raises(UnsupportedStageError):
+            _apply(op, item, stage)
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("op", analytics.OPS)
+def test_auto_stage_never_raises(comp, op, field_2d):
+    """stage="auto" always resolves to a stage the op actually supports."""
+    stage = analytics.plan_stage(comp.scheme, op, "auto")
+    assert stage == analytics.feasible_stages(comp.scheme, op)[0]
+    if op in analytics.MULTIVARIATE:
+        item = (comp.compress(jnp.asarray(field_2d), rel_eb=1e-3),) * 2
+    else:
+        item = comp.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+    _apply(op, item, stage)  # must not raise
+
+
+def test_explicit_infeasible_stage_raises():
+    with pytest.raises(UnsupportedStageError):
+        analytics.plan_stage(hszp.scheme, "mean", Stage.M)
+    with pytest.raises(UnsupportedStageError):
+        analytics.plan_stage(hszp.scheme, "derivative", "P")
+    assert analytics.plan_stage(hszp_nd.scheme, "derivative", "p") == Stage.P
+
+
+# -- batch stacking (core view) ------------------------------------------------
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_batch_stack_roundtrip(comp):
+    cs = _compress_many(comp, 3)
+    stacked = batch_stack(cs)
+    back = batch_unstack(stacked)
+    assert len(back) == 3
+    for orig, rt in zip(cs, back):
+        for a, b in zip(jax.tree.leaves(orig), jax.tree.leaves(rt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batch_stack_rejects_layout_mismatch():
+    a = hszp_nd.compress(jnp.zeros((32, 32)), abs_eb=1e-3)
+    b = hszp_nd.compress(jnp.zeros((16, 16)), abs_eb=1e-3)
+    with pytest.raises(ValueError):
+        batch_stack([a, b])
+    c = hszx_nd.compress(jnp.zeros((32, 32)), abs_eb=1e-3)
+    with pytest.raises(ValueError):
+        batch_stack([a, c])
+
+
+# -- batched execution: bit-exact vs per-field loops ---------------------------
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("op", UNIVARIATE)
+def test_batched_matches_per_field_all_stages(comp, op):
+    """vmap-batched result == jitted per-field loop, bit for bit, at every
+    feasible stage (batch of 5 also exercises bucket padding + slicing)."""
+    cs = _compress_many(comp, 5)
+    for stage in analytics.feasible_stages(comp.scheme, op):
+        res = analytics.query(cs, op, stage=stage)
+        fn = jax.jit(lambda c, s=stage, o=op: _apply(o, c, s))
+        for got, c in zip(res.values, cs):
+            ref = fn(c)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("comp", [hszp_nd, hszx_nd], ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("op", ["divergence", "curl"])
+def test_batched_multivariate_matches_per_field(comp, op):
+    rng = np.random.default_rng(1)
+    vecs = [tuple(comp.compress(
+        jnp.asarray(rng.normal(0, 1, (40, 44)).astype(np.float32)), rel_eb=1e-3)
+        for _ in range(2)) for _ in range(3)]
+    for stage in analytics.feasible_stages(comp.scheme, op):
+        res = analytics.query(vecs, op, stage=stage)
+        fn = jax.jit(lambda u, v, s=stage, o=op: _apply(o, (u, v), s))
+        for got, vec in zip(res.values, vecs):
+            ref = fn(*vec)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_batched_encoded_fields():
+    """Encoded (bit-packed) fields run batched without pre-decoding."""
+    comp = by_name("hszx_nd")
+    cs = _compress_many(comp, 3, shape=(48, 48))
+    bits = max(comp.max_bits(c) for c in cs)
+    es = [comp.encode(c, bits=bits) for c in cs]
+    res = analytics.query(es, "mean", stage="auto")
+    assert res.stages[0] == Stage.M  # metadata path: no decode at all
+    fn = jax.jit(H.mean, static_argnums=1)
+    for got, e in zip(res.values, es):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(fn(e, Stage.M)))
+
+
+def test_query_groups_mixed_layouts():
+    """One query over heterogeneous layouts: grouped, each at its own stage,
+    results in input order."""
+    nd = _compress_many(hszx_nd, 2, shape=(40, 40))
+    oned = _compress_many(hszp, 2, shape=(300,), seed=3)
+    res = analytics.query([nd[0], oned[0], nd[1], oned[1]], "mean")
+    assert res.n_batches == 2
+    assert [s.name for s in res.stages] == ["M", "P", "M", "P"]
+    for got, c in zip(res.values, [nd[0], oned[0], nd[1], oned[1]]):
+        stage = Stage.M if c.scheme.is_blockmean else Stage.P
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(jax.jit(H.mean, static_argnums=1)(c, stage)))
+
+
+def test_jit_cache_reused_across_queries():
+    eng = analytics.BatchedAnalytics()
+    cs = _compress_many(hszp_nd, 3)
+    eng.run(cs, "mean", Stage.P)
+    assert eng.cache_size == 1
+    eng.run(_compress_many(hszp_nd, 3, seed=9), "mean", Stage.P)
+    assert eng.cache_size == 1  # same (scheme, block, shape, op, stage) key
+    eng.run(cs, "std", Stage.P)
+    assert eng.cache_size == 2
+
+
+def test_derivative_axis_in_cache_key():
+    eng = analytics.BatchedAnalytics()
+    cs = _compress_many(hszp_nd, 2)
+    d0 = eng.run(cs, "derivative", Stage.P, axis=0)
+    d1 = eng.run(cs, "derivative", Stage.P, axis=1)
+    assert eng.cache_size == 2
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+# -- cost model ---------------------------------------------------------------
+
+def test_cost_model_calibration_changes_plan():
+    csv = "\n".join([
+        "name,us_per_call,derived",
+        "fig58/Ocean/mean/hszx_nd-m,50.0,GBps=1",
+        "fig58/Ocean/mean/hszx_nd-p,5.0,GBps=1",
+        "fig58/Ocean/mean/hszx_nd-q,80.0,GBps=1",
+        "fig58/Ocean/mean/hszx_nd-f,90.0,GBps=1",
+        "# comment rows and malformed rows are ignored",
+        "fig2/Ocean/hszp/eb0.01,0.0,ratio=3",
+        "bogus",
+    ])
+    cm = analytics.CostModel.from_benchmark_csv(csv)
+    assert cm.cost(hszx_nd.scheme, "mean", Stage.P) == 5.0
+    # calibrated: stage P measured cheaper than the metadata stage
+    assert analytics.plan_stage(hszx_nd.scheme, "mean", "auto", cm) == Stage.P
+    # uncalibrated rows fall back to cheapest-stage-first
+    assert analytics.plan_stage(hszx_nd.scheme, "std", "auto", cm) == Stage.P
+    # a calibrated plan still never picks an infeasible stage
+    assert analytics.plan_stage(hszp.scheme, "mean", "auto", cm) == Stage.P
+
+
+def test_cost_model_never_selects_infeasible():
+    cm = analytics.CostModel()
+    for comp in ALL:
+        for op in analytics.OPS:
+            for s in Stage:
+                cm.record(comp.scheme, op, s, 1e-6 if s == Stage.M else 1e3)
+    for comp in ALL:
+        for op in analytics.OPS:
+            stage = analytics.plan_stage(comp.scheme, op, "auto", cm)
+            assert analytics.is_feasible(comp.scheme, op, stage)
+
+
+# -- serving frontend ---------------------------------------------------------
+
+def test_analytics_frontend_drains_mixed_requests():
+    rng = np.random.default_rng(5)
+    comp = by_name("hszx_nd")
+    fields = [comp.compress(jnp.asarray(
+        rng.normal(0, 1, (40, 40)).astype(np.float32)), rel_eb=1e-3)
+        for _ in range(5)]
+    fe = AnalyticsFrontend()
+    for i, c in enumerate(fields):
+        fe.add_request(AnalyticsRequest(uid=i, fields=c, op="mean"))
+    fe.add_request(AnalyticsRequest(uid=10, fields=fields[0], op="std"))
+    fe.add_request(AnalyticsRequest(
+        uid=11, fields=(fields[0], fields[1]), op="curl"))
+    done = fe.run_until_drained()
+    assert len(done) == 7 and all(r.done for r in done)
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].result_stage == Stage.M
+    np.testing.assert_array_equal(
+        np.asarray(by_uid[0].result),
+        np.asarray(jax.jit(H.mean, static_argnums=1)(fields[0], Stage.M)))
+    assert by_uid[11].result.shape == (38, 38)
+    # 5x mean batched into one call + std + curl = 3 compiled programs
+    assert fe.engine.cache_size == 3
+
+
+def test_analytics_frontend_isolates_bad_requests():
+    """An infeasible request is rejected with an error; the rest of the
+    queue is still served."""
+    c = hszp.compress(jnp.asarray(np.linspace(0, 1, 200, dtype=np.float32)),
+                      rel_eb=1e-3)
+    fe = AnalyticsFrontend()
+    fe.add_request(AnalyticsRequest(uid=0, fields=c, op="mean"))
+    fe.add_request(AnalyticsRequest(uid=1, fields=c, op="derivative",
+                                    stage=Stage.P))  # infeasible: 1-D scheme
+    fe.add_request(AnalyticsRequest(uid=2, fields=c, op="std"))
+    done = {r.uid: r for r in fe.run_until_drained()}
+    assert len(done) == 3
+    assert done[1].error is not None and "derivative" in done[1].error
+    assert done[1].result is None
+    assert done[0].error is None and done[0].result is not None
+    assert done[2].error is None and done[2].result is not None

@@ -18,9 +18,11 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.comm import hom_collectives as hom
+from repro.launch.mesh import auto_axis_types
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
 world = 8
 
 # --- compressed psum vs exact mean -----------------------------------------
@@ -34,9 +36,9 @@ def body(g, r):
     return mean, new_r
 
 res0 = {k: np.zeros(v.shape[1:], np.float32) for k, v in grads.items()}
-f = jax.shard_map(body, mesh=mesh,
-                  in_specs=({"a": P("data"), "b": P("data")}, {"a": P(), "b": P()}),
-                  out_specs=(P(), P()), check_vma=False)
+f = compat.shard_map(body, mesh=mesh,
+                     in_specs=({"a": P("data"), "b": P("data")}, {"a": P(), "b": P()}),
+                     out_specs=(P(), P()), check=False)
 mean, resid = jax.jit(f)(
     {k: jnp.asarray(v).reshape((8, 1) + v.shape[1:]) for k, v in grads.items()},
     {k: jnp.asarray(v) for k, v in res0.items()})
@@ -57,8 +59,8 @@ for k in grads:
 x = rng.normal(0, 1.0, (8, 96)).astype(np.float32)
 def body2(xs):
     return hom.packed_allgather(xs[0], "data", bits=12)
-g = jax.shard_map(body2, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
-                  check_vma=False)
+g = compat.shard_map(body2, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
+                     check=False)
 gathered = np.asarray(jax.jit(g)(jnp.asarray(x).reshape(8, 1, 96)))
 gathered = gathered.reshape(8, 96)   # (world, 1, 96) -> per-source rows
 err = np.abs(gathered - x).max()
@@ -113,7 +115,7 @@ def test_stage1_stats_matches_numpy():
 def test_error_feedback_convergence():
     """With error feedback, the accumulated mean over steps converges to the
     true mean (residual carries what quantization dropped)."""
-    import jax, jax.numpy as jnp
+    import jax.numpy as jnp
     from repro.comm import hom_collectives as hom
     # single-worker world: psum over a size-1 axis via vmap-like trick
     rng = np.random.default_rng(1)

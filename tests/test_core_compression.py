@@ -2,9 +2,12 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, strategies as st
+try:
+    from hypothesis import given, strategies as st
+except ImportError:  # optional dep: property-based tests self-skip
+    from repro.testing import given, st
 
-from repro.core import (Scheme, Stage, by_name, encode, hszp, hszp_nd, hszx,
+from repro.core import (Stage, by_name, encode, hszp, hszp_nd, hszx,
                         hszx_nd)
 
 ALL = [hszp, hszx, hszp_nd, hszx_nd]

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
-from repro.data.scientific import ScientificStore, dataset_dims, synth_field
+from repro.data.scientific import ScientificStore, synth_field
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
 from repro.models import get_model
 from repro.serve import Engine, Request

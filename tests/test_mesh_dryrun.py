@@ -4,7 +4,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 import jax
 
@@ -26,7 +25,7 @@ def test_divisibility_fallback_rules():
     from repro.launch import mesh as mesh_lib
     # host mesh: 1 device -> every rule resolves without touching fake devices
     mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **mesh_lib.auto_axis_types(2))
     rules = mesh_lib.logical_rules(mesh)
     s = mesh_lib.spec_to_sharding(mesh, ("vocab", "embed"), (15, 7), rules)
     assert s.spec is not None  # resolved without exception

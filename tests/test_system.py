@@ -6,7 +6,7 @@ match full decompression within eps — the whole point of the paper.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import Stage, homomorphic as H, hszp_nd, hszx_nd
+from repro.core import Stage, homomorphic as H, hszx_nd
 from repro.data.scientific import ScientificStore
 
 

@@ -2,12 +2,10 @@
 import os
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
-from repro.configs.base import ShapeConfig
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
 from repro.models import get_model
 from repro.train import checkpoint as ckpt
