@@ -16,6 +16,7 @@ import jax
 
 from repro.core import (Compressed, Encoded, Stage, batch_stack, layout_key,
                         homomorphic as H)
+from repro.core import region as region_mod
 
 from .planner import MULTIVARIATE, OPS, CostModel, plan_stage
 
@@ -23,27 +24,34 @@ Field = Union[Compressed, Encoded]
 
 #: univariate ops: field -> array; ``derivative`` additionally takes an axis.
 _UNIVARIATE_OPS = {
-    "mean": lambda c, stage, axis: H.mean(c, stage),
-    "std": lambda c, stage, axis: H.std(c, stage),
-    "derivative": lambda c, stage, axis: H.derivative(c, stage, axis),
-    "laplacian": lambda c, stage, axis: H.laplacian(c, stage),
+    "mean": lambda c, stage, axis, region: H.mean(c, stage, region=region),
+    "std": lambda c, stage, axis, region: H.std(c, stage, region=region),
+    "derivative": lambda c, stage, axis, region: H.derivative(c, stage, axis,
+                                                             region=region),
+    "laplacian": lambda c, stage, axis, region: H.laplacian(c, stage,
+                                                            region=region),
 }
 _MULTIVARIATE_OPS = {
-    "divergence": lambda comps, stage: H.divergence(comps, stage),
-    "curl": lambda comps, stage: H.curl(comps, stage),
+    "divergence": lambda comps, stage, region: H.divergence(comps, stage,
+                                                            region=region),
+    "curl": lambda comps, stage, region: H.curl(comps, stage, region=region),
 }
 
 
 def batch_key(first: Field, op: str, stage: Stage, axis: int = 0,
-              n_components: int = 1, batch: int = 1) -> Tuple:
+              n_components: int = 1, batch: int = 1, region=None) -> Tuple:
     """Static signature of one compiled batched-analytics program.
 
     The batch size is part of the key: stacking happens *inside* the jitted
     program (one dispatch for stack + op, and XLA elides copies the op never
     reads — e.g. residuals under a stage-① metadata mean), so the program
-    arity depends on it.
+    arity depends on it.  The (normalized) region is static too: it decides
+    the gathered block set and every output shape.
     """
-    return layout_key(first) + (op, Stage(stage), axis, n_components, batch)
+    if region is not None:
+        region = region_mod.normalize_region(region, first.shape)
+    return layout_key(first) + (op, Stage(stage), axis, n_components, batch,
+                                region)
 
 
 class BatchedAnalytics:
@@ -71,7 +79,7 @@ class BatchedAnalytics:
 
     # -- compiled-program cache -------------------------------------------
     def _compiled(self, key: Tuple, op: str, stage: Stage, axis: int,
-                  n_components: int, batch: int):
+                  n_components: int, batch: int, region=None):
         fn = self._jitted.get(key)
         if fn is not None:
             self._jitted.move_to_end(key)
@@ -80,16 +88,17 @@ class BatchedAnalytics:
                 base = _MULTIVARIATE_OPS[op]
 
                 def run(*flat, _base=base, _stage=stage, _b=batch,
-                        _nc=n_components):
+                        _nc=n_components, _r=region):
                     comps = [batch_stack(flat[i * _b:(i + 1) * _b])
                              for i in range(_nc)]
-                    return jax.vmap(lambda *cs: _base(list(cs), _stage))(*comps)
+                    return jax.vmap(lambda *cs: _base(list(cs), _stage, _r))(*comps)
             else:
                 base = _UNIVARIATE_OPS[op]
 
-                def run(*fields, _base=base, _stage=stage, _axis=axis):
+                def run(*fields, _base=base, _stage=stage, _axis=axis,
+                        _r=region):
                     stacked = batch_stack(fields)
-                    return jax.vmap(lambda c: _base(c, _stage, _axis))(stacked)
+                    return jax.vmap(lambda c: _base(c, _stage, _axis, _r))(stacked)
 
             fn = jax.jit(run)
             self._jitted[key] = fn
@@ -103,14 +112,17 @@ class BatchedAnalytics:
 
     # -- execution ---------------------------------------------------------
     def run(self, fields: Sequence, op: str,
-            stage: Union[Stage, str, int] = "auto", *, axis: int = 0):
+            stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
+            region=None):
         """Run ``op`` over ``fields`` in one jitted, vmapped call.
 
         ``fields`` is a sequence of same-layout :class:`Compressed` /
         :class:`Encoded` fields — or, for ``divergence``/``curl``, a sequence
         of equal-length component tuples.  Returns the batched result (leading
         axis = ``len(fields)``); ``curl`` in 3-D returns a tuple of three
-        batched components, matching the unbatched op.
+        batched components, matching the unbatched op.  ``region`` restricts
+        every field to the same window (same-layout fields share the block
+        geometry, so one static region plan serves the whole batch).
         """
         if op not in OPS:
             raise ValueError(f"unknown operation {op!r}; expected one of {OPS}")
@@ -128,17 +140,21 @@ class BatchedAnalytics:
                 raise ValueError("all vector fields must have the same number "
                                  "of components")
             first = fields[0][0]
-            stage = plan_stage(first.scheme, op, stage, self.cost_model)
-            key = batch_key(first, op, stage, 0, n_comp, len(padded))
+            stage = plan_stage(first.scheme, op, stage, self.cost_model,
+                               region=region, field=first)
+            key = batch_key(first, op, stage, 0, n_comp, len(padded), region)
             # component-major flat args: (f0[c], f1[c], ...) for each c
             flat = tuple(f[i] for i in range(n_comp) for f in padded)
-            out = self._compiled(key, op, stage, 0, n_comp, len(padded))(*flat)
+            out = self._compiled(key, op, stage, 0, n_comp, len(padded),
+                                 region)(*flat)
         else:
             first = fields[0]
-            stage = plan_stage(first.scheme, op, stage, self.cost_model)
             d_axis = axis if op == "derivative" else 0
-            key = batch_key(first, op, stage, d_axis, 1, len(padded))
-            out = self._compiled(key, op, stage, d_axis, 1, len(padded))(*padded)
+            stage = plan_stage(first.scheme, op, stage, self.cost_model,
+                               region=region, field=first, axis=d_axis)
+            key = batch_key(first, op, stage, d_axis, 1, len(padded), region)
+            out = self._compiled(key, op, stage, d_axis, 1, len(padded),
+                                 region)(*padded)
         if len(padded) == b:
             return out
         return jax.tree.map(lambda x: x[:b], out)

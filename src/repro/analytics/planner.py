@@ -15,12 +15,22 @@ default "cheapest" is stage order (①<②<③<④ — monotone in decompression
 which matches the paper's measurements); a :class:`CostModel` calibrated from
 ``benchmarks/run.py`` CSV output refines the choice with measured
 microseconds per call.
+
+Region queries change the plan twice over.  Feasibility: the stage-① mean is
+only eps-exact over block-aligned windows, so unaligned regions drop ① from
+the feasible set.  Cost: each stage's measured full-field cost scales by the
+fraction of the field its region closure touches
+(:func:`repro.core.region.closure_fraction`) — per-stage closures differ for
+Lorenzo schemes (stage-② derivative bands vs stage-③ prefix hulls), so
+``stage="auto"`` can genuinely pick a different stage for a 1% window than
+for the full field.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
 
 from repro.core import Scheme, Stage, UnsupportedStageError
+from repro.core import region as region_mod
 
 OPS: Tuple[str, ...] = ("mean", "std", "derivative", "laplacian",
                         "divergence", "curl")
@@ -145,28 +155,51 @@ class CostModel:
     def cost(self, scheme: Scheme, op: str, stage: Stage) -> Optional[float]:
         return self.table.get((Scheme(scheme), op, Stage(stage)))
 
-    def cheapest(self, scheme: Scheme, op: str,
-                 stages: Sequence[Stage]) -> Stage:
+    def cheapest(self, scheme: Scheme, op: str, stages: Sequence[Stage],
+                 fractions: Optional[Mapping[Stage, float]] = None) -> Stage:
+        """Cheapest stage; ``fractions`` scale each stage's measured cost by
+        the share of the field its region closure touches (1.0 = full field)."""
         costs = {s: self.cost(scheme, op, s) for s in stages}
         if any(c is None for c in costs.values()):
             # incomplete row: fall back to stage order rather than mixing
             # measured numbers with fabricated defaults
             return min(stages, key=int)
+        if fractions is not None:
+            costs = {s: c * fractions.get(s, 1.0) for s, c in costs.items()}
         return min(stages, key=lambda s: (costs[s], int(s)))
 
 
 def plan_stage(scheme: Scheme, op: str,
                stage: Union[Stage, str, int] = "auto",
-               cost_model: Optional[CostModel] = None) -> Stage:
+               cost_model: Optional[CostModel] = None, *,
+               region=None, field=None, axis: int = 0) -> Stage:
     """Resolve the execution stage for ``op`` on ``scheme``.
 
     ``stage="auto"`` picks the cheapest feasible stage (never one that would
     raise :class:`UnsupportedStageError`); an explicit stage is validated
-    against the feasibility matrix.
+    against the feasibility matrix.  With ``region`` (and the queried
+    ``field`` for its geometry), stage ① is dropped/rejected for windows that
+    are not block-aligned, and calibrated costs scale with each stage's
+    region-closure size.
     """
     if stage != "auto":
-        return check_feasible(scheme, op, stage)
+        stage = check_feasible(scheme, op, stage)
+        if (stage == Stage.M and region is not None and field is not None
+                and not region_mod.region_aligned(field, region)):
+            raise UnsupportedStageError(
+                f"stage-1 {op} over a region needs a block-aligned window")
+        return stage
     stages = feasible_stages(scheme, op)
+    if region is not None and Stage.M in stages:
+        aligned = (field is not None
+                   and region_mod.region_aligned(field, region))
+        if not aligned:
+            stages = tuple(s for s in stages if s != Stage.M)
     if cost_model is not None:
-        return cost_model.cheapest(scheme, op, stages)
+        fractions = None
+        if region is not None and field is not None:
+            fractions = {s: region_mod.closure_fraction(field, op, s, region,
+                                                        axis=axis)
+                         for s in stages}
+        return cost_model.cheapest(scheme, op, stages, fractions)
     return stages[0]

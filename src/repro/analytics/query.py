@@ -53,6 +53,7 @@ def _unbatch(batched, i: int):
 
 def query(fields: Sequence[FieldOrVector], op: str,
           stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
+          region=None,
           cost_model: Optional[CostModel] = None,
           engine: Optional[BatchedAnalytics] = None) -> QueryResult:
     """Run one analytical operation over many compressed fields.
@@ -72,6 +73,13 @@ def query(fields: Sequence[FieldOrVector], op: str,
         :class:`Stage` / stage name validated against the feasibility matrix.
     axis:
         Differentiation axis for ``op="derivative"``.
+    region:
+        Optional per-axis window (``None`` / ``slice`` / ``(start, stop)``
+        per axis) applied to every field: only the covering blocks are
+        decoded and the result is the op over the window
+        (``repro.core.region``).  Region geometry feeds stage planning —
+        stage ① needs block-aligned windows, and calibrated costs scale by
+        each stage's closure size.
     """
     if op not in OPS:
         raise ValueError(f"unknown operation {op!r}; expected one of {OPS}")
@@ -89,8 +97,10 @@ def query(fields: Sequence[FieldOrVector], op: str,
         group = [fields[i] for i in indices]
         first = group[0][0] if op in MULTIVARIATE else group[0]
         planned = plan_stage(first.scheme, op, stage,
-                             cost_model or engine.cost_model)
-        batched = engine.run(group, op, planned, axis=axis)
+                             cost_model or engine.cost_model,
+                             region=region, field=first,
+                             axis=axis if op == "derivative" else 0)
+        batched = engine.run(group, op, planned, axis=axis, region=region)
         for j, i in enumerate(indices):
             values[i] = _unbatch(batched, j)
             stages[i] = planned

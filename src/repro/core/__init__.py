@@ -12,12 +12,15 @@ from .pipeline import (
     hszx,
     hszx_nd,
 )
-from . import blocking, decorrelate, encode, error_analysis, homomorphic, quantize
+from . import blocking, decorrelate, encode, error_analysis, homomorphic, quantize, region
+from .region import RegionPlan, normalize_region
 
 __all__ = [
     "Compressed", "Encoded", "Scheme", "Stage",
     "batch_stack", "batch_unstack", "batch_size", "layout_key",
     "HSZCompressor", "UnsupportedStageError", "by_name",
     "hszp", "hszp_nd", "hszx", "hszx_nd",
+    "RegionPlan", "normalize_region",
     "blocking", "decorrelate", "encode", "error_analysis", "homomorphic", "quantize",
+    "region",
 ]

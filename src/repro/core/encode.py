@@ -29,7 +29,10 @@ import jax.numpy as jnp
 from . import blocking
 from .stages import Compressed, Encoded, Scheme
 
-_MAGIC = b"HSZ1"
+# v2: padding values are stored at width 0 (stream length == the valid-only
+# `serialized_bits` accounting); v1 packed them at full block width, so v1
+# blobs must be rejected, not misaligned-decoded.
+_MAGIC = b"HSZ2"
 
 # ---------------------------------------------------------------------------
 # zigzag
@@ -60,16 +63,23 @@ def bitwidth_per_block(residuals: jax.Array, block: Tuple[int, ...]) -> jax.Arra
     return jnp.maximum(bw, 0).reshape(-1).astype(jnp.int32)
 
 
-def serialized_bits(bitwidths: jax.Array, valid_counts: jax.Array, *, meta_bits_per_block: int) -> jax.Array:
-    """Exact serialized size in bits: payload + per-block header.
+def serialized_bits(bitwidths: jax.Array, valid_counts: jax.Array, *,
+                    meta_bits_per_block: int, global_meta_bits: int = 0) -> jax.Array:
+    """Exact serialized size in bits: payload + per-block header + metadata.
 
     Per-block header = 6-bit width field (packed to a byte in `serialize`)
-    + scheme metadata (32-bit anchor/mean for HSZx-family, 0 for HSZp-family
-    whose anchor lives in the residual stream).
+    + per-block scheme metadata (32-bit block mean for HSZx-family, 0 for
+    HSZp-family).  ``global_meta_bits`` accounts metadata serialized once per
+    stream (the HSZp-family 32-bit anchor slot) so Lorenzo compression ratios
+    are not inflated relative to HSZx.
+
+    The payload sum accumulates in f32 (int32 overflows past 2^31 payload
+    bits — a ~1e8-element field at 16 bits/value; f32 keeps the sum exact up
+    to 2^24 and within ~1e-7 relative beyond, ample for size accounting).
     """
-    payload = jnp.sum(bitwidths * valid_counts)
+    payload = jnp.sum(bitwidths * valid_counts, dtype=jnp.float32)
     header = bitwidths.shape[0] * (8 + meta_bits_per_block)
-    return payload + header + 8 * 64  # fixed global header
+    return payload + header + global_meta_bits + 8 * 64  # + fixed global header
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +168,46 @@ def decode_device(e: Encoded) -> Compressed:
 
 
 # ---------------------------------------------------------------------------
+# region fast path: gather-unpack only the words covering a block subset
+# ---------------------------------------------------------------------------
+
+def unpack_gather(payload: jax.Array, *, word_idx, pos0, pos1, shift, bits: int) -> jax.Array:
+    """Unpack a *subset* of a uniform-width payload via static word gathers.
+
+    ``word_idx`` selects the only payload words read; ``pos0``/``pos1``/
+    ``shift`` (host-computed, static — see ``repro.core.region``) address each
+    requested value's low/high word within that gathered set.  Cost scales
+    with the gathered words, not the field.
+    """
+    m = int(np.asarray(pos0).shape[0])
+    if bits == 0:
+        return jnp.zeros((m,), jnp.uint32)
+    mask = jnp.uint32(0xFFFFFFFF if bits == 32 else (1 << bits) - 1)
+    words = jnp.concatenate([payload[jnp.asarray(word_idx)],
+                             jnp.zeros((1,), jnp.uint32)])
+    shift = jnp.asarray(shift)
+    lo = words[jnp.asarray(pos0)] >> shift
+    carry = shift > jnp.uint32(32 - bits)
+    hi_shift = jnp.where(carry, jnp.uint32(32) - shift, jnp.uint32(31))
+    hi = jnp.where(carry, words[jnp.asarray(pos1)] << hi_shift, jnp.uint32(0))
+    return (lo | hi) & mask
+
+
+def decode_region(e: Encoded, plan) -> Compressed:
+    """Region fast path: stage-2 decode of only ``plan``'s gathered blocks.
+
+    ``plan`` is a :class:`repro.core.region.RegionPlan`; the result is the
+    honest sub-field over the gathered blocks (metadata / bitwidths / valid
+    counts restricted to them), never the full residual array.
+    """
+    gi = plan.payload_gather(e.bits)
+    u = unpack_gather(e.payload, word_idx=gi.word_idx, pos0=gi.pos0,
+                      pos1=gi.pos1, shift=gi.shift, bits=e.bits)
+    residuals = unzigzag(u).reshape(plan.sub_padded_shape)
+    return plan.assemble(residuals, e)
+
+
+# ---------------------------------------------------------------------------
 # host serializer: exact per-block variable rate (the paper's storage format)
 # ---------------------------------------------------------------------------
 
@@ -166,7 +216,9 @@ def _np_pack_bits(values: np.ndarray, widths_per_value: np.ndarray, total_bits: 
     offs = np.zeros(values.shape[0], dtype=np.int64)
     np.cumsum(widths_per_value[:-1], out=offs[1:])
     nw = int(-(-total_bits // 32))
-    buf = np.zeros(nw + 1, dtype=np.uint64)
+    # +2: zero-width values (padding / constant blocks) sitting at the very
+    # end of the stream index up to word nw+1 with a zero contribution
+    buf = np.zeros(nw + 2, dtype=np.uint64)
     widx = offs >> 5
     shift = (offs & 31).astype(np.uint64)
     v = values.astype(np.uint64)
@@ -184,7 +236,7 @@ def _np_pack_bits(values: np.ndarray, widths_per_value: np.ndarray, total_bits: 
 
 def _np_unpack_bits(stream: np.ndarray, offs: np.ndarray, widths: np.ndarray) -> np.ndarray:
     """Gather per-value uint32 values with per-value bit offsets/widths."""
-    pad = np.concatenate([stream, np.zeros(1, np.uint32)]).astype(np.uint64)
+    pad = np.concatenate([stream, np.zeros(2, np.uint32)]).astype(np.uint64)
     widx = offs >> 5
     shift = (offs & 31).astype(np.uint64)
     raw = (pad[widx] | (pad[widx + 1] << np.uint64(32))) >> shift
@@ -196,19 +248,32 @@ _SCHEME_CODE = {Scheme.HSZP: 0, Scheme.HSZP_ND: 1, Scheme.HSZX: 2, Scheme.HSZX_N
 _CODE_SCHEME = {v: k for k, v in _SCHEME_CODE.items()}
 
 
+def _valid_mask_blocked(shape, block) -> np.ndarray:
+    """0/1 per-value validity in blocked (grid-major) order.
+
+    Padding values get width 0 in the serialized stream, so the stream length
+    equals the :func:`serialized_bits` accounting exactly (padding is never
+    information: every valid reconstruction is independent of it).
+    """
+    work_shape = shape if len(shape) == len(block) else (int(np.prod(shape)),)
+    mask = blocking.valid_mask(work_shape, block)
+    return np.asarray(blocking.to_blocked(jnp.asarray(mask.astype(np.int64)),
+                                          block)).reshape(-1)
+
+
 def serialize(c: Compressed) -> bytes:
     """Exact per-block fixed-rate byte stream (paper's storage format)."""
     residuals = np.asarray(c.residuals).reshape(-1)
-    u = np.asarray(zigzag(jnp.asarray(residuals)))
     bitwidths = np.asarray(c.bitwidths, dtype=np.uint8)
     metadata = np.asarray(c.metadata, dtype=np.int32)
     block_elems = c.block_elems
-    widths_per_value_blocked = np.repeat(bitwidths.astype(np.int64), block_elems)
+    vmask = _valid_mask_blocked(c.shape, c.block)
+    widths_per_value_blocked = np.repeat(bitwidths.astype(np.int64), block_elems) * vmask
     # residuals are spatial; reorder to blocked (grid-major) order
     blocked = np.asarray(
         blocking.to_blocked(jnp.asarray(residuals.reshape(c.padded_shape)), c.block)
     ).reshape(-1)
-    ub = np.asarray(zigzag(jnp.asarray(blocked)))
+    ub = np.asarray(zigzag(jnp.asarray(blocked))) * vmask.astype(np.uint32)
     total_bits = int(widths_per_value_blocked.sum())
     stream = _np_pack_bits(ub, widths_per_value_blocked, max(total_bits, 1))
 
@@ -247,6 +312,11 @@ def deserialize(data: bytes) -> Compressed:
     pshape = blocking.padded_shape(work_shape, block)
     block_elems = int(np.prod(block))
     widths = np.repeat(bitwidths.astype(np.int64), block_elems)
+    widths *= _valid_mask_blocked(shape, block)
+    if total_bits != int(widths.sum()):
+        raise ValueError(
+            f"corrupt HSZ stream: header claims {total_bits} payload bits, "
+            f"metadata implies {int(widths.sum())}")
     offs = np.zeros(widths.shape[0], dtype=np.int64)
     np.cumsum(widths[:-1], out=offs[1:])
     u = _np_unpack_bits(stream, offs, widths)

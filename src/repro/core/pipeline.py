@@ -138,12 +138,18 @@ class HSZCompressor:
 
     # -- accounting ---------------------------------------------------------
     def serialized_bits(self, c: Compressed | Encoded) -> jax.Array:
+        # HSZx-family stores a 32-bit mean per block; HSZp-family serializes
+        # one global 32-bit anchor slot (see `encode.serialize`) — previously
+        # unaccounted, inflating Lorenzo ratios relative to HSZx.
         meta_bits = 32 if self.scheme.is_blockmean else 0
+        global_bits = 0 if self.scheme.is_blockmean else 32
         return encode.serialized_bits(c.bitwidths, c.valid_counts,
-                                      meta_bits_per_block=meta_bits)
+                                      meta_bits_per_block=meta_bits,
+                                      global_meta_bits=global_bits)
 
     def compression_ratio(self, c: Compressed | Encoded) -> jax.Array:
-        orig_bits = c.n * 32
+        # float: n*32 overflows int32 for fields >= 2^26 elements
+        orig_bits = float(c.n) * 32.0
         return orig_bits / self.serialized_bits(c)
 
 

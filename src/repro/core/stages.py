@@ -174,8 +174,11 @@ class Encoded:
         return size
 
     def device_bytes(self) -> int:
-        """Actual on-device compressed bytes (payload + metadata)."""
-        return int(self.payload.size * 4 + self.metadata.size * 4 + self.bitwidths.size * 4)
+        """Actual on-device compressed bytes: every device-resident leaf
+        (payload + metadata + bitwidths + valid_counts + eps)."""
+        leaves = (self.payload, self.metadata, self.bitwidths,
+                  self.valid_counts, self.eps)
+        return int(sum(x.size * x.dtype.itemsize for x in leaves))
 
 
 # ===========================================================================

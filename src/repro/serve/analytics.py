@@ -12,12 +12,23 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.analytics import CostModel, query
+from repro.analytics import MULTIVARIATE, CostModel, query
 from repro.analytics.engine import BatchedAnalytics
 from repro.analytics.query import _group_signature
 from repro.core import Compressed, Encoded, Stage
+from repro.core import region as region_mod
 
 Field = Union[Compressed, Encoded]
+
+
+def _region_signature(req: "AnalyticsRequest"):
+    """Normalized region for grouping, so equivalent specs (slices vs tuples
+    vs numpy ints) batch into one dispatch.  Raises on malformed regions —
+    the caller's per-request guard turns that into a rejection."""
+    if req.region is None:
+        return None
+    first = req.fields[0] if req.op in MULTIVARIATE else req.fields
+    return region_mod.normalize_region(req.region, first.shape)
 
 
 @dataclasses.dataclass
@@ -30,6 +41,7 @@ class AnalyticsRequest:
     op: str = "mean"
     stage: Union[Stage, str, int] = "auto"
     axis: int = 0                          # derivative only
+    region: Any = None                     # per-axis window, or None for full
     result: Any = None
     result_stage: Optional[Stage] = None
     error: Optional[str] = None            # set instead of result on rejection
@@ -59,16 +71,16 @@ class AnalyticsFrontend:
     def step(self) -> List[AnalyticsRequest]:
         """Serve up to ``max_batch`` queued requests; returns those finished.
 
-        Requests are grouped by (op, stage directive, axis, field layout), so
-        a rejection — infeasible stage, malformed fields — only affects its
-        own group; everything servable in the step is served.
+        Requests are grouped by (op, stage directive, axis, region, field
+        layout), so a rejection — infeasible stage, malformed fields — only
+        affects its own group; everything servable in the step is served.
         """
         batch, self._queue = self._queue[:self.max_batch], self._queue[self.max_batch:]
         finished: List[AnalyticsRequest] = []
         groups: Dict[Tuple, List[AnalyticsRequest]] = {}
         for req in batch:
             try:
-                sig = (req.op, str(req.stage), req.axis,
+                sig = (req.op, str(req.stage), req.axis, _region_signature(req),
                        _group_signature(req.fields, req.op))
             except Exception as e:  # fields aren't compressed containers
                 finished.append(self._reject(req, e))
@@ -78,7 +90,7 @@ class AnalyticsFrontend:
             try:
                 res = query([r.fields for r in group], group[0].op,
                             group[0].stage, axis=group[0].axis,
-                            engine=self.engine)
+                            region=group[0].region, engine=self.engine)
             except Exception as e:
                 # reject only this group (bad op / infeasible stage / ...);
                 # every request is always either answered or errored

@@ -58,10 +58,92 @@ def test_serialize_roundtrip(comp, field_2d):
     blob = encode.serialize(c)
     c2 = encode.deserialize(blob)
     assert c2.scheme == c.scheme
-    np.testing.assert_array_equal(np.asarray(c2.residuals), np.asarray(c.residuals))
+    # padding values are not serialized (width 0: they carry no information,
+    # and counting them would break the valid-only size accounting), so the
+    # roundtrip contract is equality of every *valid* residual...
+    if comp.scheme.is_nd:
+        valid = tuple(slice(0, s) for s in c.shape)
+        np.testing.assert_array_equal(np.asarray(c2.residuals)[valid],
+                                      np.asarray(c.residuals)[valid])
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(c2.residuals).reshape(-1)[:c.n],
+            np.asarray(c.residuals).reshape(-1)[:c.n])
     np.testing.assert_array_equal(np.asarray(c2.metadata), np.asarray(c.metadata))
+    # ... and bit-identical decompressed data at every stage
+    np.testing.assert_array_equal(np.asarray(comp.decompress(c2, Stage.F)),
+                                  np.asarray(comp.decompress(c, Stage.F)))
+    np.testing.assert_array_equal(np.asarray(comp.decompress(c2, Stage.Q)),
+                                  np.asarray(comp.decompress(c, Stage.Q)))
     # exact size accounting: stream length matches serialized_bits payload
     assert len(blob) * 8 >= float(comp.serialized_bits(c)) - 64 * 8
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_serialized_bits_counts_all_metadata(comp, field_2d):
+    """The accounting formula pinned: payload + 8-bit width field per block +
+    per-block/global scheme metadata + the 64-byte global header.  The
+    HSZp-family 32-bit anchor slot used to be dropped, inflating Lorenzo
+    ratios relative to HSZx."""
+    c = comp.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+    payload = int(np.sum(np.asarray(c.bitwidths) * np.asarray(c.valid_counts)))
+    n_blocks = c.n_blocks
+    if comp.scheme.is_blockmean:
+        meta = 32 * n_blocks
+    else:
+        meta = 32  # global anchor slot, serialized once per stream
+    expect = payload + 8 * n_blocks + meta + 8 * 64
+    assert int(comp.serialized_bits(c)) == expect
+    # the actual serialized stream can only be smaller than the accounted
+    # bits by header-estimate slack, never by unaccounted metadata
+    blob = encode.serialize(c)
+    assert abs(len(blob) * 8 - expect) <= 64 * 8
+
+
+def test_cross_scheme_ratio_not_inflated(field_2d):
+    """Same data, same bound: the reported ratio must track actual serialized
+    bytes for every scheme (no scheme gets metadata for free)."""
+    for comp in ALL:
+        c = comp.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+        reported = float(comp.compression_ratio(c))
+        actual = (c.n * 4) / len(encode.serialize(c))
+        assert abs(reported - actual) / actual < 0.05, (comp.scheme, reported, actual)
+
+
+def test_device_bytes_counts_every_leaf(field_2d):
+    for comp in ALL:
+        c = comp.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+        e = comp.encode(c)
+        leaves = (e.payload, e.metadata, e.bitwidths, e.valid_counts, e.eps)
+        assert e.device_bytes() == sum(x.size * x.dtype.itemsize for x in leaves)
+        assert e.device_bytes() > e.payload.size * 4  # metadata never free
+
+
+def test_serialized_bits_no_int32_overflow():
+    """Accounting survives >2^31 payload bits (large-field regime)."""
+    n_blocks = 100_000
+    bw = jnp.full((n_blocks,), 30, jnp.int32)
+    vc = jnp.full((n_blocks,), 4096, jnp.int32)   # 1.2e10 payload bits
+    got = float(encode.serialized_bits(bw, vc, meta_bits_per_block=32))
+    expect = n_blocks * 30 * 4096 + n_blocks * 40 + 8 * 64
+    assert got > 0
+    assert abs(got - expect) / expect < 1e-6
+
+
+def test_deserialize_rejects_stale_or_corrupt_streams():
+    """v1 blobs (padding packed at full width) and length-inconsistent
+    streams must fail loudly, never misalign-decode."""
+    import struct
+    d = jnp.asarray(np.linspace(0, 1, 600, dtype=np.float32))
+    c = hszp.compress(d, rel_eb=1e-3)
+    blob = encode.serialize(c)
+    with pytest.raises(ValueError):
+        encode.deserialize(b"HSZ1" + blob[4:])   # pre-v2 magic
+    off = struct.calcsize("<4sBBBdi") + 8 * 2 + c.n_blocks + 4  # total_bits slot
+    tampered = bytearray(blob)
+    struct.pack_into("<q", tampered, off, 1)
+    with pytest.raises(ValueError):
+        encode.deserialize(bytes(tampered))
 
 
 @pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
