@@ -16,10 +16,15 @@ Paper figure -> benchmark:
 Framework-level (beyond paper):
   checkpoint bytes + homomorphic validation  -> fw_checkpoint
   compressed-collective wire bytes           -> fw_collective_bytes
+  fused op sets vs sequential single ops     -> fw_fused_analytics
+
+``--json PATH`` additionally writes the fused-analytics rows as machine-
+readable JSON (name / us / speedup) for CI regression gating.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Callable, List, Tuple
 
@@ -32,6 +37,7 @@ from repro.core import region as region_mod
 from repro.data.scientific import dataset_dims, synth_field
 
 ROWS: List[Tuple[str, float, str]] = []
+FUSED_JSON: List[dict] = []
 SCALE = 8
 REPS = 3
 
@@ -244,6 +250,65 @@ def fw_batched_analytics():
                 f"batch={batch} stage={stage.name}")
 
 
+def fw_fused_analytics():
+    """Fused op sets vs sequential single-op queries at one shared stage.
+
+    Same fields, same ops, same stage: the fused program lowers the whole op
+    set onto ONE stage reconstruction (``repro.core.oplib``) and issues one
+    dispatch, where the sequential baseline re-decodes per op and dispatches
+    per op.  The fields are *encoded* (bit-packed) — the paper's serving
+    representation — so every sequential op pays the payload unpack the
+    fused program pays once.  Both sides run through the batched engine
+    (warm jit cache), so the speedup isolates exactly what fusion saves:
+    the repeated decode + recorrelation prelude and the per-op dispatch
+    overhead.  Rows cover both shared stages (② and ③): how much fusion
+    saves is stage-dependent — stage ③ shares the *whole* recorrelation
+    pass, stage ② only the decode plus whatever intermediates the set has
+    in common — and the calibrated joint planner exists precisely to route
+    an op set to the stage where the shared prelude wins.  Like
+    ``fw_batched_analytics`` this pins the serving regime (many small
+    same-layout fields) rather than scaling with ``--scale``.
+    """
+    from repro.analytics import BatchedAnalytics
+
+    def best_of(fn, *args, k=7):
+        """Min-of-k microseconds: contention only ever inflates a timing, so
+        the minimum is the robust estimator the 1.2x CI gate needs."""
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(max(k, REPS)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    batch, tile = 32, (64, 64)
+    ops = ("mean", "std", "laplacian")
+    for name in ("hszp_nd", "hszx_nd"):
+        comp = by_name(name)
+        cs = [comp.compress(jnp.asarray(synth_field("Ocean", 0, tile, seed=i)),
+                            rel_eb=1e-2) for i in range(batch)]
+        bits = max(comp.max_bits(c) for c in cs)
+        fields = [comp.encode(c, bits=bits) for c in cs]
+        eng = BatchedAnalytics()
+        for stage, tag in ((Stage.P, "p"), (Stage.Q, "q")):
+            us_fused = best_of(lambda fs, s=stage: eng.run(fs, ops, s),
+                               fields)
+
+            def sequential(fs, s=stage):
+                return [eng.run(fs, op, s) for op in ops]
+
+            us_seq = best_of(sequential, fields)
+            speedup = us_seq / us_fused
+            row_name = f"fw_fused_analytics/{name}/{'+'.join(ops)}-{tag}"
+            row(row_name, us_fused,
+                f"seq_us={us_seq:.1f} speedup={speedup:.2f}x batch={batch}")
+            FUSED_JSON.append({"name": row_name, "scheme": name,
+                               "stage": stage.name, "us": round(us_fused, 1),
+                               "speedup": round(speedup, 3)})
+
+
 def fw_region_analytics():
     """Region queries vs full-field queries at the same (scheme, op, stage).
 
@@ -303,8 +368,8 @@ def fw_collective_bytes():
 
 BENCHES = [fig2_compression_ratio, fig34_decompression, fig58_statistics,
            fig910_differentiation, fig1112_multivariate, table4_breakdown,
-           table5_op_errors, fw_batched_analytics, fw_region_analytics,
-           fw_checkpoint, fw_collective_bytes]
+           table5_op_errors, fw_batched_analytics, fw_fused_analytics,
+           fw_region_analytics, fw_checkpoint, fw_collective_bytes]
 
 
 def main() -> None:
@@ -313,6 +378,9 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=8)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write fw_fused_analytics rows (name, us, speedup) "
+                         "as JSON, e.g. BENCH_fused.json for the CI gate")
     args = ap.parse_args()
     SCALE, REPS = args.scale, args.reps
     print("name,us_per_call,derived")
@@ -325,6 +393,9 @@ def main() -> None:
         while ROWS:
             name, us, derived = ROWS.pop(0)
             print(f"{name},{us:.1f},{derived}")
+    if args.json is not None:
+        with open(args.json, "w") as f:
+            json.dump(FUSED_JSON, f, indent=2)
 
 
 if __name__ == "__main__":

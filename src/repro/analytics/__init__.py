@@ -4,24 +4,29 @@ The paper's Table I says *which* decompression stage each analytical
 operation can run at; its §V timings say stage choice is where the speedups
 live.  This package turns that into an engine:
 
-* :mod:`repro.analytics.planner` — the feasibility matrix as data, plus a
-  cost model (optionally calibrated from ``benchmarks/run.py`` CSV) that
-  picks the cheapest feasible stage automatically;
+* :mod:`repro.analytics.planner` — the feasibility matrix as data (derived
+  from the declarative op registry in :mod:`repro.core.oplib`), plus a cost
+  model (optionally calibrated from ``benchmarks/run.py`` CSV) that picks
+  the cheapest feasible stage automatically — jointly over an op *set* via
+  ``plan_stages`` (one shared stage minimizing total cost);
 * :mod:`repro.analytics.engine` — stacks same-layout compressed fields into
   a leading batch axis (``repro.core.batch_stack``) and runs the homomorphic
-  op once, ``vmap``-ed and ``jit``-ed, with a compilation cache keyed on
-  ``(scheme, block, shape, op, stage)``;
-* :mod:`repro.analytics.query` — ``query(fields, op=..., stage="auto")``:
-  groups arbitrary field collections by layout, plans each group, executes
-  batched, and returns results in input order.
+  op set once, ``vmap``-ed and ``jit``-ed, with a compilation cache keyed on
+  ``(scheme, block, shape, frozen op-set, stage, region)``;
+* :mod:`repro.analytics.query` — ``query(fields, op_or_ops, stage="auto")``:
+  groups arbitrary field collections by layout, plans each group once,
+  executes batched — one compiled call per layout group for a fused op set —
+  and returns results in input order.
 """
-from .planner import (CostModel, FEASIBILITY, MULTIVARIATE, OPS, as_stage,
-                      check_feasible, feasible_stages, is_feasible, plan_stage)
+from .planner import (CostModel, FEASIBILITY, MULTIVARIATE, OPS,
+                      StageSetPlan, as_stage, check_feasible, feasible_stages,
+                      is_feasible, plan_stage, plan_stages)
 from .engine import BatchedAnalytics, batch_key
 from .query import QueryResult, query
 
 __all__ = [
     "OPS", "MULTIVARIATE", "FEASIBILITY", "as_stage",
     "feasible_stages", "is_feasible", "check_feasible", "plan_stage",
+    "plan_stages", "StageSetPlan",
     "CostModel", "BatchedAnalytics", "batch_key", "QueryResult", "query",
 ]

@@ -1,69 +1,69 @@
-"""Batch executor: stack same-layout fields, run one jitted vmap per op.
+"""Batch executor: stack same-layout fields, run one jitted vmap per op set.
 
 Many timesteps/variables of a scientific dataset share one compression
 layout, so their homomorphic analytics compile to a *single* XLA program
-with a leading batch axis instead of one dispatch per field.  The jit cache
-is keyed on ``(scheme, block, shape, op, stage, container, axis, batch)`` —
-the full static signature of the compiled program — so repeated queries over
-rolling data reuse the compiled executable.
+with a leading batch axis instead of one dispatch per field.  Op *sets* fuse
+further: ``run(fields, ["mean", "std", "laplacian"])`` compiles one program
+whose shared stage-reconstruction prelude (``repro.core.oplib``) feeds every
+postlude — one decode pass, a dict of batched results.  The jit cache is
+keyed on ``(scheme, block, shape, frozen op-set, stage, region, axis,
+batch)`` — the full static signature of the compiled program — and the
+op-set component is canonically ordered, so ``["std", "mean"]`` and
+``["mean", "std"]`` hit the same entry.
+
+Stage resolution is layered, not repeated: the engine plans only when given
+``stage="auto"`` (or another directive string).  A resolved :class:`Stage`
+or :class:`StageSetPlan` — e.g. from :func:`repro.analytics.query.query`,
+which already planned the group — is executed as-is; infeasible explicit
+stages still raise at trace time from the ops themselves.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Sequence, Tuple, Union
+from typing import Mapping, Sequence, Tuple, Union
 
 import jax
 
 from repro.core import (Compressed, Encoded, Stage, batch_stack, layout_key,
-                        homomorphic as H)
+                        oplib)
 from repro.core import region as region_mod
 
-from .planner import MULTIVARIATE, OPS, CostModel, plan_stage
+from .planner import CostModel, StageSetPlan, plan_stages
 
 Field = Union[Compressed, Encoded]
 
-#: univariate ops: field -> array; ``derivative`` additionally takes an axis.
-_UNIVARIATE_OPS = {
-    "mean": lambda c, stage, axis, region: H.mean(c, stage, region=region),
-    "std": lambda c, stage, axis, region: H.std(c, stage, region=region),
-    "derivative": lambda c, stage, axis, region: H.derivative(c, stage, axis,
-                                                             region=region),
-    "laplacian": lambda c, stage, axis, region: H.laplacian(c, stage,
-                                                            region=region),
-}
-_MULTIVARIATE_OPS = {
-    "divergence": lambda comps, stage, region: H.divergence(comps, stage,
-                                                            region=region),
-    "curl": lambda comps, stage, region: H.curl(comps, stage, region=region),
-}
+StageLike = Union[Stage, str, int, StageSetPlan, Mapping[str, Stage]]
 
 
-def batch_key(first: Field, op: str, stage: Stage, axis: int = 0,
-              n_components: int = 1, batch: int = 1, region=None) -> Tuple:
+def batch_key(first: Field, ops: Union[str, Sequence[str]], stage: Stage,
+              axis: int = 0, n_components: int = 1, batch: int = 1,
+              region=None) -> Tuple:
     """Static signature of one compiled batched-analytics program.
 
     The batch size is part of the key: stacking happens *inside* the jitted
-    program (one dispatch for stack + op, and XLA elides copies the op never
-    reads — e.g. residuals under a stage-① metadata mean), so the program
-    arity depends on it.  The (normalized) region is static too: it decides
-    the gathered block set and every output shape.
+    program (one dispatch for stack + op set, and XLA elides copies the ops
+    never read — e.g. residuals under a stage-① metadata mean), so the
+    program arity depends on it.  The (normalized) region is static too: it
+    decides the gathered block set and every output shape.  The op set is
+    canonically ordered — the key is order-insensitive.
     """
     if region is not None:
         region = region_mod.normalize_region(region, first.shape)
-    return layout_key(first) + (op, Stage(stage), axis, n_components, batch,
-                                region)
+    names = oplib.canonical_ops(ops)
+    return layout_key(first) + (names, Stage(stage), axis, n_components,
+                                batch, region)
 
 
 class BatchedAnalytics:
-    """Executes one homomorphic op over a batch of same-layout fields.
+    """Executes one homomorphic op set over a batch of same-layout fields.
 
     One instance owns one jit cache; module-level :data:`default_engine`
     is shared by :func:`repro.analytics.query.query` and the serve frontend.
 
     ``bucket_batches`` pads each batch to the next power of two (repeating
     the last field; padded results are sliced off) so a serving queue with
-    fluctuating depth compiles O(log max_batch) programs per op instead of
-    one per distinct length.  The cache is LRU-bounded by ``cache_limit``.
+    fluctuating depth compiles O(log max_batch) programs per op set instead
+    of one per distinct length.  The cache is LRU-bounded by ``cache_limit``.
     """
 
     def __init__(self, cost_model: CostModel | None = None, *,
@@ -78,86 +78,120 @@ class BatchedAnalytics:
         return 1 << (n - 1).bit_length()
 
     # -- compiled-program cache -------------------------------------------
-    def _compiled(self, key: Tuple, op: str, stage: Stage, axis: int,
-                  n_components: int, batch: int, region=None):
+    def _compiled(self, key: Tuple, ops: Tuple[str, ...], stage: Stage,
+                  axis: int, n_components: int, batch: int, region=None):
         fn = self._jitted.get(key)
         if fn is not None:
             self._jitted.move_to_end(key)
+            return fn
+        if oplib.is_vector_ops(ops):
+            def run(*flat, _ops=ops, _stage=stage, _b=batch,
+                    _nc=n_components, _r=region, _axis=axis):
+                comps = [batch_stack(flat[i * _b:(i + 1) * _b])
+                         for i in range(_nc)]
+                return jax.vmap(lambda *cs: oplib.compute(
+                    list(cs), _ops, _stage, axis=_axis, region=_r))(*comps)
         else:
-            if op in MULTIVARIATE:
-                base = _MULTIVARIATE_OPS[op]
+            def run(*fields, _ops=ops, _stage=stage, _r=region, _axis=axis):
+                stacked = batch_stack(fields)
+                return jax.vmap(lambda c: oplib.compute(
+                    c, _ops, _stage, axis=_axis, region=_r))(stacked)
 
-                def run(*flat, _base=base, _stage=stage, _b=batch,
-                        _nc=n_components, _r=region):
-                    comps = [batch_stack(flat[i * _b:(i + 1) * _b])
-                             for i in range(_nc)]
-                    return jax.vmap(lambda *cs: _base(list(cs), _stage, _r))(*comps)
-            else:
-                base = _UNIVARIATE_OPS[op]
-
-                def run(*fields, _base=base, _stage=stage, _axis=axis,
-                        _r=region):
-                    stacked = batch_stack(fields)
-                    return jax.vmap(lambda c: _base(c, _stage, _axis, _r))(stacked)
-
-            fn = jax.jit(run)
-            self._jitted[key] = fn
-            while len(self._jitted) > self.cache_limit:
-                self._jitted.popitem(last=False)
+        fn = jax.jit(run)
+        self._jitted[key] = fn
+        while len(self._jitted) > self.cache_limit:
+            self._jitted.popitem(last=False)
         return fn
 
     @property
     def cache_size(self) -> int:
         return len(self._jitted)
 
+    # -- stage resolution ---------------------------------------------------
+    def _resolve(self, scheme, names: Tuple[str, ...], stage: StageLike,
+                 region, field, axis: int) -> StageSetPlan:
+        """Plan only when asked to: a resolved Stage / StageSetPlan / per-op
+        mapping from an upper layer is executed as-is (no double planning)."""
+        if isinstance(stage, StageSetPlan):
+            return stage
+        if isinstance(stage, Stage):
+            return StageSetPlan(names, tuple((op, stage) for op in names),
+                                stage)
+        if isinstance(stage, Mapping):
+            stages = tuple((op, Stage(stage[op])) for op in names)
+            resolved = {s for _, s in stages}
+            fused = resolved.pop() if len(resolved) == 1 else None
+            return StageSetPlan(names, stages, fused)
+        return plan_stages(scheme, names, stage, self.cost_model,
+                           region=region, field=field, axis=axis)
+
     # -- execution ---------------------------------------------------------
-    def run(self, fields: Sequence, op: str,
-            stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
-            region=None):
-        """Run ``op`` over ``fields`` in one jitted, vmapped call.
+    def run(self, fields: Sequence, ops: Union[str, Sequence[str]],
+            stage: StageLike = "auto", *, axis: int = 0, region=None):
+        """Run an op (or fused op set) over ``fields`` in jitted vmapped calls.
 
         ``fields`` is a sequence of same-layout :class:`Compressed` /
-        :class:`Encoded` fields — or, for ``divergence``/``curl``, a sequence
-        of equal-length component tuples.  Returns the batched result (leading
-        axis = ``len(fields)``); ``curl`` in 3-D returns a tuple of three
-        batched components, matching the unbatched op.  ``region`` restricts
-        every field to the same window (same-layout fields share the block
-        geometry, so one static region plan serves the whole batch).
+        :class:`Encoded` fields — or, for vector op sets
+        (``divergence``/``curl``), a sequence of equal-length component
+        tuples.  A single op name returns the batched result (leading axis =
+        ``len(fields)``); an op *set* returns ``{op: batched result}`` from
+        one compiled program per fused plan (falling back to one program per
+        op when the plan is unfused).  ``curl`` in 3-D and ``gradient``
+        return a tuple of batched components, matching the unbatched ops.
+        ``region`` restricts every field to the same window (same-layout
+        fields share the block geometry, so one static region plan serves
+        the whole batch).
         """
-        if op not in OPS:
-            raise ValueError(f"unknown operation {op!r}; expected one of {OPS}")
+        single = isinstance(ops, str)
+        names = oplib.canonical_ops(ops)
         if not fields:
             raise ValueError("empty batch")
 
-        b = len(fields)
-        padded = list(fields)
-        if self.bucket_batches:
-            padded += [fields[-1]] * (self._bucket(b) - b)
-
-        if op in MULTIVARIATE:
+        vector = oplib.is_vector_ops(names)
+        if vector:
             n_comp = len(fields[0])
             if any(len(f) != n_comp for f in fields):
                 raise ValueError("all vector fields must have the same number "
                                  "of components")
             first = fields[0][0]
-            stage = plan_stage(first.scheme, op, stage, self.cost_model,
-                               region=region, field=first)
-            key = batch_key(first, op, stage, 0, n_comp, len(padded), region)
+        else:
+            n_comp = 1
+            first = fields[0]
+        d_axis = axis if any(oplib.OPS[n].needs_axis for n in names) else 0
+
+        plan = self._resolve(first.scheme, names, stage, region, first, d_axis)
+        if plan.fused is None:
+            out = {op: self.run(fields, op, plan.stage_of(op),
+                                axis=axis, region=region)
+                   for op in names}
+            return out[names[0]] if single else out
+
+        b = len(fields)
+        padded = list(fields)
+        if self.bucket_batches:
+            padded += [fields[-1]] * (self._bucket(b) - b)
+        key = batch_key(first, names, plan.fused, d_axis, n_comp,
+                        len(padded), region)
+        fresh = key not in self._jitted
+        fn = self._compiled(key, names, plan.fused, d_axis, n_comp,
+                            len(padded), region)
+        if vector:
             # component-major flat args: (f0[c], f1[c], ...) for each c
             flat = tuple(f[i] for i in range(n_comp) for f in padded)
-            out = self._compiled(key, op, stage, 0, n_comp, len(padded),
-                                 region)(*flat)
         else:
-            first = fields[0]
-            d_axis = axis if op == "derivative" else 0
-            stage = plan_stage(first.scheme, op, stage, self.cost_model,
-                               region=region, field=first, axis=d_axis)
-            key = batch_key(first, op, stage, d_axis, 1, len(padded), region)
-            out = self._compiled(key, op, stage, d_axis, 1, len(padded),
-                                 region)(*padded)
-        if len(padded) == b:
-            return out
-        return jax.tree.map(lambda x: x[:b], out)
+            flat = tuple(padded)
+        try:
+            out = fn(*flat)
+        except Exception:
+            # an infeasible explicit stage raises at first trace; don't leave
+            # a permanently-raising program in the cache (but keep warm
+            # entries through transient runtime failures)
+            if fresh:
+                self._jitted.pop(key, None)
+            raise
+        if len(padded) != b:
+            out = jax.tree.map(lambda x: x[:b], out)
+        return out[names[0]] if single else out
 
 
 #: process-wide engine (shared jit cache) used by the query front-end.

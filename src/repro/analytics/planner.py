@@ -16,6 +16,13 @@ which matches the paper's measurements); a :class:`CostModel` calibrated from
 ``benchmarks/run.py`` CSV output refines the choice with measured
 microseconds per call.
 
+``plan_stages`` plans an *op set* jointly: it picks one shared stage
+minimizing the **total** cost over the feasible intersection, so a fused
+query pays a single stage reconstruction for every op (DESIGN.md §6).  When
+the intersection is empty — or a calibrated model says independent per-op
+stages are strictly cheaper even without the shared-decode saving — it falls
+back to per-op planning (``StageSetPlan.fused is None``).
+
 Region queries change the plan twice over.  Feasibility: the stage-① mean is
 only eps-exact over block-aligned windows, so unaligned regions drop ① from
 the feasible set.  Cost: each stage's measured full-field cost scales by the
@@ -27,31 +34,24 @@ for the full field.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
 
-from repro.core import Scheme, Stage, UnsupportedStageError
+from repro.core import Scheme, Stage, UnsupportedStageError, oplib
 from repro.core import region as region_mod
 
-OPS: Tuple[str, ...] = ("mean", "std", "derivative", "laplacian",
-                        "divergence", "curl")
+#: planned operations, in the op registry's canonical order.
+OPS: Tuple[str, ...] = tuple(oplib.OPS)
 #: ops that take a sequence of component fields instead of a single field
-MULTIVARIATE = frozenset({"divergence", "curl"})
-
-_STENCILS = ("derivative", "laplacian", "divergence", "curl")
+MULTIVARIATE = frozenset(
+    name for name, spec in oplib.OPS.items() if spec.arity == "vector")
 
 
 def _build_matrix() -> Dict[Tuple[Scheme, str], Tuple[Stage, ...]]:
-    matrix: Dict[Tuple[Scheme, str], Tuple[Stage, ...]] = {}
-    for scheme in Scheme:
-        matrix[(scheme, "mean")] = tuple(
-            ([Stage.M] if scheme.is_blockmean else [])
-            + [Stage.P, Stage.Q, Stage.F])
-        matrix[(scheme, "std")] = (Stage.P, Stage.Q, Stage.F)
-        stencil = tuple(([Stage.P] if scheme.is_nd else [])
-                        + [Stage.Q, Stage.F])
-        for op in _STENCILS:
-            matrix[(scheme, op)] = stencil
-    return matrix
+    """Table I as data, derived from the op registry's own feasibility rows
+    (one source of truth: :data:`repro.core.oplib.OPS`)."""
+    return {(scheme, name): spec.feasible(scheme)
+            for scheme in Scheme for name, spec in oplib.OPS.items()}
 
 
 #: Table I: (scheme, op) -> stages the op is defined at, cheapest first.
@@ -203,3 +203,103 @@ def plan_stage(scheme: Scheme, op: str,
                          for s in stages}
         return cost_model.cheapest(scheme, op, stages, fractions)
     return stages[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSetPlan:
+    """Resolved execution plan for one op set.
+
+    ``fused`` is the single shared stage every op runs at (one stage
+    reconstruction for the whole set), or ``None`` when the planner fell
+    back to independent per-op stages; ``stages`` maps each op to its
+    resolved stage either way.
+    """
+
+    ops: Tuple[str, ...]
+    stages: Tuple[Tuple[str, Stage], ...]
+    fused: Optional[Stage]
+
+    def stage_of(self, op: str) -> Stage:
+        return dict(self.stages)[op]
+
+    @property
+    def n_dispatches(self) -> int:
+        """Compiled calls one engine dispatch of this plan issues."""
+        return 1 if self.fused is not None else len(self.ops)
+
+
+def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
+                stage: Union[Stage, str, int] = "auto",
+                cost_model: Optional[CostModel] = None, *,
+                region=None, field=None, axis: int = 0) -> StageSetPlan:
+    """Jointly resolve the execution stage(s) for an op *set*.
+
+    An explicit stage is validated against every op in the set.  With
+    ``stage="auto"`` the planner picks the shared stage minimizing the
+    *total* (region-closure-scaled) cost over the feasible intersection —
+    fusing the set onto one stage reconstruction — and falls back to
+    independent per-op stages only when the intersection is empty, or when a
+    fully calibrated cost model prices the per-op optima strictly below the
+    best shared stage (conservative: measured per-op costs each include
+    their own decode, so this comparison understates the fusion saving).
+
+    ``plan_stages(scheme, [op])`` always agrees with ``plan_stage``.
+    """
+    names = oplib.canonical_ops(ops)
+    if stage != "auto":
+        resolved = as_stage(stage)
+        for op in names:
+            check_feasible(scheme, op, resolved)
+        if (resolved == Stage.M and region is not None and field is not None
+                and not region_mod.region_aligned(field, region)):
+            raise UnsupportedStageError(
+                f"stage-1 {names[0]} over a region needs a block-aligned window")
+        return StageSetPlan(names, tuple((op, resolved) for op in names),
+                            resolved)
+
+    feas: Dict[str, Tuple[Stage, ...]] = {}
+    for op in names:
+        stages = feasible_stages(scheme, op)
+        if region is not None and Stage.M in stages:
+            aligned = (field is not None
+                       and region_mod.region_aligned(field, region))
+            if not aligned:
+                stages = tuple(s for s in stages if s != Stage.M)
+        feas[op] = stages
+
+    def per_op_plan() -> Tuple[Tuple[str, Stage], ...]:
+        return tuple(
+            (op, plan_stage(scheme, op, "auto", cost_model,
+                            region=region, field=field, axis=axis))
+            for op in names)
+
+    inter = tuple(s for s in Stage if all(s in f for f in feas.values()))
+    if not inter:
+        return StageSetPlan(names, per_op_plan(), None)
+
+    calibrated = cost_model is not None and all(
+        cost_model.cost(scheme, op, s) is not None
+        for op in names for s in feas[op])
+    if calibrated:
+        fractions: Dict[Tuple[str, Stage], float] = {}
+
+        def cost(op: str, s: Stage) -> float:
+            key = (op, s)
+            if key not in fractions:
+                fractions[key] = (
+                    1.0 if region is None or field is None
+                    else region_mod.closure_fraction(field, op, s, region,
+                                                     axis=axis))
+            return cost_model.cost(scheme, op, s) * fractions[key]
+
+        totals = {s: sum(cost(op, s) for op in names) for s in inter}
+        shared = min(inter, key=lambda s: (totals[s], int(s)))
+        per_op = per_op_plan()
+        per_total = sum(cost(op, s) for op, s in per_op)
+        if per_total < totals[shared]:
+            return StageSetPlan(names, per_op, None)
+    else:
+        # stage order is monotone in decompression work (paper §V): the
+        # lowest shared stage is the cheapest joint reconstruction
+        shared = inter[0]
+    return StageSetPlan(names, tuple((op, shared) for op in names), shared)

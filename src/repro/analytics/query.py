@@ -1,22 +1,23 @@
 """Query front-end: analytics over arbitrary collections of compressed fields.
 
-``query`` accepts any mix of layouts (different datasets, shapes, schemes),
-groups the fields by their static layout signature, plans the execution
-stage per group (``stage="auto"`` → cheapest feasible per Table I), runs one
-batched vmap call per group through the shared :class:`BatchedAnalytics`
-engine, and scatters results back into input order.
+``query`` accepts any mix of layouts (different datasets, shapes, schemes)
+and a single op or an op *set*, groups the fields by their static layout
+signature, plans the execution stage(s) per group — ``stage="auto"`` fuses
+the set onto one shared stage over the feasible intersection
+(:func:`repro.analytics.planner.plan_stages`) — runs one batched vmap call
+per (group, fused plan) through the shared :class:`BatchedAnalytics` engine,
+and scatters results back into input order.  The engine receives the
+*resolved* plan, so stages are planned exactly once per group.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-import jax
-
-from repro.core import Compressed, Encoded, Stage, layout_key
+from repro.core import Compressed, Encoded, Stage, layout_key, oplib
 
 from .engine import BatchedAnalytics, default_engine
-from .planner import MULTIVARIATE, OPS, CostModel, plan_stage
+from .planner import CostModel, plan_stages
 
 Field = Union[Compressed, Encoded]
 FieldOrVector = Union[Field, Sequence[Field]]
@@ -24,12 +25,17 @@ FieldOrVector = Union[Field, Sequence[Field]]
 
 @dataclasses.dataclass
 class QueryResult:
-    """Per-field results in input order, plus the plan that produced them."""
+    """Per-field results in input order, plus the plan that produced them.
 
-    values: List[jax.Array]        # result per input field / vector tuple
-    stages: List[Stage]            # execution stage per input
-    op: str
-    n_batches: int                 # number of jitted batched calls issued
+    For a single op, ``values[i]`` is that field's result and ``stages[i]``
+    its execution stage; for an op set, both are dicts keyed by op name.
+    """
+
+    values: List                   # result (or {op: result}) per input
+    stages: List                   # execution stage(s) per input
+    op: Union[str, Tuple[str, ...]]
+    n_batches: int                 # number of field groups (layout batches)
+    n_dispatches: int              # jitted compiled calls actually issued
 
     def __iter__(self):
         return iter(self.values)
@@ -38,39 +44,47 @@ class QueryResult:
         return len(self.values)
 
 
-def _group_signature(item: FieldOrVector, op: str) -> Tuple:
-    if op in MULTIVARIATE:
+def _group_signature(item: FieldOrVector, vector: bool) -> Tuple:
+    if vector:
         return tuple(layout_key(c) for c in item)
     return layout_key(item)
 
 
 def _unbatch(batched, i: int):
-    """Extract item ``i`` of a batched result (tuple results per component)."""
+    """Extract item ``i`` of a batched result (dicts per op-set results,
+    tuples per component results)."""
+    if isinstance(batched, dict):
+        return {k: _unbatch(v, i) for k, v in batched.items()}
     if isinstance(batched, tuple):
         return tuple(b[i] for b in batched)
     return batched[i]
 
 
-def query(fields: Sequence[FieldOrVector], op: str,
+def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
           stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
           region=None,
           cost_model: Optional[CostModel] = None,
           engine: Optional[BatchedAnalytics] = None) -> QueryResult:
-    """Run one analytical operation over many compressed fields.
+    """Run one analytical operation — or a fused op set — over many fields.
 
     Parameters
     ----------
     fields:
-        For ``mean``/``std``/``derivative``/``laplacian``: a sequence of
-        :class:`Compressed`/:class:`Encoded` fields.  For ``divergence``/
-        ``curl``: a sequence of vector fields, each a tuple of component
-        fields (one per spatial axis).
+        For single-field ops (``mean``/``std``/``derivative``/``gradient``/
+        ``laplacian``): a sequence of :class:`Compressed`/:class:`Encoded`
+        fields.  For vector ops (``divergence``/``curl``): a sequence of
+        vector fields, each a tuple of component fields (one per axis).
     op:
-        One of :data:`repro.analytics.OPS`.
+        One op name from :data:`repro.analytics.OPS`, or a sequence of names
+        (single arity per set).  An op set shares one stage reconstruction:
+        ``query(fields, ["mean", "std", "laplacian"])`` issues one batched
+        compiled call per layout group and yields ``{op: value}`` per field,
+        each value bit-identical to the corresponding single-op query.
     stage:
-        ``"auto"`` (cheapest feasible stage per group, never one that raises
-        :class:`~repro.core.UnsupportedStageError`), or an explicit
-        :class:`Stage` / stage name validated against the feasibility matrix.
+        ``"auto"`` (joint cheapest feasible stage per group, never one that
+        raises :class:`~repro.core.UnsupportedStageError`), or an explicit
+        :class:`Stage` / stage name validated against the feasibility matrix
+        for every op in the set.
     axis:
         Differentiation axis for ``op="derivative"``.
     region:
@@ -81,28 +95,35 @@ def query(fields: Sequence[FieldOrVector], op: str,
         stage ① needs block-aligned windows, and calibrated costs scale by
         each stage's closure size.
     """
-    if op not in OPS:
-        raise ValueError(f"unknown operation {op!r}; expected one of {OPS}")
+    single = isinstance(op, str)
+    names = oplib.canonical_ops(op)
+    vector = oplib.is_vector_ops(names)
     if engine is None:
         engine = default_engine
+    d_axis = axis if any(oplib.OPS[n].needs_axis for n in names) else 0
 
     # group by static layout signature, preserving input order within groups
     groups: Dict[Tuple, List[int]] = {}
     for i, item in enumerate(fields):
-        groups.setdefault(_group_signature(item, op), []).append(i)
+        groups.setdefault(_group_signature(item, vector), []).append(i)
 
     values: List = [None] * len(fields)
     stages: List = [None] * len(fields)
+    n_dispatches = 0
     for indices in groups.values():
         group = [fields[i] for i in indices]
-        first = group[0][0] if op in MULTIVARIATE else group[0]
-        planned = plan_stage(first.scheme, op, stage,
-                             cost_model or engine.cost_model,
-                             region=region, field=first,
-                             axis=axis if op == "derivative" else 0)
-        batched = engine.run(group, op, planned, axis=axis, region=region)
+        first = group[0][0] if vector else group[0]
+        plan = plan_stages(first.scheme, names, stage,
+                           cost_model or engine.cost_model,
+                           region=region, field=first, axis=d_axis)
+        batched = engine.run(group, op if single else names, plan,
+                             axis=axis, region=region)
+        n_dispatches += plan.n_dispatches
         for j, i in enumerate(indices):
             values[i] = _unbatch(batched, j)
-            stages[i] = planned
-    return QueryResult(values=values, stages=stages, op=op,
-                       n_batches=len(groups))
+            # fresh dict per field: callers may hold/mutate their own copy
+            stages[i] = (plan.stage_of(names[0]) if single
+                         else dict(plan.stages))
+    return QueryResult(values=values, stages=stages,
+                       op=op if single else names,
+                       n_batches=len(groups), n_dispatches=n_dispatches)

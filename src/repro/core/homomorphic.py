@@ -1,10 +1,20 @@
 """Homomorphic analytical operations on intermediate representations (paper §V).
 
-Six operations, three categories:
+Seven operations, three categories:
 
 * statistics — ``mean`` (stages ①②③④, ① HSZx-family only), ``std`` (②③④);
-* numerical differentiation — ``derivative``, ``laplacian`` (② nd-schemes, ③④ all);
+* numerical differentiation — ``derivative``, ``gradient``, ``laplacian``
+  (② nd-schemes, ③④ all);
 * multivariate derivation — ``divergence``, ``curl`` (same stage support).
+
+Every operation is a thin wrapper over :mod:`repro.core.oplib`: a declarative
+:class:`~repro.core.oplib.OpSpec` names the op's per-``(scheme, stage)``
+lowering rule, and one shared :class:`~repro.core.oplib.StageContext`
+prelude — payload decode, cumsum / block-mean-upsample recorrelation, window
+cropping — feeds any number of op postludes.  :func:`compute` exposes the
+fused entry point directly: ``compute(c, ["mean", "std"], stage)`` pays one
+stage reconstruction for the whole op set, and each value is bit-identical
+to the corresponding single-op call.
 
 TPU adaptation (DESIGN.md §3): the paper's scalar accumulators become
 parallel prefix sums (`jnp.cumsum`), its per-block border branches become
@@ -21,442 +31,67 @@ or ``slice`` over the original shape): the op then touches only the blocks
 in the region's dependency closure (``repro.core.region``, DESIGN.md §5) and
 returns exactly what the full-field op would return on the cropped
 decompressed window — statistics over the window values, stencils on the
-window interior.
+window interior.  The full-field path *is* the region path with
+``region=None``; there are no duplicate implementations.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 
-from . import blocking, encode, quantize
+from . import oplib
 from . import region as R
-from .pipeline import HSZCompressor, UnsupportedStageError, by_name
 from .stages import Compressed, Encoded, Stage
 
+Field = Union[Compressed, Encoded]
 
-def _comp(c: Compressed) -> HSZCompressor:
-    return by_name(c.scheme.value, c.block)
-
-
-def _decode(c: Compressed | Encoded) -> Compressed:
-    return encode.decode_device(c) if isinstance(c, Encoded) else c
+#: fused lowering entry point (see :func:`repro.core.oplib.compute`).
+compute = oplib.compute
 
 
-def _valid_weight(c: Compressed) -> jax.Array | None:
-    """Spatial 0/1 mask of valid elements, or None when there is no padding.
-
-    The padding decision is static (shape/block only), so no mask is built —
-    let alone reduced — inside traced code unless padding actually exists.
-    """
-    shape = c.shape if c.scheme.is_nd else (c.n,)
-    if not blocking.has_padding(shape, c.block):
-        return None
-    return jnp.asarray(blocking.valid_mask(shape, c.block), jnp.int32)
-
-
-# ===========================================================================
-# statistics (paper §V-A)
-# ===========================================================================
-
-def mean(c: Compressed | Encoded, stage: Stage,
+def mean(c: Field, stage: Stage,
          *, region: Optional[R.RegionSpec] = None) -> jax.Array:
     """Field mean at a given decompression stage (optionally over a region)."""
-    if region is not None:
-        return _region_mean(c, Stage(stage), region)
-    n = c.n
-    if stage == Stage.M:
-        # ① ultra-fast metadata path: mu = (1/N) sum_b M_b S_b * 2eps  (V-A.1)
-        if not c.scheme.is_blockmean:
-            raise UnsupportedStageError("stage-1 mean needs HSZx-family metadata")
-        s = jnp.sum(c.metadata.reshape(-1) * c.valid_counts)
-        return s / n * c.eps * 2.0
-
-    c = _decode(c)
-    if stage == Stage.P:
-        p = c.residuals
-        if c.scheme.is_blockmean:
-            # ② sum of residuals + metadata term (V-A §②)
-            w = _valid_weight(c)
-            sp = jnp.sum(p if w is None else p * w)
-            sm = jnp.sum(c.metadata.reshape(-1) * c.valid_counts)
-            return (sp + sm) / n * c.eps * 2.0
-        # ② Lorenzo: sum q = weighted sum of residuals; the separable weights
-        # w_a[i] = (n_a - i) make this a rank-1 contraction (w0^T P w1 ...).
-        dims = c.shape if c.scheme.is_nd else (c.n,)
-        acc = p.astype(jnp.float32)
-        for axis, (npad, nvalid) in enumerate(zip(c.padded_shape, dims)):
-            w = jnp.clip(nvalid - jnp.arange(npad), 0).astype(jnp.float32)
-            acc = jnp.tensordot(acc, w, axes=[[0], [0]])  # consumes leading axis
-        return acc / n * c.eps * 2.0
-
-    comp = _comp(c)
-    if stage == Stage.Q:
-        q = comp.decompress(c, Stage.Q)
-        return jnp.mean(q.astype(jnp.float32)) * c.eps * 2.0
-    return jnp.mean(comp.decompress(c, Stage.F).astype(jnp.float32))
+    return oplib.compute(c, "mean", stage, region=region)["mean"]
 
 
-def _sum_q_q2(c: Compressed) -> tuple[jax.Array, jax.Array]:
-    """(sum q, sum q^2) over valid elements, computed at stage ②."""
-    p = c.residuals
-    if c.scheme.is_blockmean:
-        q = p + blocking.upsample_block_means(c.metadata, c.block)
-    else:
-        q = p
-        for axis in range(p.ndim):
-            q = jnp.cumsum(q, axis=axis)
-    qf = q.astype(jnp.float32)
-    w = _valid_weight(c)
-    if w is not None:
-        qf = qf * w
-    return jnp.sum(qf), jnp.sum(qf * qf)
-
-
-def std(c: Compressed | Encoded, stage: Stage,
+def std(c: Field, stage: Stage,
         *, region: Optional[R.RegionSpec] = None) -> jax.Array:
     """Sample standard deviation at a given stage (paper §V-A.2)."""
-    if stage == Stage.M:
-        raise UnsupportedStageError("std needs pointwise info (stages 2-4)")
-    if region is not None:
-        return _region_std(c, Stage(stage), region)
-    n = c.n
-    c = _decode(c)
-    if stage == Stage.P and c.scheme.is_blockmean:
-        # ② decompose (q - mu) = (p) + (M_b - mu~) with integer mean mu~ (V-A §②)
-        s = jnp.sum(c.metadata.reshape(-1) * c.valid_counts)
-        mu_int = jnp.round(s / n).astype(jnp.int32)
-        mdiff = blocking.upsample_block_means(c.metadata - mu_int, c.block)
-        x = (c.residuals + mdiff).astype(jnp.float32)
-        w = _valid_weight(c)
-        if w is not None:
-            x = x * w
-        ss = jnp.sum(x * x)
-        # the integer mean mu~ differs from the true mean by r~, |r~| <= 1/2;
-        # remove its first-order contribution exactly: sum (x - r)^2 over valid
-        r = s / n - mu_int
-        ss = ss - 2.0 * r * jnp.sum(x) + n * r * r
-        return jnp.sqrt(jnp.maximum(ss, 0.0) / (n - 1)) * c.eps * 2.0
-    if stage == Stage.P:
-        s1, s2 = _sum_q_q2(c)
-        var = (s2 - s1 * s1 / n) / (n - 1)
-        return jnp.sqrt(jnp.maximum(var, 0.0)) * c.eps * 2.0
-    comp = _comp(c)
-    if stage == Stage.Q:
-        q = comp.decompress(c, Stage.Q).astype(jnp.float32)
-        s1, s2 = jnp.sum(q), jnp.sum(q * q)
-        var = (s2 - s1 * s1 / n) / (n - 1)
-        return jnp.sqrt(jnp.maximum(var, 0.0)) * c.eps * 2.0
-    d = comp.decompress(c, Stage.F).astype(jnp.float32)
-    return jnp.std(d, ddof=1)
+    return oplib.compute(c, "std", stage, region=region)["std"]
 
 
-# ===========================================================================
-# numerical differentiation (paper §V-B)
-# ===========================================================================
-
-def _interior(x: jax.Array) -> jax.Array:
-    """Crop one element at each end of every axis (common stencil interior)."""
-    return x[tuple(slice(1, -1) for _ in range(x.ndim))]
-
-
-def _shift_pair(x: jax.Array, axis: int) -> tuple[jax.Array, jax.Array]:
-    """(x_{+1}, x_{-1}) views cropped to the common interior."""
-    nd = x.ndim
-    idx_p = [slice(1, -1)] * nd
-    idx_m = [slice(1, -1)] * nd
-    idx_p[axis] = slice(2, None)
-    idx_m[axis] = slice(None, -2)
-    return x[tuple(idx_p)], x[tuple(idx_m)]
-
-
-def _q_spatial(c: Compressed) -> jax.Array:
-    """Stage-③ integers in the original spatial shape (cropped)."""
-    comp = _comp(c)
-    return comp.decompress(c, Stage.Q)
-
-
-def _require_stencil_stage(c: Compressed, stage: Stage) -> None:
-    if stage == Stage.M:
-        raise UnsupportedStageError("stencils need pointwise info")
-    if stage == Stage.P and not c.scheme.is_nd:
-        # paper §V-B: 1-D partitioning destroys multidimensional layout
-        raise UnsupportedStageError("stage-2 stencils require nd schemes")
-
-
-def _lorenzo_axis_diff(p: jax.Array, axis: int) -> jax.Array:
-    """D_a = q - shift_a(q) computed from residuals: cumsum over all axes != a."""
-    out = p
-    for a in range(p.ndim):
-        if a != axis:
-            out = jnp.cumsum(out, axis=a)
-    return out
-
-
-# The stencil *kernels* below take an already-windowed spatial array (full
-# field cropped to shape, or a region window) so the full-field and region
-# paths share one implementation — a sign/scale/convention fix lands in both
-# by construction.
-
-def _central_diff(x: jax.Array, axis: int, scale) -> jax.Array:
-    """(x_{+1} - x_{-1}) * scale on the common interior (V-B.2)."""
-    hi, lo = _shift_pair(x, axis)
-    return (hi - lo).astype(jnp.float32) * scale
-
-
-def _lorenzo_deriv_stencil(d: jax.Array, axis: int) -> jax.Array:
-    """q_{+1} - q_{-1} = D_a[i+1] + D_a[i] on the interior (V-B.1), with
-    ``d`` the (windowed) Lorenzo axis difference."""
-    sl_hi = [slice(1, -1)] * d.ndim
-    sl_hi[axis] = slice(2, None)
-    sl_lo = [slice(1, -1)] * d.ndim
-    sl_lo[axis] = slice(1, -1)
-    return (d[tuple(sl_hi)] + d[tuple(sl_lo)]).astype(jnp.float32)
-
-
-def _lorenzo_lap_term(d: jax.Array, axis: int) -> jax.Array:
-    """D_a[i+1] - D_a[i] on the interior — one axis term of V-B.3."""
-    sl_hi = [slice(1, -1)] * d.ndim
-    sl_hi[axis] = slice(2, None)
-    sl_lo = [slice(1, -1)] * d.ndim
-    sl_lo[axis] = slice(1, -1)
-    return d[tuple(sl_hi)] - d[tuple(sl_lo)]
-
-
-def _laplacian_stencil(x: jax.Array) -> jax.Array:
-    """Sum of neighbors minus 2·nd·center on the common interior, f32."""
-    acc = -2.0 * x.ndim * _interior(x).astype(jnp.float32)
-    for a in range(x.ndim):
-        hi, lo = _shift_pair(x, a)
-        acc = acc + hi.astype(jnp.float32) + lo.astype(jnp.float32)
-    return acc
-
-
-def _blockmean_deriv_p(p: jax.Array, m: jax.Array, axis: int) -> jax.Array:
-    """(p_{+1} - p_{-1}) + (m_{+1} - m_{-1}): V-B §② with the border Delta
-    terms realized as a shifted upsampled-mean difference."""
-    p_hi, p_lo = _shift_pair(p, axis)
-    m_hi, m_lo = _shift_pair(m, axis)
-    return ((p_hi - p_lo) + (m_hi - m_lo)).astype(jnp.float32)
-
-
-def derivative(c: Compressed | Encoded, stage: Stage, axis: int,
+def derivative(c: Field, stage: Stage, axis: int,
                *, region: Optional[R.RegionSpec] = None) -> jax.Array:
     """Central difference along ``axis`` on the common interior (III-B.2)."""
-    if region is not None:
-        return _region_derivative(c, Stage(stage), axis, region)
-    c = _decode(c)
-    _require_stencil_stage(c, stage)
-    eps = c.eps
-
-    if stage == Stage.P:
-        if c.scheme.is_lorenzo:
-            d = blocking.crop(_lorenzo_axis_diff(c.residuals, axis), c.shape)
-            return _lorenzo_deriv_stencil(d, axis) * eps
-        m = blocking.upsample_block_means(c.metadata, c.block)
-        return _blockmean_deriv_p(blocking.crop(c.residuals, c.shape),
-                                  blocking.crop(m, c.shape), axis) * eps
-
-    if stage == Stage.Q:
-        return _central_diff(_q_spatial(c), axis, eps)
-    return _central_diff(_comp(c).decompress(c, Stage.F), axis, 0.5)
+    return oplib.compute(c, "derivative", stage, axis=axis,
+                         region=region)["derivative"]
 
 
-def gradient(c: Compressed | Encoded, stage: Stage,
-             *, region: Optional[R.RegionSpec] = None) -> tuple[jax.Array, ...]:
-    nd = len(c.shape)
-    return tuple(derivative(c, stage, a, region=region) for a in range(nd))
+def gradient(c: Field, stage: Stage,
+             *, region: Optional[R.RegionSpec] = None) -> tuple:
+    """All-axis central differences sharing one stage reconstruction."""
+    return oplib.compute(c, "gradient", stage, region=region)["gradient"]
 
 
-def laplacian(c: Compressed | Encoded, stage: Stage,
+def laplacian(c: Field, stage: Stage,
               *, region: Optional[R.RegionSpec] = None) -> jax.Array:
     """2nd-order Laplacian stencil on the common interior (III-B.3)."""
-    if region is not None:
-        return _region_laplacian(c, Stage(stage), region)
-    c = _decode(c)
-    _require_stencil_stage(c, stage)
-    eps2 = 2.0 * c.eps
-
-    if stage == Stage.P:
-        if c.scheme.is_lorenzo:
-            # sum_a (D_a[+1] - D_a[0]) — paper Eq. V-B.3 generalized to n-D
-            total = None
-            for a in range(c.residuals.ndim):
-                d = blocking.crop(_lorenzo_axis_diff(c.residuals, a), c.shape)
-                term = _lorenzo_lap_term(d, a)
-                total = term if total is None else total + term
-            return total.astype(jnp.float32) * eps2
-        m = blocking.crop(blocking.upsample_block_means(c.metadata, c.block), c.shape)
-        p = blocking.crop(c.residuals, c.shape)
-        return (_laplacian_stencil(p) + _laplacian_stencil(m)) * eps2
-
-    if stage == Stage.Q:
-        return _laplacian_stencil(_q_spatial(c)) * eps2  # (V-B.4)
-    return _laplacian_stencil(_comp(c).decompress(c, Stage.F))
+    return oplib.compute(c, "laplacian", stage, region=region)["laplacian"]
 
 
-# ===========================================================================
-# multivariate derivation (paper §V-C)
-# ===========================================================================
-
-def divergence(components: Sequence[Compressed | Encoded], stage: Stage,
+def divergence(components: Sequence[Field], stage: Stage,
                *, region: Optional[R.RegionSpec] = None) -> jax.Array:
     """div F = sum_a  d(F_a)/d(x_a)  on the common interior (V-C.1/2)."""
-    total = None
-    for axis, comp in enumerate(components):
-        term = derivative(comp, stage, axis, region=region)
-        total = term if total is None else total + term
-    return total
+    return oplib.compute(list(components), "divergence", stage,
+                         region=region)["divergence"]
 
 
-def curl(components: Sequence[Compressed | Encoded], stage: Stage,
+def curl(components: Sequence[Field], stage: Stage,
          *, region: Optional[R.RegionSpec] = None):
     """2-D: scalar dv/dx - du/dy (paper V-C.3 with (x,y)=(axis0,axis1));
     3-D: the full vector curl.  Pinned by the rigid-rotation oracle
     (u=-y, v=x has curl exactly +2) in ``tests/test_oracle_fields.py``."""
-    if len(components) == 2:
-        u, v = components
-        return (derivative(v, stage, 0, region=region)
-                - derivative(u, stage, 1, region=region))
-    u, v, w = components
-    return (
-        derivative(w, stage, 1, region=region) - derivative(v, stage, 2, region=region),
-        derivative(u, stage, 2, region=region) - derivative(w, stage, 0, region=region),
-        derivative(v, stage, 0, region=region) - derivative(u, stage, 1, region=region),
-    )
-
-
-# ===========================================================================
-# region paths (block-sparse sub-field queries, DESIGN.md §5)
-# ===========================================================================
-
-def _region_sub(c: Compressed | Encoded, op: str, stage: Stage,
-                region: R.RegionSpec, axis: int = 0):
-    """(plan, gathered sub-field) for an op's dependency closure."""
-    plan = R.plan_region(c, region, R.op_closure(c.scheme, op, stage, axis))
-    return plan, R.extract(c, plan)
-
-
-def _region_mean(c: Compressed | Encoded, stage: Stage,
-                 region: R.RegionSpec) -> jax.Array:
-    if stage == Stage.M:
-        # metadata-only: no payload decode at all — but partial-block windows
-        # would weight block means by fractional coverage, voiding the eps
-        # bias bound (§V-D.1), so stage ① requires a block-aligned window.
-        if not c.scheme.is_blockmean:
-            raise UnsupportedStageError("stage-1 mean needs HSZx-family metadata")
-        plan = R.plan_region(c, region, "cover")
-        if not plan.aligned:
-            raise UnsupportedStageError(
-                "stage-1 region mean needs a block-aligned window "
-                f"(region {plan.region} vs block {c.block})")
-        meta = plan.gather_metadata(c)
-        s = jnp.sum(meta.reshape(-1) * jnp.asarray(plan.overlap))
-        return s / plan.n_window * c.eps * 2.0
-
-    plan, sub = _region_sub(c, "mean", stage, region)
-    n = plan.n_window
-    if stage == Stage.P:
-        if c.scheme.is_blockmean:
-            # sum q over window = sum p over window + sum_b M_b * overlap_b
-            sp = jnp.sum(plan.window_of(sub.residuals))
-            sm = jnp.sum(sub.metadata.reshape(-1) * jnp.asarray(plan.overlap))
-            return (sp + sm) / n * c.eps * 2.0
-        # Lorenzo: window-sum weights over the prefix hull generalize the
-        # full-field rank-1 contraction (window == field recovers it exactly)
-        weights = plan.lorenzo_mean_weights()
-        acc = sub.residuals.astype(jnp.float32)
-        if c.scheme.is_nd:
-            for w in weights:
-                acc = jnp.tensordot(acc, jnp.asarray(w), axes=[[0], [0]])
-        else:
-            acc = jnp.dot(acc.reshape(-1), jnp.asarray(weights[0]))
-        return acc / n * c.eps * 2.0
-
-    q_win = plan.window_of(_comp(c).reconstruct_q(sub))
-    if stage == Stage.Q:
-        return jnp.mean(q_win.astype(jnp.float32)) * c.eps * 2.0
-    return jnp.mean(quantize.dequantize(q_win, c.eps, c.orig_dtype)
-                    .astype(jnp.float32))
-
-
-def _region_std(c: Compressed | Encoded, stage: Stage,
-                region: R.RegionSpec) -> jax.Array:
-    plan, sub = _region_sub(c, "std", stage, region)
-    n = plan.n_window
-    if stage == Stage.P and c.scheme.is_blockmean:
-        # window analogue of the integer-mean decomposition (V-A §②).  Unlike
-        # the full-field path, the window's residual sum is NOT near zero (a
-        # partial block can contribute a one-sided slice of its residuals),
-        # so the true window mean sum includes it: the correction r is then
-        # exact and the decomposition stays integer-accurate.
-        s = jnp.sum(sub.metadata.reshape(-1) * jnp.asarray(plan.overlap))
-        sp = jnp.sum(plan.window_of(sub.residuals))
-        tot = s + sp  # exact integer sum of q over the window
-        mu_int = jnp.round(tot / n).astype(jnp.int32)
-        mdiff = blocking.upsample_block_means(sub.metadata - mu_int, c.block)
-        x = plan.window_of(sub.residuals + mdiff).astype(jnp.float32)
-        ss = jnp.sum(x * x)
-        r = tot / n - mu_int
-        ss = ss - 2.0 * r * jnp.sum(x) + n * r * r
-        return jnp.sqrt(jnp.maximum(ss, 0.0) / (n - 1)) * c.eps * 2.0
-    if stage == Stage.P:
-        q = sub.residuals
-        for a in range(q.ndim):
-            q = jnp.cumsum(q, axis=a)
-        qf = plan.window_of(q).astype(jnp.float32)
-        s1, s2 = jnp.sum(qf), jnp.sum(qf * qf)
-        var = (s2 - s1 * s1 / n) / (n - 1)
-        return jnp.sqrt(jnp.maximum(var, 0.0)) * c.eps * 2.0
-    q_win = plan.window_of(_comp(c).reconstruct_q(sub))
-    if stage == Stage.Q:
-        qf = q_win.astype(jnp.float32)
-        s1, s2 = jnp.sum(qf), jnp.sum(qf * qf)
-        var = (s2 - s1 * s1 / n) / (n - 1)
-        return jnp.sqrt(jnp.maximum(var, 0.0)) * c.eps * 2.0
-    d = quantize.dequantize(q_win, c.eps, c.orig_dtype).astype(jnp.float32)
-    return jnp.std(d, ddof=1)
-
-
-def _region_derivative(c: Compressed | Encoded, stage: Stage, axis: int,
-                       region: R.RegionSpec) -> jax.Array:
-    _require_stencil_stage(c, stage)
-    plan, sub = _region_sub(c, "derivative", stage, region, axis)
-    eps = c.eps
-    if stage == Stage.P:
-        if c.scheme.is_lorenzo:
-            # band closure: the axis difference needs prefix sums only over
-            # the non-derivative axes, which the sub-field anchors at origin
-            d = plan.window_of(_lorenzo_axis_diff(sub.residuals, axis))
-            return _lorenzo_deriv_stencil(d, axis) * eps
-        m = blocking.upsample_block_means(sub.metadata, c.block)
-        return _blockmean_deriv_p(plan.window_of(sub.residuals),
-                                  plan.window_of(m), axis) * eps
-    q_win = plan.window_of(_comp(c).reconstruct_q(sub))
-    if stage == Stage.Q:
-        return _central_diff(q_win, axis, eps)
-    return _central_diff(quantize.dequantize(q_win, c.eps, c.orig_dtype),
-                         axis, 0.5)
-
-
-def _region_laplacian(c: Compressed | Encoded, stage: Stage,
-                      region: R.RegionSpec) -> jax.Array:
-    _require_stencil_stage(c, stage)
-    plan, sub = _region_sub(c, "laplacian", stage, region)
-    eps2 = 2.0 * c.eps
-    if stage == Stage.P:
-        if c.scheme.is_lorenzo:
-            total = None
-            for a in range(sub.residuals.ndim):
-                d = plan.window_of(_lorenzo_axis_diff(sub.residuals, a))
-                term = _lorenzo_lap_term(d, a)
-                total = term if total is None else total + term
-            return total.astype(jnp.float32) * eps2
-        m = plan.window_of(blocking.upsample_block_means(sub.metadata, c.block))
-        p = plan.window_of(sub.residuals)
-        return (_laplacian_stencil(p) + _laplacian_stencil(m)) * eps2
-    q_win = plan.window_of(_comp(c).reconstruct_q(sub))
-    if stage == Stage.Q:
-        return _laplacian_stencil(q_win) * eps2
-    return _laplacian_stencil(quantize.dequantize(q_win, c.eps, c.orig_dtype))
+    return oplib.compute(list(components), "curl", stage,
+                         region=region)["curl"]

@@ -1,0 +1,666 @@
+"""Operator-lowering core: one stage reconstruction, many homomorphic results.
+
+The paper's premise is that *decompression dominates analytics cost*; its six
+operations differ only in the small postlude applied to a shared intermediate
+representation.  This module makes that structure explicit:
+
+* :class:`OpSpec` — a declarative description of one analytical operation:
+  name, arity (single field vs vector of components), per-scheme feasible
+  stages (paper Table I), the region dependency-closure kind, and one
+  lowering rule per ``(stage, scheme family)`` cell.
+* :class:`StageContext` — the *prelude* of a lowering: everything the ops
+  share for a given ``(field, stage, region)`` — payload decode, cumsum /
+  block-mean-upsample recorrelation, window cropping, statistic weights —
+  computed lazily and **at most once**, so an arbitrary op set reuses a
+  single stage reconstruction.
+* :func:`compute` — the lowering pipeline: validates the op set, joins the
+  per-op region closures into one gathered sub-field, builds the context(s),
+  and runs every op's postlude against them, returning ``{op: result}``.
+
+``repro.core.homomorphic`` keeps the public single-op API as thin wrappers
+(``mean(c, stage) == compute(c, ("mean",), stage)["mean"]``); the batched
+analytics engine compiles ``compute`` directly so a fused
+``query(fields, ops=["mean", "std", "laplacian"])`` costs one decode pass.
+
+The full-field path is the region path with ``region=None``: every lowering
+rule consumes the context's windowing helpers, which degrade to crop/mask
+operations when no region is given.  Fused and single-op results are
+bit-identical at a given stage because both run the same rule against
+contexts that differ at most in their (integer-exact) gather closure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+from functools import cached_property
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import blocking, quantize
+from . import encode as encode_mod
+from . import region as R
+from .pipeline import HSZCompressor, UnsupportedStageError, by_name
+from .stages import Compressed, Encoded, Scheme, Stage
+
+Field = Union[Compressed, Encoded]
+
+
+# ===========================================================================
+# closure lattice
+# ===========================================================================
+
+def join_closures(closures: Sequence[R.Closure]) -> R.Closure:
+    """Smallest closure containing every op's dependency closure.
+
+    ``cover`` only ever joins with itself (block-mean family); Lorenzo
+    closures are bands/hulls, and any two distinct ones join to the
+    origin-anchored prefix hull (band ∪ band' ⊆ hull and hull absorbs all).
+    """
+    uniq = set(closures)
+    if not uniq:
+        raise ValueError("empty closure set")
+    if len(uniq) == 1:
+        return next(iter(uniq))
+    if "cover" in uniq:
+        # mixed families can't happen (closures are per-scheme); be safe
+        raise ValueError(f"cannot join closures {sorted(map(str, uniq))}")
+    return "hull"
+
+
+# ===========================================================================
+# the shared prelude
+# ===========================================================================
+
+class StageContext:
+    """One stage reconstruction for a ``(field, stage, region, closure)``.
+
+    Every intermediate is a cached property, so any number of op postludes
+    share one decode / recorrelation / window-crop pass.  All host-side
+    geometry (plans, weights) is static; the jnp work composes with
+    ``jit``/``vmap`` exactly like the single-op paths always have.
+    """
+
+    def __init__(self, c: Field, stage: Stage, region, closure: R.Closure):
+        self.field = c
+        self.stage = Stage(stage)
+        self.region = region
+        self.closure = closure
+        self._axis_diffs: Dict[int, jax.Array] = {}
+
+    # -- static layout ------------------------------------------------------
+    @property
+    def scheme(self) -> Scheme:
+        return self.field.scheme
+
+    @property
+    def eps(self) -> jax.Array:
+        return self.field.eps
+
+    @cached_property
+    def plan(self) -> Optional[R.RegionPlan]:
+        if self.region is None:
+            return None
+        return R.plan_region(self.field, self.region, self.closure)
+
+    @property
+    def n(self) -> int:
+        """Valid element count of the queried extent (window or field)."""
+        return self.plan.n_window if self.plan is not None else self.field.n
+
+    @cached_property
+    def compressor(self) -> HSZCompressor:
+        return by_name(self.scheme.value, self.field.block)
+
+    # -- decode (once) ------------------------------------------------------
+    @cached_property
+    def sub(self) -> Compressed:
+        """The honest sub-field the ops run on: the gathered region closure,
+        or the (decoded) full field.  From :class:`Encoded` the region path
+        unpacks only the plan's payload words."""
+        if self.plan is not None:
+            return R.extract(self.field, self.plan)
+        c = self.field
+        return encode_mod.decode_device(c) if isinstance(c, Encoded) else c
+
+    # -- per-block metadata views (no payload decode) -----------------------
+    @cached_property
+    def metadata_blocks(self) -> jax.Array:
+        """Metadata restricted to the gathered blocks, without touching the
+        payload — the stage-① path must never decode."""
+        if self.plan is not None:
+            return self.plan.gather_metadata(self.field)
+        return self.field.metadata
+
+    @cached_property
+    def block_overlap(self) -> jax.Array:
+        """Per-gathered-block element counts inside the queried extent:
+        window-overlap counts (region) or the field's valid counts (full)."""
+        if self.plan is not None:
+            return jnp.asarray(self.plan.overlap)
+        return self.field.valid_counts
+
+    # -- windowing / masking helpers ----------------------------------------
+    @cached_property
+    def valid_weight(self) -> Optional[jax.Array]:
+        """Full-field only: spatial 0/1 mask of valid elements, or None when
+        there is no padding (static decision — no mask inside traced code
+        unless padding actually exists)."""
+        c = self.sub
+        shape = c.shape if c.scheme.is_nd else (c.n,)
+        if not blocking.has_padding(shape, c.block):
+            return None
+        return jnp.asarray(blocking.valid_mask(shape, c.block), jnp.int32)
+
+    def masked_sum(self, arr: jax.Array) -> jax.Array:
+        """Exact (integer) sum over the queried extent: window gather
+        (region) or padding-masked full array."""
+        if self.plan is not None:
+            return jnp.sum(self.plan.window_of(arr))
+        w = self.valid_weight
+        return jnp.sum(arr if w is None else arr * w)
+
+    def stat_values(self, arr: jax.Array) -> jax.Array:
+        """f32 values a statistic reduces over: the window (region) or the
+        full array with padding zeroed (full field)."""
+        if self.plan is not None:
+            return self.plan.window_of(arr).astype(jnp.float32)
+        x = arr.astype(jnp.float32)
+        w = self.valid_weight
+        return x if w is None else x * w
+
+    def spatial_window(self, arr: jax.Array) -> jax.Array:
+        """Crop a sub-field spatial array to the stencil window: the region
+        window, or the original shape (padding removed) for the full field."""
+        if self.plan is not None:
+            return self.plan.window_of(arr)
+        return blocking.crop(arr, self.sub.shape)
+
+    # -- recorrelation intermediates (the expensive, shared part) -----------
+    def lorenzo_axis_diff(self, axis: int) -> jax.Array:
+        """D_a = q - shift_a(q) from residuals: cumsum over all axes != a."""
+        d = self._axis_diffs.get(axis)
+        if d is None:
+            d = self.sub.residuals
+            for a in range(d.ndim):
+                if a != axis:
+                    d = jnp.cumsum(d, axis=a)
+            self._axis_diffs[axis] = d
+        return d
+
+    @cached_property
+    def lorenzo_q(self) -> jax.Array:
+        """Stage-③ integers of a Lorenzo sub-field (padded layout).  Derived
+        from the axis-0 difference so a fused {derivative, std} set shares
+        the non-axis cumsum passes (integer-exact in any axis order)."""
+        return jnp.cumsum(self.lorenzo_axis_diff(0), axis=0)
+
+    @cached_property
+    def upsampled_means(self) -> jax.Array:
+        """Block means upsampled to the spatial layout (block-mean family)."""
+        return blocking.upsample_block_means(self.sub.metadata, self.sub.block)
+
+    @cached_property
+    def q_spatial(self) -> jax.Array:
+        """Stage-③ integers cropped/windowed to the queried extent — the one
+        recorrelation pass every stage-③ postlude consumes."""
+        q = self.compressor.decompress(self.sub, Stage.Q,
+                                       crop=self.plan is None)
+        if self.plan is not None:
+            return self.plan.window_of(q)
+        return q
+
+    @cached_property
+    def f_spatial(self) -> jax.Array:
+        """Stage-④ floats on the queried extent (dequantize commutes with
+        the crop, so this shares :attr:`q_spatial`)."""
+        return quantize.dequantize(self.q_spatial, self.sub.eps,
+                                   self.sub.orig_dtype)
+
+    @cached_property
+    def lorenzo_mean_weights(self) -> Tuple[np.ndarray, ...]:
+        """Window-sum weights: ``sum_{i in extent} q_i = <weights, residuals>``
+        — per-axis separable (nd) or one flat vector (1-D schemes)."""
+        if self.plan is not None:
+            return self.plan.lorenzo_mean_weights()
+        c = self.sub
+        dims = c.shape if c.scheme.is_nd else (c.n,)
+        return tuple(
+            np.clip(nvalid - np.arange(npad), 0, None).astype(np.float32)
+            for npad, nvalid in zip(c.padded_shape, dims))
+
+
+# ===========================================================================
+# stencil kernels (shared by every lowering path)
+# ===========================================================================
+
+def _interior(x: jax.Array) -> jax.Array:
+    """Crop one element at each end of every axis (common stencil interior)."""
+    return x[tuple(slice(1, -1) for _ in range(x.ndim))]
+
+
+def _shift_pair(x: jax.Array, axis: int) -> Tuple[jax.Array, jax.Array]:
+    """(x_{+1}, x_{-1}) views cropped to the common interior."""
+    nd = x.ndim
+    idx_p = [slice(1, -1)] * nd
+    idx_m = [slice(1, -1)] * nd
+    idx_p[axis] = slice(2, None)
+    idx_m[axis] = slice(None, -2)
+    return x[tuple(idx_p)], x[tuple(idx_m)]
+
+
+def _central_diff(x: jax.Array, axis: int, scale) -> jax.Array:
+    """(x_{+1} - x_{-1}) * scale on the common interior (V-B.2)."""
+    hi, lo = _shift_pair(x, axis)
+    return (hi - lo).astype(jnp.float32) * scale
+
+
+def _lorenzo_deriv_stencil(d: jax.Array, axis: int) -> jax.Array:
+    """q_{+1} - q_{-1} = D_a[i+1] + D_a[i] on the interior (V-B.1), with
+    ``d`` the (windowed) Lorenzo axis difference."""
+    sl_hi = [slice(1, -1)] * d.ndim
+    sl_hi[axis] = slice(2, None)
+    sl_lo = [slice(1, -1)] * d.ndim
+    sl_lo[axis] = slice(1, -1)
+    return (d[tuple(sl_hi)] + d[tuple(sl_lo)]).astype(jnp.float32)
+
+
+def _lorenzo_lap_term(d: jax.Array, axis: int) -> jax.Array:
+    """D_a[i+1] - D_a[i] on the interior — one axis term of V-B.3."""
+    sl_hi = [slice(1, -1)] * d.ndim
+    sl_hi[axis] = slice(2, None)
+    sl_lo = [slice(1, -1)] * d.ndim
+    sl_lo[axis] = slice(1, -1)
+    return d[tuple(sl_hi)] - d[tuple(sl_lo)]
+
+
+def _laplacian_stencil(x: jax.Array) -> jax.Array:
+    """Sum of neighbors minus 2·nd·center on the common interior, f32."""
+    acc = -2.0 * x.ndim * _interior(x).astype(jnp.float32)
+    for a in range(x.ndim):
+        hi, lo = _shift_pair(x, a)
+        acc = acc + hi.astype(jnp.float32) + lo.astype(jnp.float32)
+    return acc
+
+
+def _blockmean_deriv_p(p: jax.Array, m: jax.Array, axis: int) -> jax.Array:
+    """(p_{+1} - p_{-1}) + (m_{+1} - m_{-1}): V-B §② with the border Delta
+    terms realized as a shifted upsampled-mean difference."""
+    p_hi, p_lo = _shift_pair(p, axis)
+    m_hi, m_lo = _shift_pair(m, axis)
+    return ((p_hi - p_lo) + (m_hi - m_lo)).astype(jnp.float32)
+
+
+# ===========================================================================
+# lowering rules: one per (op, stage, scheme family)
+# ===========================================================================
+# Each rule is fn(ctx, axis) -> result; the "any" family key matches both.
+
+def _mean_m(ctx: StageContext, axis: int) -> jax.Array:
+    # ① ultra-fast metadata path: mu = (1/N) sum_b M_b S_b * 2eps  (V-A.1).
+    # Partial-block windows would weight block means by fractional coverage,
+    # voiding the eps bias bound (§V-D.1), hence the alignment requirement.
+    if ctx.plan is not None and not ctx.plan.aligned:
+        raise UnsupportedStageError(
+            "stage-1 region mean needs a block-aligned window "
+            f"(region {ctx.plan.region} vs block {ctx.field.block})")
+    s = jnp.sum(ctx.metadata_blocks.reshape(-1) * ctx.block_overlap)
+    return s / ctx.n * ctx.eps * 2.0
+
+
+def _mean_p_blockmean(ctx: StageContext, axis: int) -> jax.Array:
+    # ② sum q over extent = sum p over extent + sum_b M_b * overlap_b (V-A §②)
+    sp = ctx.masked_sum(ctx.sub.residuals)
+    sm = jnp.sum(ctx.sub.metadata.reshape(-1) * ctx.block_overlap)
+    return (sp + sm) / ctx.n * ctx.eps * 2.0
+
+
+def _mean_p_lorenzo(ctx: StageContext, axis: int) -> jax.Array:
+    # ② Lorenzo: sum q = weighted sum of residuals; separable weights make
+    # this a rank-1 contraction (w0^T P w1 ...) for nd, one dot for flat.
+    acc = ctx.sub.residuals.astype(jnp.float32)
+    weights = ctx.lorenzo_mean_weights
+    if ctx.scheme.is_nd:
+        for w in weights:
+            acc = jnp.tensordot(acc, jnp.asarray(w), axes=[[0], [0]])
+    else:
+        acc = jnp.dot(acc.reshape(-1), jnp.asarray(weights[0]))
+    return acc / ctx.n * ctx.eps * 2.0
+
+
+def _mean_q(ctx: StageContext, axis: int) -> jax.Array:
+    return jnp.mean(ctx.q_spatial.astype(jnp.float32)) * ctx.eps * 2.0
+
+
+def _mean_f(ctx: StageContext, axis: int) -> jax.Array:
+    return jnp.mean(ctx.f_spatial.astype(jnp.float32))
+
+
+def _std_p_blockmean(ctx: StageContext, axis: int) -> jax.Array:
+    # ② decompose (q - mu) = (p) + (M_b - mu~) with integer mean mu~ (V-A §②)
+    n = ctx.n
+    s = jnp.sum(ctx.sub.metadata.reshape(-1) * ctx.block_overlap)
+    if ctx.plan is None:
+        # complete blocks: per-block residual sums stay near zero, so the
+        # metadata term alone anchors the integer mean
+        tot = s
+    else:
+        # a partial block contributes a one-sided slice of its residuals, so
+        # the exact integer window sum must include them
+        tot = s + jnp.sum(ctx.plan.window_of(ctx.sub.residuals))
+    mu_int = jnp.round(tot / n).astype(jnp.int32)
+    x = ctx.stat_values(ctx.sub.residuals + (ctx.upsampled_means - mu_int))
+    ss = jnp.sum(x * x)
+    # the integer mean mu~ differs from the anchor mean by r, |r| <= 1/2;
+    # remove its first-order contribution exactly: sum (x - r)^2 over extent
+    r = tot / n - mu_int
+    ss = ss - 2.0 * r * jnp.sum(x) + n * r * r
+    return jnp.sqrt(jnp.maximum(ss, 0.0) / (n - 1)) * ctx.eps * 2.0
+
+
+def _std_p_lorenzo(ctx: StageContext, axis: int) -> jax.Array:
+    qf = ctx.stat_values(ctx.lorenzo_q)
+    n = ctx.n
+    s1, s2 = jnp.sum(qf), jnp.sum(qf * qf)
+    var = (s2 - s1 * s1 / n) / (n - 1)
+    return jnp.sqrt(jnp.maximum(var, 0.0)) * ctx.eps * 2.0
+
+
+def _std_q(ctx: StageContext, axis: int) -> jax.Array:
+    qf = ctx.q_spatial.astype(jnp.float32)
+    n = ctx.n
+    s1, s2 = jnp.sum(qf), jnp.sum(qf * qf)
+    var = (s2 - s1 * s1 / n) / (n - 1)
+    return jnp.sqrt(jnp.maximum(var, 0.0)) * ctx.eps * 2.0
+
+
+def _std_f(ctx: StageContext, axis: int) -> jax.Array:
+    return jnp.std(ctx.f_spatial.astype(jnp.float32), ddof=1)
+
+
+def _deriv_p_lorenzo(ctx: StageContext, axis: int) -> jax.Array:
+    d = ctx.spatial_window(ctx.lorenzo_axis_diff(axis))
+    return _lorenzo_deriv_stencil(d, axis) * ctx.eps
+
+
+def _deriv_p_blockmean(ctx: StageContext, axis: int) -> jax.Array:
+    return _blockmean_deriv_p(ctx.spatial_window(ctx.sub.residuals),
+                              ctx.spatial_window(ctx.upsampled_means),
+                              axis) * ctx.eps
+
+
+def _deriv_q(ctx: StageContext, axis: int) -> jax.Array:
+    return _central_diff(ctx.q_spatial, axis, ctx.eps)
+
+
+def _deriv_f(ctx: StageContext, axis: int) -> jax.Array:
+    return _central_diff(ctx.f_spatial, axis, 0.5)
+
+
+def _lap_p_lorenzo(ctx: StageContext, axis: int) -> jax.Array:
+    # sum_a (D_a[+1] - D_a[0]) — paper Eq. V-B.3 generalized to n-D
+    total = None
+    for a in range(ctx.sub.residuals.ndim):
+        d = ctx.spatial_window(ctx.lorenzo_axis_diff(a))
+        term = _lorenzo_lap_term(d, a)
+        total = term if total is None else total + term
+    return total.astype(jnp.float32) * (2.0 * ctx.eps)
+
+
+def _lap_p_blockmean(ctx: StageContext, axis: int) -> jax.Array:
+    m = ctx.spatial_window(ctx.upsampled_means)
+    p = ctx.spatial_window(ctx.sub.residuals)
+    return (_laplacian_stencil(p) + _laplacian_stencil(m)) * (2.0 * ctx.eps)
+
+
+def _lap_q(ctx: StageContext, axis: int) -> jax.Array:
+    return _laplacian_stencil(ctx.q_spatial) * (2.0 * ctx.eps)  # (V-B.4)
+
+
+def _lap_f(ctx: StageContext, axis: int) -> jax.Array:
+    return _laplacian_stencil(ctx.f_spatial)
+
+
+# ===========================================================================
+# op specs
+# ===========================================================================
+
+Rule = Callable[[StageContext, int], jax.Array]
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    """Declarative description of one analytical operation.
+
+    ``lower`` maps ``(stage, family)`` — family one of ``"blockmean"``,
+    ``"lorenzo"``, ``"any"`` — to the postlude rule for that cell; cells
+    absent from both family and ``"any"`` keys are infeasible (Table I).
+    ``closure`` gives the region dependency closure of the op's prelude;
+    vector ops instead declare ``component_axes`` (which derivative axes
+    each component feeds) from which per-component closures derive.
+    """
+
+    name: str
+    arity: str                    # "field" | "vector"
+    category: str                 # "statistic" | "differentiation" | "multivariate"
+    feasible: Callable[[Scheme], Tuple[Stage, ...]]
+    needs_axis: bool = False
+    closure: Optional[Callable[[Scheme, Stage, int], R.Closure]] = None
+    component_axes: Optional[Callable[[int], Tuple[Tuple[int, ...], ...]]] = None
+    lower: Mapping[Tuple[Stage, str], Rule] = dc_field(default_factory=dict)
+    lower_vector: Optional[Callable] = None
+
+
+def _mean_stages(scheme: Scheme) -> Tuple[Stage, ...]:
+    return tuple(([Stage.M] if scheme.is_blockmean else [])
+                 + [Stage.P, Stage.Q, Stage.F])
+
+
+def _std_stages(scheme: Scheme) -> Tuple[Stage, ...]:
+    return (Stage.P, Stage.Q, Stage.F)
+
+
+def _stencil_stages(scheme: Scheme) -> Tuple[Stage, ...]:
+    return tuple(([Stage.P] if scheme.is_nd else []) + [Stage.Q, Stage.F])
+
+
+def _deriv_closure(scheme: Scheme, stage: Stage, axis: int) -> R.Closure:
+    return R.op_closure(scheme, "derivative", stage, axis)
+
+
+def _stat_closure(scheme: Scheme, stage: Stage, axis: int) -> R.Closure:
+    return R.op_closure(scheme, "mean", stage, axis)
+
+
+def _gradient_closure(scheme: Scheme, stage: Stage, axis: int) -> R.Closure:
+    # every axis' derivative band, joined — the prefix hull for nd Lorenzo
+    return R.op_closure(scheme, "gradient", stage, axis)
+
+
+_DERIV_RULES: Dict[Tuple[Stage, str], Rule] = {
+    (Stage.P, "lorenzo"): _deriv_p_lorenzo,
+    (Stage.P, "blockmean"): _deriv_p_blockmean,
+    (Stage.Q, "any"): _deriv_q,
+    (Stage.F, "any"): _deriv_f,
+}
+
+
+def _derivative_at(ctx: StageContext, axis: int) -> jax.Array:
+    """Dispatch the derivative rule for ``ctx`` — the shared postlude every
+    multivariate/gradient lowering is assembled from."""
+    family = "lorenzo" if ctx.scheme.is_lorenzo else "blockmean"
+    rule = _DERIV_RULES.get((ctx.stage, family)) or _DERIV_RULES[(ctx.stage, "any")]
+    return rule(ctx, axis)
+
+
+def _gradient_rule(ctx: StageContext, axis: int) -> Tuple[jax.Array, ...]:
+    nd = len(ctx.field.shape)
+    return tuple(_derivative_at(ctx, a) for a in range(nd))
+
+
+def _divergence_vector(ctxs: Sequence[StageContext], axis: int) -> jax.Array:
+    total = None
+    for a, ctx in enumerate(ctxs):
+        term = _derivative_at(ctx, a)
+        total = term if total is None else total + term
+    return total
+
+
+def _curl_vector(ctxs: Sequence[StageContext], axis: int):
+    """2-D: scalar dv/dx - du/dy (paper V-C.3 with (x,y)=(axis0,axis1));
+    3-D: the full vector curl.  Pinned by the rigid-rotation oracle
+    (u=-y, v=x has curl exactly +2) in ``tests/test_oracle_fields.py``."""
+    if len(ctxs) == 2:
+        u, v = ctxs
+        return _derivative_at(v, 0) - _derivative_at(u, 1)
+    u, v, w = ctxs
+    return (
+        _derivative_at(w, 1) - _derivative_at(v, 2),
+        _derivative_at(u, 2) - _derivative_at(w, 0),
+        _derivative_at(v, 0) - _derivative_at(u, 1),
+    )
+
+
+def _div_axes(n_components: int) -> Tuple[Tuple[int, ...], ...]:
+    return tuple((i,) for i in range(n_components))
+
+
+def _curl_axes(n_components: int) -> Tuple[Tuple[int, ...], ...]:
+    if n_components == 2:
+        return ((1,), (0,))
+    if n_components == 3:
+        return ((1, 2), (0, 2), (0, 1))
+    raise ValueError(f"curl needs 2 or 3 components, got {n_components}")
+
+
+#: the registry: declaration order is the canonical op-set order (used for
+#: order-insensitive fused cache keys).
+OPS: Dict[str, OpSpec] = {
+    spec.name: spec for spec in (
+        OpSpec("mean", "field", "statistic", _mean_stages,
+               closure=_stat_closure,
+               lower={(Stage.M, "blockmean"): _mean_m,
+                      (Stage.P, "blockmean"): _mean_p_blockmean,
+                      (Stage.P, "lorenzo"): _mean_p_lorenzo,
+                      (Stage.Q, "any"): _mean_q,
+                      (Stage.F, "any"): _mean_f}),
+        OpSpec("std", "field", "statistic", _std_stages,
+               closure=_stat_closure,
+               lower={(Stage.P, "blockmean"): _std_p_blockmean,
+                      (Stage.P, "lorenzo"): _std_p_lorenzo,
+                      (Stage.Q, "any"): _std_q,
+                      (Stage.F, "any"): _std_f}),
+        OpSpec("derivative", "field", "differentiation", _stencil_stages,
+               needs_axis=True, closure=_deriv_closure, lower=_DERIV_RULES),
+        OpSpec("gradient", "field", "differentiation", _stencil_stages,
+               closure=_gradient_closure,
+               lower={(Stage.P, "any"): _gradient_rule,
+                      (Stage.Q, "any"): _gradient_rule,
+                      (Stage.F, "any"): _gradient_rule}),
+        OpSpec("laplacian", "field", "differentiation", _stencil_stages,
+               closure=_stat_closure,  # hull / cover: all axes' diffs
+               lower={(Stage.P, "lorenzo"): _lap_p_lorenzo,
+                      (Stage.P, "blockmean"): _lap_p_blockmean,
+                      (Stage.Q, "any"): _lap_q,
+                      (Stage.F, "any"): _lap_f}),
+        OpSpec("divergence", "vector", "multivariate", _stencil_stages,
+               component_axes=_div_axes, lower_vector=_divergence_vector),
+        OpSpec("curl", "vector", "multivariate", _stencil_stages,
+               component_axes=_curl_axes, lower_vector=_curl_vector),
+    )
+}
+
+_ORDER = {name: i for i, name in enumerate(OPS)}
+
+
+# ===========================================================================
+# op-set canonicalization / validation
+# ===========================================================================
+
+def canonical_ops(ops: Union[str, Sequence[str]]) -> Tuple[str, ...]:
+    """Validate and canonicalize an op set: known names, de-duplicated,
+    registry order (so ``["std", "mean"]`` and ``["mean", "std"]`` share one
+    compiled program), single arity (field ops and vector ops cannot share a
+    prelude — they consume different argument shapes)."""
+    names = [ops] if isinstance(ops, str) else list(ops)
+    if not names:
+        raise ValueError("empty op set")
+    out = []
+    for name in names:
+        if name not in OPS:
+            raise ValueError(
+                f"unknown operation {name!r}; expected one of {tuple(OPS)}")
+        if name not in out:
+            out.append(name)
+    out.sort(key=_ORDER.__getitem__)
+    if len({OPS[n].arity for n in out}) > 1:
+        raise ValueError(
+            f"cannot fuse single-field and vector ops in one set: {tuple(out)}")
+    return tuple(out)
+
+
+def is_vector_ops(ops: Sequence[str]) -> bool:
+    """True when the (canonical) op set takes vector-field arguments."""
+    return OPS[ops[0]].arity == "vector"
+
+
+def _check_feasible(spec: OpSpec, scheme: Scheme, stage: Stage) -> None:
+    """Raise with the ops' established error messages (pinned by tests)."""
+    if stage in spec.feasible(scheme):
+        return
+    if spec.category == "statistic":
+        if spec.name == "mean":
+            raise UnsupportedStageError("stage-1 mean needs HSZx-family metadata")
+        raise UnsupportedStageError("std needs pointwise info (stages 2-4)")
+    if stage == Stage.M:
+        raise UnsupportedStageError("stencils need pointwise info")
+    # paper §V-B: 1-D partitioning destroys multidimensional layout
+    raise UnsupportedStageError("stage-2 stencils require nd schemes")
+
+
+# ===========================================================================
+# the lowering pipeline
+# ===========================================================================
+
+def compute(target, ops: Union[str, Sequence[str]], stage: Stage, *,
+            axis: int = 0, region: Optional[R.RegionSpec] = None
+            ) -> Dict[str, jax.Array]:
+    """Lower an op set onto one shared stage reconstruction.
+
+    ``target`` is a single :class:`Compressed`/:class:`Encoded` field for
+    field-arity op sets, or a sequence of component fields for vector-arity
+    sets (``divergence``/``curl``).  Returns ``{op: result}``; every value is
+    bit-identical to the corresponding single-op call at the same stage.
+    """
+    stage = Stage(stage)
+    names = canonical_ops(ops)
+    specs = [OPS[n] for n in names]
+
+    if is_vector_ops(names):
+        comps = list(target)
+        for spec in specs:
+            for c in comps:  # mixed-scheme vectors: every component must
+                _check_feasible(spec, c.scheme, stage)  # support the stage
+        axes_per_comp = [set() for _ in comps]
+        for spec in specs:
+            for i, axes in enumerate(spec.component_axes(len(comps))):
+                axes_per_comp[i].update(axes)
+        ctxs = [
+            StageContext(c, stage, region, join_closures(
+                [_deriv_closure(c.scheme, stage, a) for a in sorted(axes)]))
+            for c, axes in zip(comps, axes_per_comp)]
+        return {spec.name: spec.lower_vector(ctxs, axis) for spec in specs}
+
+    c = target
+    for spec in specs:
+        _check_feasible(spec, c.scheme, stage)
+    closure = join_closures(
+        [spec.closure(c.scheme, stage, axis) for spec in specs])
+    ctx = StageContext(c, stage, region, closure)
+    family = "lorenzo" if c.scheme.is_lorenzo else "blockmean"
+    out = {}
+    for spec in specs:
+        rule = spec.lower.get((stage, family)) or spec.lower[(stage, "any")]
+        out[spec.name] = rule(ctx, axis)
+    return out

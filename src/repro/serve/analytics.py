@@ -3,19 +3,23 @@
 Mirrors the token engine's continuous-batching contract (``add_request`` /
 ``step`` / ``run_until_drained``) for homomorphic analytics over compressed
 fields.  Each ``step`` drains the queue, groups requests by
-``(op, stage directive, axis)`` and — via the query front-end — by field
+``(op set, stage directive, axis)`` and — via the query front-end — by field
 layout, and issues one jitted vmap call per group, so N concurrent requests
-over same-layout fields cost one dispatch instead of N.
+over same-layout fields cost one dispatch instead of N.  A request may name
+*several* ops (``op=["mean", "std"]``): the fused plan pays one stage
+reconstruction for the whole set and the request resolves to a result dict.
+The op-set component of the group signature is canonical (order-insensitive),
+so ``["std", "mean"]`` and ``["mean", "std"]`` batch — and compile — together.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.analytics import MULTIVARIATE, CostModel, query
+from repro.analytics import CostModel, query
 from repro.analytics.engine import BatchedAnalytics
 from repro.analytics.query import _group_signature
-from repro.core import Compressed, Encoded, Stage
+from repro.core import Compressed, Encoded, Stage, oplib
 from repro.core import region as region_mod
 
 Field = Union[Compressed, Encoded]
@@ -27,23 +31,24 @@ def _region_signature(req: "AnalyticsRequest"):
     the caller's per-request guard turns that into a rejection."""
     if req.region is None:
         return None
-    first = req.fields[0] if req.op in MULTIVARIATE else req.fields
+    ops = oplib.canonical_ops(req.op)
+    first = req.fields[0] if oplib.is_vector_ops(ops) else req.fields
     return region_mod.normalize_region(req.region, first.shape)
 
 
 @dataclasses.dataclass
 class AnalyticsRequest:
-    """One analytical operation over one (possibly vector) compressed field."""
+    """One or more analytical operations over one (possibly vector) field."""
 
     uid: int
     fields: Union[Field, Sequence[Field]]  # single field, or components for
                                            # divergence/curl
-    op: str = "mean"
+    op: Union[str, Sequence[str]] = "mean"  # one op, or a fused op set
     stage: Union[Stage, str, int] = "auto"
     axis: int = 0                          # derivative only
     region: Any = None                     # per-axis window, or None for full
-    result: Any = None
-    result_stage: Optional[Stage] = None
+    result: Any = None                     # array, or {op: array} for op sets
+    result_stage: Any = None               # Stage, or {op: Stage} for op sets
     error: Optional[str] = None            # set instead of result on rejection
     done: bool = False
 
@@ -71,18 +76,20 @@ class AnalyticsFrontend:
     def step(self) -> List[AnalyticsRequest]:
         """Serve up to ``max_batch`` queued requests; returns those finished.
 
-        Requests are grouped by (op, stage directive, axis, region, field
-        layout), so a rejection — infeasible stage, malformed fields — only
-        affects its own group; everything servable in the step is served.
+        Requests are grouped by (canonical op set, stage directive, axis,
+        region, field layout), so a rejection — infeasible stage, malformed
+        fields — only affects its own group; everything servable in the step
+        is served.
         """
         batch, self._queue = self._queue[:self.max_batch], self._queue[self.max_batch:]
         finished: List[AnalyticsRequest] = []
         groups: Dict[Tuple, List[AnalyticsRequest]] = {}
         for req in batch:
             try:
-                sig = (req.op, str(req.stage), req.axis, _region_signature(req),
-                       _group_signature(req.fields, req.op))
-            except Exception as e:  # fields aren't compressed containers
+                ops = oplib.canonical_ops(req.op)
+                sig = (ops, str(req.stage), req.axis, _region_signature(req),
+                       _group_signature(req.fields, oplib.is_vector_ops(ops)))
+            except Exception as e:  # unknown op / fields aren't containers
                 finished.append(self._reject(req, e))
                 continue
             groups.setdefault(sig, []).append(req)
@@ -97,6 +104,13 @@ class AnalyticsFrontend:
                 finished.extend(self._reject(r, e) for r in group)
                 continue
             for req, value, stage in zip(group, res.values, res.stages):
+                # a group may mix op="mean" and op=["mean"] requests (same
+                # canonical signature): give each the form it asked for
+                if isinstance(req.op, str) and isinstance(value, dict):
+                    value, stage = value[req.op], stage[req.op]
+                elif not isinstance(req.op, str) and not isinstance(value, dict):
+                    (name,) = oplib.canonical_ops(req.op)
+                    value, stage = {name: value}, {name: stage}
                 req.result = value
                 req.result_stage = stage
                 req.done = True

@@ -17,7 +17,7 @@ from repro.core import (Stage, UnsupportedStageError, batch_stack,
 from repro.serve import AnalyticsFrontend, AnalyticsRequest
 
 ALL = [hszp, hszx, hszp_nd, hszx_nd]
-UNIVARIATE = ["mean", "std", "derivative", "laplacian"]
+UNIVARIATE = ["mean", "std", "derivative", "gradient", "laplacian"]
 
 
 def _compress_many(comp, n, shape=(37, 53), rel_eb=1e-3, seed=0):
@@ -33,6 +33,8 @@ def _apply(op, c, stage, axis=0):
         return H.std(c, stage)
     if op == "derivative":
         return H.derivative(c, stage, axis)
+    if op == "gradient":
+        return H.gradient(c, stage)
     if op == "laplacian":
         return H.laplacian(c, stage)
     if op == "divergence":

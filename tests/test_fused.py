@@ -1,0 +1,306 @@
+"""Fused multi-op analytics: bit-exactness, joint planning, cache identity.
+
+The contract under test (ISSUE 3 acceptance):
+
+* every fused op-set result is bit-exact vs the corresponding single-op call
+  at the same stage — all four schemes, with and without ``region=``;
+* the jit-cache key is order-insensitive in the op set (``["std", "mean"]``
+  and ``["mean", "std"]`` hit one compiled program), and a fused query
+  issues one batched compiled call per layout group;
+* ``plan_stages`` picks one shared stage over the feasible intersection and
+  falls back to per-op stages only when a calibrated cost model prices the
+  per-op optima strictly cheaper;
+* ``gradient`` is a first-class planned op: feasibility matrix, engine,
+  query, and serve all accept it.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import analytics
+from repro.core import (Stage, UnsupportedStageError, homomorphic as H,
+                        hszp, hszp_nd, hszx, hszx_nd, oplib)
+from repro.serve import AnalyticsFrontend, AnalyticsRequest
+
+ALL = [hszp, hszx, hszp_nd, hszx_nd]
+REGION = ((30, 75), (10, 52))  # unaligned window of the 181x97 field_2d
+
+FUSED_SETS = [("mean", "std"), ("mean", "std", "laplacian"),
+              ("std", "derivative"), ("mean", "gradient")]
+
+
+def _c(comp, data, rel_eb=1e-3):
+    return comp.compress(jnp.asarray(data), rel_eb=rel_eb)
+
+
+def _compress_many(comp, n, shape=(64, 48), rel_eb=1e-3, seed=0):
+    rng = np.random.default_rng(seed)
+    return [comp.compress(jnp.asarray(rng.normal(0, 1, shape).astype(np.float32)),
+                          rel_eb=rel_eb) for _ in range(n)]
+
+
+def _single(op, c, stage, axis=0, region=None):
+    fn = {"mean": lambda: H.mean(c, stage, region=region),
+          "std": lambda: H.std(c, stage, region=region),
+          "derivative": lambda: H.derivative(c, stage, axis, region=region),
+          "gradient": lambda: H.gradient(c, stage, region=region),
+          "laplacian": lambda: H.laplacian(c, stage, region=region)}[op]
+    return fn()
+
+
+def _assert_same(got, ref):
+    if isinstance(ref, tuple):
+        assert isinstance(got, tuple) and len(got) == len(ref)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def _shared_stages(scheme, ops):
+    return [s for s in Stage
+            if all(s in analytics.feasible_stages(scheme, op) for op in ops)]
+
+
+# -- fused == single-op, bit for bit ------------------------------------------
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("ops", FUSED_SETS, ids="+".join)
+def test_fused_bit_exact_vs_single_op(comp, ops, field_2d):
+    c = _c(comp, field_2d)
+    e = comp.encode(c)
+    for field in (c, e):
+        for stage in _shared_stages(comp.scheme, ops):
+            out = H.compute(field, ops, stage, axis=1)
+            assert set(out) == set(ops)
+            for op in ops:
+                _assert_same(out[op], _single(op, field, stage, axis=1))
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("ops", FUSED_SETS, ids="+".join)
+def test_fused_region_bit_exact_vs_single_op(comp, ops, field_2d):
+    c = _c(comp, field_2d)
+    e = comp.encode(c)
+    for field in (c, e):
+        for stage in _shared_stages(comp.scheme, ops):
+            if stage == Stage.M:
+                continue  # unaligned window: stage 1 infeasible by design
+            out = H.compute(field, ops, stage, axis=1, region=REGION)
+            for op in ops:
+                _assert_same(out[op],
+                             _single(op, field, stage, axis=1, region=REGION))
+
+
+@pytest.mark.parametrize("comp", [hszp_nd, hszx_nd], ids=lambda c: c.scheme.value)
+def test_fused_multivariate_bit_exact(comp, vector_field_2d):
+    u, v = vector_field_2d
+    cu, cv = _c(comp, u), _c(comp, v)
+    region = ((20, 60), (40, 90))
+    for stage in _shared_stages(comp.scheme, ("divergence", "curl")):
+        for r in (None, region):
+            out = H.compute([cu, cv], ["curl", "divergence"], stage, region=r)
+            _assert_same(out["divergence"], H.divergence([cu, cv], stage, region=r))
+            _assert_same(out["curl"], H.curl([cu, cv], stage, region=r))
+
+
+def test_mixed_arity_op_set_rejected(field_2d):
+    c = _c(hszp_nd, field_2d)
+    with pytest.raises(ValueError):
+        H.compute(c, ["mean", "curl"], Stage.Q)
+    with pytest.raises(ValueError):
+        oplib.canonical_ops([])
+    with pytest.raises(ValueError):
+        oplib.canonical_ops(["bogus"])
+
+
+def test_fused_infeasible_stage_raises(field_2d):
+    c = _c(hszx_nd, field_2d)
+    with pytest.raises(UnsupportedStageError):
+        H.compute(c, ["mean", "std"], Stage.M)  # std has no stage-1 form
+
+
+def test_vector_op_validates_every_component(field_2d):
+    """A 1-D-scheme component makes a stage-② stencil infeasible even when
+    the first component is an nd scheme (per-component guard)."""
+    u_nd, v_1d = _c(hszp_nd, field_2d), _c(hszp, field_2d)
+    with pytest.raises(UnsupportedStageError):
+        H.divergence([u_nd, v_1d], Stage.P)
+    with pytest.raises(UnsupportedStageError):
+        H.compute([u_nd, v_1d], ["curl"], Stage.P)
+
+
+# -- joint stage planning -----------------------------------------------------
+
+def test_plan_stages_shared_stage_over_intersection():
+    # hszx mean alone runs at ① but std forces the set to the ② intersection
+    plan = analytics.plan_stages(hszx_nd.scheme, ["mean", "std"])
+    assert plan.fused == Stage.P
+    assert dict(plan.stages) == {"mean": Stage.P, "std": Stage.P}
+    assert plan.n_dispatches == 1
+    # 1-D Lorenzo stencils only exist from ③ on: the set fuses there
+    plan = analytics.plan_stages(hszp.scheme, ["mean", "laplacian"])
+    assert plan.fused == Stage.Q
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("op", analytics.OPS)
+def test_plan_stages_singleton_matches_plan_stage(comp, op):
+    plan = analytics.plan_stages(comp.scheme, [op])
+    assert plan.fused == analytics.plan_stage(comp.scheme, op)
+    assert plan.stage_of(op) == plan.fused
+
+
+def test_plan_stages_cost_model_can_unfuse():
+    """When measured per-op optima beat every shared stage, fall back."""
+    cm = analytics.CostModel()
+    scheme = hszx_nd.scheme
+    for s in (Stage.M, Stage.P, Stage.Q, Stage.F):
+        cm.record(scheme, "mean", s, 1.0 if s == Stage.M else 500.0)
+    for s in (Stage.P, Stage.Q, Stage.F):
+        cm.record(scheme, "std", s, 1.0 if s == Stage.P else 500.0)
+    plan = analytics.plan_stages(scheme, ["mean", "std"], cost_model=cm)
+    assert plan.fused is None
+    assert dict(plan.stages) == {"mean": Stage.M, "std": Stage.P}
+    assert plan.n_dispatches == 2
+    # a flat cost surface keeps the set fused (ties prefer one decode)
+    flat = analytics.CostModel()
+    for op in ("mean", "std"):
+        for s in analytics.feasible_stages(scheme, op):
+            flat.record(scheme, op, s, 10.0)
+    assert analytics.plan_stages(scheme, ["mean", "std"], cost_model=flat).fused is not None
+
+
+def test_plan_stages_explicit_stage_validates_every_op():
+    plan = analytics.plan_stages(hszx_nd.scheme, ["mean", "std"], Stage.P)
+    assert plan.fused == Stage.P
+    with pytest.raises(UnsupportedStageError):
+        analytics.plan_stages(hszx_nd.scheme, ["mean", "std"], Stage.M)
+
+
+# -- engine: order-insensitive op-set cache, one compiled call ----------------
+
+def test_op_set_cache_key_order_insensitive():
+    eng = analytics.BatchedAnalytics()
+    cs = _compress_many(hszp_nd, 3)
+    r1 = eng.run(cs, ["std", "mean"], Stage.P)
+    assert eng.cache_size == 1
+    r2 = eng.run(cs, ["mean", "std"], Stage.P)
+    assert eng.cache_size == 1          # same canonical op set -> cache hit
+    for op in ("mean", "std"):
+        np.testing.assert_array_equal(np.asarray(r1[op]), np.asarray(r2[op]))
+    # a singleton set and the plain single-op call share one entry too
+    eng.run(cs, "mean", Stage.P)
+    assert eng.cache_size == 2
+    eng.run(cs, ["mean"], Stage.P)
+    assert eng.cache_size == 2
+
+
+def test_engine_accepts_resolved_stage_without_replanning():
+    """A resolved Stage is executed as-is (planning happens in query)."""
+    eng = analytics.BatchedAnalytics()
+    cs = _compress_many(hszx_nd, 2)
+    out = eng.run(cs, "mean", Stage.Q)   # auto would have picked M
+    ref = H.mean(cs[0], Stage.Q)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref))
+
+
+def test_engine_infeasible_trace_not_cached():
+    eng = analytics.BatchedAnalytics()
+    cs = _compress_many(hszp, 2, shape=(300,))
+    with pytest.raises(UnsupportedStageError):
+        eng.run(cs, "derivative", Stage.P)  # 1-D scheme: no stage-2 stencil
+    assert eng.cache_size == 0
+
+
+def test_fused_query_one_dispatch_per_layout_group():
+    eng = analytics.BatchedAnalytics()
+    a = _compress_many(hszp_nd, 3, seed=1)
+    b = _compress_many(hszp_nd, 2, shape=(32, 32), seed=2)
+    res = analytics.query(a + b, ["mean", "std", "laplacian"], engine=eng)
+    assert res.n_batches == 2
+    assert res.n_dispatches == 2         # one compiled call per layout group
+    assert eng.cache_size == 2
+    stage = res.stages[0]["mean"]
+    refs = {op: jax.jit(lambda c, o=op: _single(o, c, stage))
+            for op in ("mean", "std", "laplacian")}
+    for got, c in zip(res.values, a + b):
+        for op, ref in refs.items():
+            _assert_same(got[op], ref(c))
+
+
+def test_fused_query_region(field_2d):
+    cs = [_c(hszx_nd, field_2d), _c(hszx_nd, field_2d * 0.5)]
+    res = analytics.query(cs, ["mean", "std"], region=REGION)
+    assert res.n_dispatches == 1
+    stage = res.stages[0]["mean"]
+    refs = {op: jax.jit(lambda c, o=op: _single(o, c, stage, region=REGION))
+            for op in ("mean", "std")}
+    for got, c in zip(res.values, cs):
+        for op, ref in refs.items():
+            _assert_same(got[op], ref(c))
+
+
+# -- gradient as a first-class planned op -------------------------------------
+
+def test_gradient_in_planner_matrix():
+    assert "gradient" in analytics.OPS
+    assert analytics.plan_stage(hszp_nd.scheme, "gradient") == Stage.P
+    assert analytics.plan_stage(hszp.scheme, "gradient") == Stage.Q
+    assert not analytics.is_feasible(hszp.scheme, "gradient", Stage.P)
+    with pytest.raises(UnsupportedStageError):
+        analytics.plan_stage(hszp.scheme, "gradient", Stage.P)
+
+
+def test_gradient_through_engine_and_query():
+    eng = analytics.BatchedAnalytics()
+    cs = _compress_many(hszp_nd, 3)
+    res = analytics.query(cs, "gradient", engine=eng)
+    assert eng.cache_size == 1
+    for got, c in zip(res.values, cs):
+        _assert_same(got, H.gradient(c, res.stages[0]))
+    # gradient shares the jit cache like any planned op
+    analytics.query(_compress_many(hszp_nd, 3, seed=5), "gradient", engine=eng)
+    assert eng.cache_size == 1
+
+
+def test_gradient_shares_prelude_with_stats(field_2d):
+    c = _c(hszp_nd, field_2d)
+    out = H.compute(c, ["mean", "gradient"], Stage.P)
+    _assert_same(out["gradient"], H.gradient(c, Stage.P))
+    _assert_same(out["mean"], H.mean(c, Stage.P))
+
+
+# -- serving: multi-op requests -----------------------------------------------
+
+def test_serve_multi_op_request(field_2d):
+    c = _c(hszx_nd, field_2d)
+    fe = AnalyticsFrontend()
+    fe.add_request(AnalyticsRequest(uid=0, fields=c, op=["mean", "std"]))
+    fe.add_request(AnalyticsRequest(uid=1, fields=c, op=["std", "mean"]))
+    fe.add_request(AnalyticsRequest(uid=2, fields=c, op="gradient"))
+    done = {r.uid: r for r in fe.run_until_drained()}
+    assert all(r.error is None for r in done.values())
+    # order-insensitive op sets batch and compile together
+    assert fe.engine.cache_size == 2
+    stage = done[0].result_stage["mean"]
+    refs = {op: jax.jit(lambda f, o=op: _single(o, f, stage))
+            for op in ("mean", "std")}
+    for uid in (0, 1):
+        assert set(done[uid].result) == {"mean", "std"}
+        assert done[uid].result_stage["mean"] == stage
+        for op, ref in refs.items():
+            _assert_same(done[uid].result[op], ref(c))
+    _assert_same(done[2].result,
+                 jax.jit(lambda f: H.gradient(f, done[2].result_stage))(c))
+
+
+def test_serve_multi_op_isolates_bad_sets(field_2d):
+    c = _c(hszx_nd, field_2d)
+    fe = AnalyticsFrontend()
+    fe.add_request(AnalyticsRequest(uid=0, fields=c, op=["mean", "std"]))
+    fe.add_request(AnalyticsRequest(uid=1, fields=c, op=["mean", "bogus"]))
+    done = {r.uid: r for r in fe.run_until_drained()}
+    assert done[0].error is None and set(done[0].result) == {"mean", "std"}
+    assert done[1].error is not None and "bogus" in done[1].error
