@@ -9,6 +9,7 @@ Public entry points:
     repro.comm       — homomorphic compressed collectives (int16 grad sync)
     repro.train      — optimizer / train-step builder / HSZ checkpoints
     repro.serve      — batched decode engine (int8 KV residency)
+    repro.store      — materialized-stage field store (id-addressed serving)
     repro.data       — resumable token pipeline + compressed field store
     repro.configs    — assigned architectures x shapes registry
     repro.launch     — mesh rules, multi-pod dry-run, roofline, drivers

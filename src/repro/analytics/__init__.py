@@ -16,7 +16,10 @@ live.  This package turns that into an engine:
 * :mod:`repro.analytics.query` — ``query(fields, op_or_ops, stage="auto")``:
   groups arbitrary field collections by layout, plans each group once,
   executes batched — one compiled call per layout group for a fused op set —
-  and returns results in input order.
+  and returns results in input order.  With ``store=`` (a
+  :class:`repro.store.FieldStore`) fields may be string ids, planning is
+  cache-aware (resident stages drop their reconstruction term), and the
+  compiled programs are seeded from resident materialized stages.
 """
 from .planner import (CostModel, FEASIBILITY, MULTIVARIATE, OPS,
                       StageSetPlan, as_stage, check_feasible, feasible_stages,

@@ -7,9 +7,12 @@ further: ``run(fields, ["mean", "std", "laplacian"])`` compiles one program
 whose shared stage-reconstruction prelude (``repro.core.oplib``) feeds every
 postlude — one decode pass, a dict of batched results.  The jit cache is
 keyed on ``(scheme, block, shape, frozen op-set, stage, region, axis,
-batch)`` — the full static signature of the compiled program — and the
-op-set component is canonically ordered, so ``["std", "mean"]`` and
-``["mean", "std"]`` hit the same entry.
+batch, seed signature)`` — the full static signature of the compiled
+program — and the op-set component is canonically ordered, so
+``["std", "mean"]`` and ``["mean", "std"]`` hit the same entry.
+Store-seeded programs (``run(..., seeds=)``) take the fields' materialized
+intermediates as extra inputs and contain no stage reconstruction; they
+compile separately from their cold twins.
 
 Stage resolution is layered, not repeated: the engine plans only when given
 ``stage="auto"`` (or another directive string).  A resolved :class:`Stage`
@@ -23,6 +26,7 @@ from collections import OrderedDict
 from typing import Mapping, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import (Compressed, Encoded, Stage, batch_stack, layout_key,
                         oplib)
@@ -37,7 +41,7 @@ StageLike = Union[Stage, str, int, StageSetPlan, Mapping[str, Stage]]
 
 def batch_key(first: Field, ops: Union[str, Sequence[str]], stage: Stage,
               axis: int = 0, n_components: int = 1, batch: int = 1,
-              region=None) -> Tuple:
+              region=None, seed_sig: Tuple | None = None) -> Tuple:
     """Static signature of one compiled batched-analytics program.
 
     The batch size is part of the key: stacking happens *inside* the jitted
@@ -45,13 +49,16 @@ def batch_key(first: Field, ops: Union[str, Sequence[str]], stage: Stage,
     never read — e.g. residuals under a stage-① metadata mean), so the
     program arity depends on it.  The (normalized) region is static too: it
     decides the gathered block set and every output shape.  The op set is
-    canonically ordered — the key is order-insensitive.
+    canonically ordered — the key is order-insensitive.  ``seed_sig``
+    (:meth:`repro.store.MaterializedStage.sig`) distinguishes store-seeded
+    programs — they take the resident intermediates as *inputs* and contain
+    no reconstruction — from cold ones.
     """
     if region is not None:
         region = region_mod.normalize_region(region, first.shape)
     names = oplib.canonical_ops(ops)
     return layout_key(first) + (names, Stage(stage), axis, n_components,
-                                batch, region)
+                                batch, region, seed_sig)
 
 
 class BatchedAnalytics:
@@ -79,21 +86,38 @@ class BatchedAnalytics:
 
     # -- compiled-program cache -------------------------------------------
     def _compiled(self, key: Tuple, ops: Tuple[str, ...], stage: Stage,
-                  axis: int, n_components: int, batch: int, region=None):
+                  axis: int, n_components: int, batch: int, region=None,
+                  seeded: bool = False):
         fn = self._jitted.get(key)
         if fn is not None:
             self._jitted.move_to_end(key)
             return fn
+
+        def stack_seeds(seeds):
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *seeds)
+
         if oplib.is_vector_ops(ops):
             def run(*flat, _ops=ops, _stage=stage, _b=batch,
                     _nc=n_components, _r=region, _axis=axis):
                 comps = [batch_stack(flat[i * _b:(i + 1) * _b])
                          for i in range(_nc)]
+                if seeded:  # trailing args: seeds, component-major like fields
+                    sc = [stack_seeds(flat[(_nc + i) * _b:(_nc + i + 1) * _b])
+                          for i in range(_nc)]
+                    return jax.vmap(lambda *args: oplib.compute(
+                        list(args[:_nc]), _ops, _stage, axis=_axis, region=_r,
+                        seed=list(args[_nc:])))(*comps, *sc)
                 return jax.vmap(lambda *cs: oplib.compute(
                     list(cs), _ops, _stage, axis=_axis, region=_r))(*comps)
         else:
-            def run(*fields, _ops=ops, _stage=stage, _r=region, _axis=axis):
-                stacked = batch_stack(fields)
+            def run(*flat, _ops=ops, _stage=stage, _b=batch, _r=region,
+                    _axis=axis):
+                stacked = batch_stack(flat[:_b])
+                if seeded:
+                    sstack = stack_seeds(flat[_b:])
+                    return jax.vmap(lambda c, m: oplib.compute(
+                        c, _ops, _stage, axis=_axis, region=_r,
+                        seed=m))(stacked, sstack)
                 return jax.vmap(lambda c: oplib.compute(
                     c, _ops, _stage, axis=_axis, region=_r))(stacked)
 
@@ -127,7 +151,8 @@ class BatchedAnalytics:
 
     # -- execution ---------------------------------------------------------
     def run(self, fields: Sequence, ops: Union[str, Sequence[str]],
-            stage: StageLike = "auto", *, axis: int = 0, region=None):
+            stage: StageLike = "auto", *, axis: int = 0, region=None,
+            seeds: Sequence | None = None):
         """Run an op (or fused op set) over ``fields`` in jitted vmapped calls.
 
         ``fields`` is a sequence of same-layout :class:`Compressed` /
@@ -141,6 +166,13 @@ class BatchedAnalytics:
         ``region`` restricts every field to the same window (same-layout
         fields share the block geometry, so one static region plan serves
         the whole batch).
+
+        ``seeds`` optionally supplies one store-resident
+        :class:`~repro.store.MaterializedStage` per field (per component
+        tuple for vector sets) matching the resolved fused stage: the
+        compiled program then takes the intermediates as inputs and skips
+        the stage reconstruction entirely.  Seeds require a fused plan (an
+        unfused fallback re-plans per op at stages the seeds don't match).
         """
         single = isinstance(ops, str)
         names = oplib.canonical_ops(ops)
@@ -166,20 +198,53 @@ class BatchedAnalytics:
                    for op in names}
             return out[names[0]] if single else out
 
+        seed_sig = None
+        if seeds is not None:
+            if len(seeds) != len(fields):
+                raise ValueError(
+                    f"{len(seeds)} seeds for {len(fields)} fields")
+            # per-component signatures may differ (per-axis band closures);
+            # across the batch each component's seeds must agree to stack
+            per_comp = (tuple(zip(*seeds)) if vector else (tuple(seeds),))
+            comp_sigs = []
+            for comp_seeds in per_comp:
+                sigs = {s.sig() for s in comp_seeds}
+                if len(sigs) != 1:
+                    raise ValueError(
+                        f"seeds must share one layout signature per "
+                        f"component, got {sigs}")
+                comp_sigs.append(sigs.pop())
+                # the seed owns the stage-serving rule (③ serves ④, ...)
+                if not comp_seeds[0].serves(plan.fused):
+                    raise ValueError(
+                        f"seeds materialized at stage "
+                        f"{Stage(comp_seeds[0].stage).name} cannot seed a "
+                        f"stage-{plan.fused.name} plan")
+            seed_sig = tuple(comp_sigs)
+
         b = len(fields)
         padded = list(fields)
+        padded_seeds = list(seeds) if seeds is not None else None
         if self.bucket_batches:
-            padded += [fields[-1]] * (self._bucket(b) - b)
+            pad = self._bucket(b) - b
+            padded += [fields[-1]] * pad
+            if padded_seeds is not None:
+                padded_seeds += [padded_seeds[-1]] * pad
         key = batch_key(first, names, plan.fused, d_axis, n_comp,
-                        len(padded), region)
+                        len(padded), region, seed_sig)
         fresh = key not in self._jitted
         fn = self._compiled(key, names, plan.fused, d_axis, n_comp,
-                            len(padded), region)
+                            len(padded), region, seeded=seeds is not None)
         if vector:
             # component-major flat args: (f0[c], f1[c], ...) for each c
             flat = tuple(f[i] for i in range(n_comp) for f in padded)
+            if padded_seeds is not None:
+                flat += tuple(s[i] for i in range(n_comp)
+                              for s in padded_seeds)
         else:
             flat = tuple(padded)
+            if padded_seeds is not None:
+                flat += tuple(padded_seeds)
         try:
             out = fn(*flat)
         except Exception:

@@ -35,7 +35,10 @@ for the full field.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
+import json
+import os
+from typing import (AbstractSet, Dict, Iterable, Mapping, Optional, Sequence,
+                    Tuple, Union)
 
 from repro.core import Scheme, Stage, UnsupportedStageError, oplib
 from repro.core import region as region_mod
@@ -92,19 +95,43 @@ def check_feasible(scheme: Scheme, op: str, stage: Stage) -> Stage:
     return stage
 
 
+def _resident_rank(cached: AbstractSet[Stage]):
+    """Stage ranking when costs are unmeasured but residency is known:
+    stages needing no reconstruction (cached, or ① — metadata is always
+    resident in the container) beat stages that must reconstruct; ties go
+    to stage order."""
+    resident = set(cached) | {Stage.M}
+    return lambda s: (0 if s in resident else 1, int(s))
+
+
 class CostModel:
-    """Per-``(scheme, op, stage)`` cost estimates in microseconds per call.
+    """Per-``(scheme, op, stage)`` cost estimates in microseconds per call,
+    plus per-``(scheme, stage)`` *reconstruction* costs used to price
+    cache-resident stages.
 
     Uncalibrated cells fall back to a stage-ordered default (stage index
     scaled to rank *below* any measured cost is wrong — instead the default
     is only used when the whole ``(scheme, op)`` row is unmeasured, so mixed
     calibration never compares measured against made-up numbers).
+
+    A *cached* stage (its materialized intermediate is resident in a
+    :class:`repro.store.FieldStore`) drops the reconstruction term: its
+    effective cost is ``max(measured - reconstruction, 0)``, with the
+    reconstruction calibrated from the ``fig34`` decompression rows.  An
+    unmeasured reconstruction falls back to the largest one measured at a
+    *lower* stage — reconstruction work is monotone in stage (paper §V),
+    so the discount stays conservative and a cached stage never beats a
+    measured rival on made-up numbers.
     """
 
-    def __init__(self, table: Optional[Dict[Tuple[Scheme, str, Stage], float]] = None):
+    def __init__(self, table: Optional[Dict[Tuple[Scheme, str, Stage], float]] = None,
+                 recon: Optional[Dict[Tuple[Scheme, Stage], float]] = None):
         self.table: Dict[Tuple[Scheme, str, Stage], float] = dict(table or {})
         self._counts: Dict[Tuple[Scheme, str, Stage], int] = {
             k: 1 for k in self.table}
+        self.recon: Dict[Tuple[Scheme, Stage], float] = dict(recon or {})
+        self._recon_counts: Dict[Tuple[Scheme, Stage], int] = {
+            k: 1 for k in self.recon}
 
     # -- calibration -------------------------------------------------------
     _BENCH_OP_ALIASES = {"deriv": "derivative", "div": "divergence"}
@@ -119,13 +146,22 @@ class CostModel:
         self.table[key] = (prev * n + us) / (n + 1)
         self._counts[key] = n + 1
 
+    def record_reconstruction(self, scheme: Scheme, stage: Stage, us: float) -> None:
+        """Record a measured stage-reconstruction (decompression) cost."""
+        key = (Scheme(scheme), Stage(stage))
+        n = self._recon_counts.get(key, 0)
+        prev = self.recon.get(key, 0.0)
+        self.recon[key] = (prev * n + us) / (n + 1)
+        self._recon_counts[key] = n + 1
+
     @classmethod
     def from_benchmark_csv(cls, rows: Union[str, Iterable[str]]) -> "CostModel":
         """Calibrate from ``benchmarks/run.py`` output.
 
         Parses the op-throughput rows (``fig58/…``, ``fig910/…``,
-        ``fig1112/…``), whose names encode ``…/<op>/<scheme>-<stage_tag>``;
-        other rows are ignored.
+        ``fig1112/…``), whose names encode ``…/<op>/<scheme>-<stage_tag>``,
+        and the per-stage decompression rows (``fig34/<ds>/<scheme>-<tag>``)
+        into the reconstruction table; other rows are ignored.
         """
         model = cls()
         if isinstance(rows, str):
@@ -137,6 +173,17 @@ class CostModel:
             name, _, rest = line.partition(",")
             us_text = rest.partition(",")[0]
             parts = name.split("/")
+            if len(parts) == 3 and parts[0] == "fig34":
+                scheme_name, _, tag = parts[2].rpartition("-")
+                if tag not in cls._BENCH_STAGE_TAGS:
+                    continue
+                try:
+                    model.record_reconstruction(Scheme(scheme_name),
+                                                cls._BENCH_STAGE_TAGS[tag],
+                                                float(us_text))
+                except ValueError:
+                    continue
+                continue
             if len(parts) != 4 or parts[0] not in ("fig58", "fig910", "fig1112"):
                 continue
             op = cls._BENCH_OP_ALIASES.get(parts[2], parts[2])
@@ -151,19 +198,94 @@ class CostModel:
             model.record(scheme, op, cls._BENCH_STAGE_TAGS[tag], us)
         return model
 
+    # -- persistence (satellite: calibrations must survive the process) ----
+    _FORMAT = "hsz-cost-model"
+
+    def save(self, path: Union[str, os.PathLike]) -> None:
+        """JSON-serialize the full calibration state (cells, reconstruction
+        table, observation counts) so CI and serving reuse measured models."""
+        def skey(k):
+            return (k[0].value,) + tuple(str(p) for p in k[1:])
+
+        payload = {
+            "format": self._FORMAT,
+            "version": 1,
+            "cells": [
+                {"scheme": sch.value, "op": op, "stage": st.name,
+                 "us": self.table[(sch, op, st)],
+                 "count": self._counts.get((sch, op, st), 1)}
+                for sch, op, st in sorted(self.table, key=skey)],
+            "recon": [
+                {"scheme": sch.value, "stage": st.name,
+                 "us": self.recon[(sch, st)],
+                 "count": self._recon_counts.get((sch, st), 1)}
+                for sch, st in sorted(self.recon, key=skey)],
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: Union[str, os.PathLike]) -> "CostModel":
+        """Inverse of :meth:`save`: an exact round-trip, including the
+        observation counts, so post-load :meth:`record` calls continue the
+        same running means."""
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("format") != cls._FORMAT:
+            raise ValueError(f"{path}: not a {cls._FORMAT} file")
+        if data.get("version") != 1:
+            raise ValueError(f"{path}: unsupported version {data.get('version')!r}")
+        model = cls()
+        for cell in data.get("cells", ()):
+            key = (Scheme(cell["scheme"]), str(cell["op"]), Stage[cell["stage"]])
+            model.table[key] = float(cell["us"])
+            model._counts[key] = int(cell.get("count", 1))
+        for cell in data.get("recon", ()):
+            key = (Scheme(cell["scheme"]), Stage[cell["stage"]])
+            model.recon[key] = float(cell["us"])
+            model._recon_counts[key] = int(cell.get("count", 1))
+        return model
+
     # -- lookup ------------------------------------------------------------
-    def cost(self, scheme: Scheme, op: str, stage: Stage) -> Optional[float]:
-        return self.table.get((Scheme(scheme), op, Stage(stage)))
+    def reconstruction(self, scheme: Scheme, stage: Stage) -> Optional[float]:
+        """Measured reconstruction microseconds for a stage (① is free —
+        metadata is always resident)."""
+        if Stage(stage) == Stage.M:
+            return 0.0
+        return self.recon.get((Scheme(scheme), Stage(stage)))
+
+    def cost(self, scheme: Scheme, op: str, stage: Stage, *,
+             cached: bool = False) -> Optional[float]:
+        base = self.table.get((Scheme(scheme), op, Stage(stage)))
+        if base is None or not cached:
+            return base
+        rec = self.reconstruction(scheme, stage)
+        if rec is None:
+            # monotone fallback: reconstruction work grows with stage
+            # (paper §V), so the largest measurement at a lower stage
+            # *under*-estimates this stage's — a conservative discount
+            lower = [v for s in Stage if s < Stage(stage)
+                     for v in [self.recon.get((Scheme(scheme), s))]
+                     if v is not None]
+            rec = max(lower) if lower else 0.0
+        return max(base - rec, 0.0)
 
     def cheapest(self, scheme: Scheme, op: str, stages: Sequence[Stage],
-                 fractions: Optional[Mapping[Stage, float]] = None) -> Stage:
+                 fractions: Optional[Mapping[Stage, float]] = None,
+                 cached: Optional[AbstractSet[Stage]] = None) -> Stage:
         """Cheapest stage; ``fractions`` scale each stage's measured cost by
-        the share of the field its region closure touches (1.0 = full field)."""
-        costs = {s: self.cost(scheme, op, s) for s in stages}
+        the share of the field its region closure touches (1.0 = full
+        field); stages in ``cached`` are priced without their reconstruction
+        term."""
+        cached = frozenset(cached or ())
+        costs = {s: self.cost(scheme, op, s, cached=s in cached)
+                 for s in stages}
         if any(c is None for c in costs.values()):
             # incomplete row: fall back to stage order rather than mixing
-            # measured numbers with fabricated defaults
-            return min(stages, key=int)
+            # measured numbers with fabricated defaults — but residency is
+            # hard knowledge, so cached stages still rank first
+            return min(stages, key=_resident_rank(cached))
         if fractions is not None:
             costs = {s: c * fractions.get(s, 1.0) for s, c in costs.items()}
         return min(stages, key=lambda s: (costs[s], int(s)))
@@ -172,7 +294,8 @@ class CostModel:
 def plan_stage(scheme: Scheme, op: str,
                stage: Union[Stage, str, int] = "auto",
                cost_model: Optional[CostModel] = None, *,
-               region=None, field=None, axis: int = 0) -> Stage:
+               region=None, field=None, axis: int = 0,
+               cached: Optional[AbstractSet[Stage]] = None) -> Stage:
     """Resolve the execution stage for ``op`` on ``scheme``.
 
     ``stage="auto"`` picks the cheapest feasible stage (never one that would
@@ -180,8 +303,11 @@ def plan_stage(scheme: Scheme, op: str,
     against the feasibility matrix.  With ``region`` (and the queried
     ``field`` for its geometry), stage ① is dropped/rejected for windows that
     are not block-aligned, and calibrated costs scale with each stage's
-    region-closure size.
+    region-closure size.  ``cached`` names the stages whose materialized
+    intermediates are store-resident: their reconstruction term is dropped,
+    so auto planning can pick a *higher* stage than it would cold.
     """
+    cached = frozenset(cached or ())
     if stage != "auto":
         stage = check_feasible(scheme, op, stage)
         if (stage == Stage.M and region is not None and field is not None
@@ -201,7 +327,11 @@ def plan_stage(scheme: Scheme, op: str,
             fractions = {s: region_mod.closure_fraction(field, op, s, region,
                                                         axis=axis)
                          for s in stages}
-        return cost_model.cheapest(scheme, op, stages, fractions)
+        return cost_model.cheapest(scheme, op, stages, fractions, cached)
+    if cached:
+        # no measured costs, but residency is hard knowledge: a resident
+        # stage pays no reconstruction, which is the dominant term (§V)
+        return min(stages, key=_resident_rank(cached))
     return stages[0]
 
 
@@ -231,7 +361,8 @@ class StageSetPlan:
 def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
                 stage: Union[Stage, str, int] = "auto",
                 cost_model: Optional[CostModel] = None, *,
-                region=None, field=None, axis: int = 0) -> StageSetPlan:
+                region=None, field=None, axis: int = 0,
+                cached: Optional[AbstractSet[Stage]] = None) -> StageSetPlan:
     """Jointly resolve the execution stage(s) for an op *set*.
 
     An explicit stage is validated against every op in the set.  With
@@ -242,9 +373,13 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
     fully calibrated cost model prices the per-op optima strictly below the
     best shared stage (conservative: measured per-op costs each include
     their own decode, so this comparison understates the fusion saving).
+    ``cached`` stages (store-resident materializations) are priced without
+    their reconstruction term, which can flip the shared stage to a higher
+    one that is already resident.
 
     ``plan_stages(scheme, [op])`` always agrees with ``plan_stage``.
     """
+    cached = frozenset(cached or ())
     names = oplib.canonical_ops(ops)
     if stage != "auto":
         resolved = as_stage(stage)
@@ -270,7 +405,8 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
     def per_op_plan() -> Tuple[Tuple[str, Stage], ...]:
         return tuple(
             (op, plan_stage(scheme, op, "auto", cost_model,
-                            region=region, field=field, axis=axis))
+                            region=region, field=field, axis=axis,
+                            cached=cached))
             for op in names)
 
     inter = tuple(s for s in Stage if all(s in f for f in feas.values()))
@@ -290,7 +426,8 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
                     1.0 if region is None or field is None
                     else region_mod.closure_fraction(field, op, s, region,
                                                      axis=axis))
-            return cost_model.cost(scheme, op, s) * fractions[key]
+            return (cost_model.cost(scheme, op, s, cached=s in cached)
+                    * fractions[key])
 
         totals = {s: sum(cost(op, s) for op in names) for s in inter}
         shared = min(inter, key=lambda s: (totals[s], int(s)))
@@ -298,6 +435,10 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
         per_total = sum(cost(op, s) for op, s in per_op)
         if per_total < totals[shared]:
             return StageSetPlan(names, per_op, None)
+    elif cached:
+        # uncalibrated but residency is known: a resident shared stage pays
+        # no reconstruction at all — prefer it over any cold stage
+        shared = min(inter, key=_resident_rank(cached))
     else:
         # stage order is monotone in decompression work (paper §V): the
         # lowest shared stage is the cheapest joint reconstruction

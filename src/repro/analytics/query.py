@@ -8,6 +8,16 @@ the set onto one shared stage over the feasible intersection
 per (group, fused plan) through the shared :class:`BatchedAnalytics` engine,
 and scatters results back into input order.  The engine receives the
 *resolved* plan, so stages are planned exactly once per group.
+
+With a :class:`repro.store.FieldStore` attached (``store=``), entries of
+``fields`` may be string ids (components too, for vector ops).  Id-resolved
+fields are served *through the store*: planning sees which stages are
+already materialized (their reconstruction term drops, so ``stage="auto"``
+can flip to a resident stage), and the group's compiled program is seeded
+with the resident intermediates — a cache hit pays only the op postludes.
+A miss materializes through the store (one reconstruction per field
+lifetime, LRU/byte-budget permitting).  Results are bit-identical to the
+storeless path at the same stage.
 """
 from __future__ import annotations
 
@@ -29,6 +39,8 @@ class QueryResult:
 
     For a single op, ``values[i]`` is that field's result and ``stages[i]``
     its execution stage; for an op set, both are dicts keyed by op name.
+    ``store_hits``/``store_misses`` count materialization-cache lookups the
+    query made (0 when no store was involved).
     """
 
     values: List                   # result (or {op: result}) per input
@@ -36,6 +48,8 @@ class QueryResult:
     op: Union[str, Tuple[str, ...]]
     n_batches: int                 # number of field groups (layout batches)
     n_dispatches: int              # jitted compiled calls actually issued
+    store_hits: int = 0            # materializations served from cache
+    store_misses: int = 0          # materializations built on demand
 
     def __iter__(self):
         return iter(self.values)
@@ -60,11 +74,47 @@ def _unbatch(batched, i: int):
     return batched[i]
 
 
+def _store_get(store, fid: str) -> Field:
+    if store is None:
+        raise ValueError(
+            f"field id {fid!r} given but no store= attached to the query")
+    return store.get(fid)
+
+
+def _resolve_item(item, store, vector):
+    """Resolve one ``fields`` entry: string ids -> store fields.
+
+    Returns ``(resolved_item, ids)`` where ``ids`` is the field id (or the
+    per-component id tuple) when the *whole* item is store-backed, else
+    ``None`` — only fully id-resolved items are seedable (a raw array has no
+    cache identity).
+    """
+    if vector:
+        if isinstance(item, str):
+            raise TypeError(
+                f"vector ops take one field (or id) per component; got the "
+                f"bare id {item!r} — pass a tuple of component ids instead")
+        comps, ids = [], []
+        for c in item:
+            if isinstance(c, str):
+                comps.append(_store_get(store, c))
+                ids.append(c)
+            else:
+                comps.append(c)
+                ids.append(None)
+        all_ids = all(i is not None for i in ids)
+        return tuple(comps), (tuple(ids) if all_ids else None)
+    if isinstance(item, str):
+        return _store_get(store, item), item
+    return item, None
+
+
 def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
           stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
           region=None,
           cost_model: Optional[CostModel] = None,
-          engine: Optional[BatchedAnalytics] = None) -> QueryResult:
+          engine: Optional[BatchedAnalytics] = None,
+          store=None) -> QueryResult:
     """Run one analytical operation — or a fused op set — over many fields.
 
     Parameters
@@ -74,6 +124,8 @@ def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
         ``laplacian``): a sequence of :class:`Compressed`/:class:`Encoded`
         fields.  For vector ops (``divergence``/``curl``): a sequence of
         vector fields, each a tuple of component fields (one per axis).
+        With ``store=``, any field (or component) may instead be a string
+        id registered in the store.
     op:
         One op name from :data:`repro.analytics.OPS`, or a sequence of names
         (single arity per set).  An op set shares one stage reconstruction:
@@ -94,6 +146,12 @@ def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
         (``repro.core.region``).  Region geometry feeds stage planning —
         stage ① needs block-aligned windows, and calibrated costs scale by
         each stage's closure size.
+    store:
+        Optional :class:`repro.store.FieldStore`.  Resolves string field
+        ids, makes planning cache-aware (a store-resident stage is priced
+        without its reconstruction term), and seeds the engine's compiled
+        programs from resident materializations — building them on a miss
+        so the next query hits.
     """
     single = isinstance(op, str)
     names = oplib.canonical_ops(op)
@@ -102,28 +160,72 @@ def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
         engine = default_engine
     d_axis = axis if any(oplib.OPS[n].needs_axis for n in names) else 0
 
-    # group by static layout signature, preserving input order within groups
+    resolved: List = []
+    ids: List = []
+    for item in fields:
+        r, fid = _resolve_item(item, store, vector)
+        resolved.append(r)
+        ids.append(fid)
+
+    hits0, misses0 = ((store.stats.hits, store.stats.misses)
+                      if store is not None else (0, 0))
+
+    # group by static layout signature (store-backed items separately: only
+    # they carry the cache identity seeding needs), preserving input order
     groups: Dict[Tuple, List[int]] = {}
-    for i, item in enumerate(fields):
-        groups.setdefault(_group_signature(item, vector), []).append(i)
+    for i, item in enumerate(resolved):
+        sig = (_group_signature(item, vector), ids[i] is not None)
+        groups.setdefault(sig, []).append(i)
 
     values: List = [None] * len(fields)
     stages: List = [None] * len(fields)
     n_dispatches = 0
-    for indices in groups.values():
-        group = [fields[i] for i in indices]
+    for (_, store_backed), indices in groups.items():
+        group = [resolved[i] for i in indices]
         first = group[0][0] if vector else group[0]
+        cached = None
+        if store_backed:
+            sets = [store.cached_stages(ids[i], names, region=region,
+                                        axis=d_axis) for i in indices]
+            cached = frozenset.intersection(*sets)
         plan = plan_stages(first.scheme, names, stage,
                            cost_model or engine.cost_model,
-                           region=region, field=first, axis=d_axis)
+                           region=region, field=first, axis=d_axis,
+                           cached=cached)
+        seeds = None
+        if (store_backed and plan.fused is not None
+                and plan.fused != Stage.M):
+            s = plan.fused
+            if vector:
+                closures = oplib.component_closures(
+                    names, [c.scheme for c in group[0]], s)
+                seeds = [tuple(store.seed(fid, s, region=region, closure=cl)
+                               for fid, cl in zip(ids[i], closures))
+                         for i in indices]
+                flat = [m for item in seeds for m in item]
+            else:
+                cl = oplib.set_closure(names, first.scheme, s, d_axis)
+                seeds = [store.seed(ids[i], s, region=region, closure=cl)
+                         for i in indices]
+                flat = seeds
+            if any(m is None for m in flat):
+                # some cell can never be retained under the byte budget:
+                # re-materializing it every call would make the store a
+                # net loss, so the whole group runs unseeded
+                seeds = None
         batched = engine.run(group, op if single else names, plan,
-                             axis=axis, region=region)
+                             axis=axis, region=region, seeds=seeds)
         n_dispatches += plan.n_dispatches
         for j, i in enumerate(indices):
             values[i] = _unbatch(batched, j)
             # fresh dict per field: callers may hold/mutate their own copy
             stages[i] = (plan.stage_of(names[0]) if single
                          else dict(plan.stages))
+    store_hits = store_misses = 0
+    if store is not None:
+        store_hits = store.stats.hits - hits0
+        store_misses = store.stats.misses - misses0
     return QueryResult(values=values, stages=stages,
                        op=op if single else names,
-                       n_batches=len(groups), n_dispatches=n_dispatches)
+                       n_batches=len(groups), n_dispatches=n_dispatches,
+                       store_hits=store_hits, store_misses=store_misses)

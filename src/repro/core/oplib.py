@@ -69,6 +69,41 @@ def join_closures(closures: Sequence[R.Closure]) -> R.Closure:
     return "hull"
 
 
+def set_closure(ops: Union[str, Sequence[str]], scheme: Scheme, stage: Stage,
+                axis: int = 0) -> R.Closure:
+    """Joined region dependency closure of a *field-arity* op set — the
+    closure :func:`compute` reconstructs, hence the materialization key a
+    store must match to seed the set's prelude."""
+    names = canonical_ops(ops)
+    if is_vector_ops(names):
+        raise ValueError(
+            f"vector op set {names} has per-component closures; "
+            "use component_closures()")
+    return join_closures(
+        [OPS[n].closure(Scheme(scheme), Stage(stage), axis) for n in names])
+
+
+def component_closures(ops: Union[str, Sequence[str]],
+                       schemes: Sequence[Scheme],
+                       stage: Stage) -> Tuple[R.Closure, ...]:
+    """Per-component joined closures of a *vector-arity* op set: each
+    component's closure joins the derivative bands of every axis any op in
+    the set differentiates it along."""
+    names = canonical_ops(ops)
+    if not is_vector_ops(names):
+        raise ValueError(f"field op set {names} has one closure; "
+                         "use set_closure()")
+    stage = Stage(stage)
+    axes_per_comp = [set() for _ in schemes]
+    for name in names:
+        for i, axes in enumerate(OPS[name].component_axes(len(schemes))):
+            axes_per_comp[i].update(axes)
+    return tuple(
+        join_closures([_deriv_closure(Scheme(s), stage, a)
+                       for a in sorted(axes)])
+        for s, axes in zip(schemes, axes_per_comp))
+
+
 # ===========================================================================
 # the shared prelude
 # ===========================================================================
@@ -80,14 +115,38 @@ class StageContext:
     share one decode / recorrelation / window-crop pass.  All host-side
     geometry (plans, weights) is static; the jnp work composes with
     ``jit``/``vmap`` exactly like the single-op paths always have.
+
+    ``seed`` is an optional materialized intermediate (duck-typed as
+    ``repro.store.MaterializedStage``: ``stage`` / ``closure`` / ``region``
+    meta plus ``sub`` / ``q_spatial`` / ``f_spatial`` arrays).  A seed whose
+    key matches this context replaces the corresponding reconstruction —
+    the arrays it holds were produced by this very prelude, so every
+    downstream postlude is bit-identical to the unseeded path; a mismatched
+    key raises (the store guarantees matches by construction).
     """
 
-    def __init__(self, c: Field, stage: Stage, region, closure: R.Closure):
+    def __init__(self, c: Field, stage: Stage, region, closure: R.Closure,
+                 seed=None):
         self.field = c
         self.stage = Stage(stage)
         self.region = region
         self.closure = closure
         self._axis_diffs: Dict[int, jax.Array] = {}
+        if seed is not None:
+            norm = (R.normalize_region(region, c.shape)
+                    if region is not None else None)
+            want = R.canonical_closure(c.scheme, closure, norm)
+            got = (Stage(seed.stage), seed.closure, seed.region)
+            # the seed itself owns the stage-serving rule (e.g. stage-③
+            # integers serve stage ④: dequantize is a postlude multiply, so
+            # the float tail stays in-program and seeded == unseeded stays
+            # bit-identical) — one authoritative copy, duck-typed so core
+            # never depends on the store package
+            if not seed.serves(self.stage) or got[1:] != (want, norm):
+                raise ValueError(
+                    f"materialized seed {got} does not match context "
+                    f"({self.stage}, {want}, {norm})")
+        self._seed = seed
 
     # -- static layout ------------------------------------------------------
     @property
@@ -118,7 +177,10 @@ class StageContext:
     def sub(self) -> Compressed:
         """The honest sub-field the ops run on: the gathered region closure,
         or the (decoded) full field.  From :class:`Encoded` the region path
-        unpacks only the plan's payload words."""
+        unpacks only the plan's payload words.  A stage-② seed skips the
+        decode entirely."""
+        if self._seed is not None and self._seed.sub is not None:
+            return self._seed.sub
         if self.plan is not None:
             return R.extract(self.field, self.plan)
         c = self.field
@@ -155,20 +217,23 @@ class StageContext:
 
     def masked_sum(self, arr: jax.Array) -> jax.Array:
         """Exact (integer) sum over the queried extent: window gather
-        (region) or padding-masked full array."""
+        (region) or padding-masked full array.  Reduces *flat* — multi-axis
+        reduces compile to context-dependent strategies, and store-seeded
+        programs must agree with cold ones bit for bit."""
         if self.plan is not None:
-            return jnp.sum(self.plan.window_of(arr))
+            return jnp.sum(self.plan.window_of(arr).reshape(-1))
         w = self.valid_weight
-        return jnp.sum(arr if w is None else arr * w)
+        return jnp.sum((arr if w is None else arr * w).reshape(-1))
 
     def stat_values(self, arr: jax.Array) -> jax.Array:
-        """f32 values a statistic reduces over: the window (region) or the
-        full array with padding zeroed (full field)."""
+        """Flat f32 values a statistic reduces over: the window (region) or
+        the full array with padding zeroed (full field).  Flat for the same
+        seeded-vs-cold bit-identity reason as :meth:`masked_sum`."""
         if self.plan is not None:
-            return self.plan.window_of(arr).astype(jnp.float32)
+            return self.plan.window_of(arr).astype(jnp.float32).reshape(-1)
         x = arr.astype(jnp.float32)
         w = self.valid_weight
-        return x if w is None else x * w
+        return (x if w is None else x * w).reshape(-1)
 
     def spatial_window(self, arr: jax.Array) -> jax.Array:
         """Crop a sub-field spatial array to the stencil window: the region
@@ -204,7 +269,10 @@ class StageContext:
     @cached_property
     def q_spatial(self) -> jax.Array:
         """Stage-③ integers cropped/windowed to the queried extent — the one
-        recorrelation pass every stage-③ postlude consumes."""
+        recorrelation pass every stage-③ postlude consumes (skipped when a
+        stage-③ seed holds it resident)."""
+        if self._seed is not None and self._seed.q_spatial is not None:
+            return self._seed.q_spatial
         q = self.compressor.decompress(self.sub, Stage.Q,
                                        crop=self.plan is None)
         if self.plan is not None:
@@ -214,9 +282,15 @@ class StageContext:
     @cached_property
     def f_spatial(self) -> jax.Array:
         """Stage-④ floats on the queried extent (dequantize commutes with
-        the crop, so this shares :attr:`q_spatial`)."""
-        return quantize.dequantize(self.q_spatial, self.sub.eps,
-                                   self.sub.orig_dtype)
+        the crop, so this shares :attr:`q_spatial`).
+
+        Derived from :attr:`q_spatial` even when seeded: materializations
+        stop at the last integer-exact intermediate, so seeded and cold
+        programs share this entire float tail — which is what keeps
+        store-backed stage-④ results bit-identical to storeless ones under
+        XLA's float reassociation."""
+        return quantize.dequantize(self.q_spatial, self.eps,
+                                   self.field.orig_dtype)
 
     @cached_property
     def lorenzo_mean_weights(self) -> Tuple[np.ndarray, ...]:
@@ -330,11 +404,13 @@ def _mean_p_lorenzo(ctx: StageContext, axis: int) -> jax.Array:
 
 
 def _mean_q(ctx: StageContext, axis: int) -> jax.Array:
-    return jnp.mean(ctx.q_spatial.astype(jnp.float32)) * ctx.eps * 2.0
+    # flat reductions throughout the statistics: see StageContext.masked_sum
+    q = ctx.q_spatial.astype(jnp.float32).reshape(-1)
+    return jnp.mean(q) * ctx.eps * 2.0
 
 
 def _mean_f(ctx: StageContext, axis: int) -> jax.Array:
-    return jnp.mean(ctx.f_spatial.astype(jnp.float32))
+    return jnp.mean(ctx.f_spatial.astype(jnp.float32).reshape(-1))
 
 
 def _std_p_blockmean(ctx: StageContext, axis: int) -> jax.Array:
@@ -348,7 +424,7 @@ def _std_p_blockmean(ctx: StageContext, axis: int) -> jax.Array:
     else:
         # a partial block contributes a one-sided slice of its residuals, so
         # the exact integer window sum must include them
-        tot = s + jnp.sum(ctx.plan.window_of(ctx.sub.residuals))
+        tot = s + jnp.sum(ctx.plan.window_of(ctx.sub.residuals).reshape(-1))
     mu_int = jnp.round(tot / n).astype(jnp.int32)
     x = ctx.stat_values(ctx.sub.residuals + (ctx.upsampled_means - mu_int))
     ss = jnp.sum(x * x)
@@ -368,7 +444,7 @@ def _std_p_lorenzo(ctx: StageContext, axis: int) -> jax.Array:
 
 
 def _std_q(ctx: StageContext, axis: int) -> jax.Array:
-    qf = ctx.q_spatial.astype(jnp.float32)
+    qf = ctx.q_spatial.astype(jnp.float32).reshape(-1)
     n = ctx.n
     s1, s2 = jnp.sum(qf), jnp.sum(qf * qf)
     var = (s2 - s1 * s1 / n) / (n - 1)
@@ -376,7 +452,16 @@ def _std_q(ctx: StageContext, axis: int) -> jax.Array:
 
 
 def _std_f(ctx: StageContext, axis: int) -> jax.Array:
-    return jnp.std(ctx.f_spatial.astype(jnp.float32), ddof=1)
+    # two-pass (mean-subtracted) like `jnp.std` — the single-pass moments
+    # form of ②/③ would catastrophically cancel in f32 for mean-dominated
+    # fields, and ④ is the accuracy reference the lower stages are judged
+    # against — but over *flat* single-axis reductions: multi-axis reduces
+    # compile to context-dependent strategies, and store-seeded and cold
+    # programs must agree bit for bit
+    xf = ctx.f_spatial.astype(jnp.float32).reshape(-1)
+    n = ctx.n
+    d = xf - jnp.sum(xf) / n
+    return jnp.sqrt(jnp.maximum(jnp.sum(d * d) / (n - 1), 0.0))
 
 
 def _deriv_p_lorenzo(ctx: StageContext, axis: int) -> jax.Array:
@@ -394,8 +479,11 @@ def _deriv_q(ctx: StageContext, axis: int) -> jax.Array:
     return _central_diff(ctx.q_spatial, axis, ctx.eps)
 
 
-def _deriv_f(ctx: StageContext, axis: int) -> jax.Array:
-    return _central_diff(ctx.f_spatial, axis, 0.5)
+# stage ④ stencils ARE the stage-③ rules: (f_hi - f_lo)/2 with f = 2*eps*q
+# is algebraically the exact integer difference scaled once — one f32
+# rounding instead of three, and (single multiply) bit-stable under any XLA
+# fusion, which the store's seeded-vs-cold bit-identity contract relies on
+_deriv_f = _deriv_q
 
 
 def _lap_p_lorenzo(ctx: StageContext, axis: int) -> jax.Array:
@@ -418,8 +506,8 @@ def _lap_q(ctx: StageContext, axis: int) -> jax.Array:
     return _laplacian_stencil(ctx.q_spatial) * (2.0 * ctx.eps)  # (V-B.4)
 
 
-def _lap_f(ctx: StageContext, axis: int) -> jax.Array:
-    return _laplacian_stencil(ctx.f_spatial)
+# integer-stencil form of the float laplacian (see _deriv_f note)
+_lap_f = _lap_q
 
 
 # ===========================================================================
@@ -624,14 +712,20 @@ def _check_feasible(spec: OpSpec, scheme: Scheme, stage: Stage) -> None:
 # ===========================================================================
 
 def compute(target, ops: Union[str, Sequence[str]], stage: Stage, *,
-            axis: int = 0, region: Optional[R.RegionSpec] = None
-            ) -> Dict[str, jax.Array]:
+            axis: int = 0, region: Optional[R.RegionSpec] = None,
+            seed=None) -> Dict[str, jax.Array]:
     """Lower an op set onto one shared stage reconstruction.
 
     ``target`` is a single :class:`Compressed`/:class:`Encoded` field for
     field-arity op sets, or a sequence of component fields for vector-arity
     sets (``divergence``/``curl``).  Returns ``{op: result}``; every value is
     bit-identical to the corresponding single-op call at the same stage.
+
+    ``seed`` optionally supplies the materialized stage reconstruction
+    (``repro.store.MaterializedStage``) — one container for field-arity
+    sets, one per component for vector-arity sets — whose key must match
+    this ``(stage, region, closure)``; the prelude is then served from the
+    resident intermediate instead of recomputed.
     """
     stage = Stage(stage)
     names = canonical_ops(ops)
@@ -642,22 +736,19 @@ def compute(target, ops: Union[str, Sequence[str]], stage: Stage, *,
         for spec in specs:
             for c in comps:  # mixed-scheme vectors: every component must
                 _check_feasible(spec, c.scheme, stage)  # support the stage
-        axes_per_comp = [set() for _ in comps]
-        for spec in specs:
-            for i, axes in enumerate(spec.component_axes(len(comps))):
-                axes_per_comp[i].update(axes)
-        ctxs = [
-            StageContext(c, stage, region, join_closures(
-                [_deriv_closure(c.scheme, stage, a) for a in sorted(axes)]))
-            for c, axes in zip(comps, axes_per_comp)]
+        closures = component_closures(names, [c.scheme for c in comps], stage)
+        seeds = list(seed) if seed is not None else [None] * len(comps)
+        if len(seeds) != len(comps):
+            raise ValueError(f"{len(seeds)} seeds for {len(comps)} components")
+        ctxs = [StageContext(c, stage, region, cl, seed=s)
+                for c, cl, s in zip(comps, closures, seeds)]
         return {spec.name: spec.lower_vector(ctxs, axis) for spec in specs}
 
     c = target
     for spec in specs:
         _check_feasible(spec, c.scheme, stage)
-    closure = join_closures(
-        [spec.closure(c.scheme, stage, axis) for spec in specs])
-    ctx = StageContext(c, stage, region, closure)
+    closure = set_closure(names, c.scheme, stage, axis)
+    ctx = StageContext(c, stage, region, closure, seed=seed)
     family = "lorenzo" if c.scheme.is_lorenzo else "blockmean"
     out = {}
     for spec in specs:

@@ -296,12 +296,27 @@ _PLAN_CACHE: "OrderedDict[Tuple, RegionPlan]" = OrderedDict()
 _PLAN_CACHE_LIMIT = 256
 
 
+def canonical_closure(scheme: Scheme, closure: Closure,
+                      region: Optional[object] = None) -> Closure:
+    """Canonical cache/plan-key form of a closure.
+
+    1-D layouts have no per-axis bands (``("band", a)`` degrades to the
+    prefix hull — exactly what :func:`plan_region` executes), and with no
+    region the closure never enters any computation, so every full-field
+    materialization shares one key (``"cover"``).
+    """
+    if region is None:
+        return "cover"
+    if not Scheme(scheme).is_nd and isinstance(closure, tuple):
+        return "hull"
+    return closure
+
+
 def plan_region(c: Union[Compressed, Encoded], region: RegionSpec,
                 closure: Closure = "cover") -> RegionPlan:
     """Plan (and memoize) a region query over ``c``'s layout."""
     norm = normalize_region(region, c.shape)
-    if not c.scheme.is_nd and isinstance(closure, tuple):
-        closure = "hull"  # 1-D layouts have no per-axis bands
+    closure = canonical_closure(c.scheme, closure, norm)
     key = (c.scheme, c.shape, c.padded_shape, c.block, norm, closure)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:

@@ -120,6 +120,15 @@ class Compressed:
             size *= b
         return size
 
+    def device_bytes(self) -> int:
+        """Actual on-device bytes of the decoded container: every
+        device-resident leaf (residuals + metadata + bitwidths +
+        valid_counts + eps) — the byte cost a store pays to keep a
+        stage-② materialization resident."""
+        leaves = (self.residuals, self.metadata, self.bitwidths,
+                  self.valid_counts, self.eps)
+        return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
 
 @partial(
     _dataclass_pytree,

@@ -173,7 +173,7 @@ def _can_manual_ep(cfg: FfnCfg, x: jax.Array) -> bool:
         return False
     return (T // dp // tp) * cfg.top_k >= tp  # at least one slot per peer
 def moe_manual_ep(p, x: jax.Array, cfg: FfnCfg) -> jax.Array:
-    """Deepseek-scale MoE with explicit EP (DESIGN.md §7).
+    """Deepseek-scale MoE with explicit EP (DESIGN.md §8).
 
     GSPMD cannot shard the irregular dispatch gathers of 256-expert MoE — it
     materializes slot-major (T*K, D) buffers (hundreds of GiB/device at 1M

@@ -10,6 +10,15 @@ over same-layout fields cost one dispatch instead of N.  A request may name
 reconstruction for the whole set and the request resolves to a result dict.
 The op-set component of the group signature is canonical (order-insensitive),
 so ``["std", "mean"]`` and ``["mean", "std"]`` batch — and compile — together.
+
+With a :class:`repro.store.FieldStore` attached, ``AnalyticsRequest.fields``
+may name registered field *ids* (strings — component ids too, for
+``divergence``/``curl``) instead of shipping containers: the frontend
+resolves ids for grouping and serves the group through the store, so
+repeated queries of a hot field reuse its materialized stage reconstruction
+(``repro.analytics.query`` seeds the compiled program) and clients stop
+shipping arrays entirely — the serve-millions contract.  Unknown ids reject
+only their own request.
 """
 from __future__ import annotations
 
@@ -18,31 +27,39 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.analytics import CostModel, query
 from repro.analytics.engine import BatchedAnalytics
-from repro.analytics.query import _group_signature
+from repro.analytics.query import _group_signature, _resolve_item
 from repro.core import Compressed, Encoded, Stage, oplib
 from repro.core import region as region_mod
 
 Field = Union[Compressed, Encoded]
 
 
-def _region_signature(req: "AnalyticsRequest"):
+def _region_signature(req: "AnalyticsRequest", resolved=None):
     """Normalized region for grouping, so equivalent specs (slices vs tuples
-    vs numpy ints) batch into one dispatch.  Raises on malformed regions —
-    the caller's per-request guard turns that into a rejection."""
+    vs numpy ints) batch into one dispatch.  ``resolved`` is the id-free
+    view of ``req.fields`` (defaults to ``req.fields`` for id-less
+    requests).  Raises on malformed regions — the caller's per-request
+    guard turns that into a rejection."""
     if req.region is None:
         return None
+    if resolved is None:
+        resolved = req.fields
     ops = oplib.canonical_ops(req.op)
-    first = req.fields[0] if oplib.is_vector_ops(ops) else req.fields
+    first = resolved[0] if oplib.is_vector_ops(ops) else resolved
     return region_mod.normalize_region(req.region, first.shape)
 
 
 @dataclasses.dataclass
 class AnalyticsRequest:
-    """One or more analytical operations over one (possibly vector) field."""
+    """One or more analytical operations over one (possibly vector) field.
+
+    ``fields`` carries the data — or, with a store-attached frontend, names
+    it: a registered field id (or a sequence of component ids) instead of
+    the container itself.
+    """
 
     uid: int
-    fields: Union[Field, Sequence[Field]]  # single field, or components for
-                                           # divergence/curl
+    fields: Union[Field, str, Sequence[Union[Field, str]]]
     op: Union[str, Sequence[str]] = "mean"  # one op, or a fused op set
     stage: Union[Stage, str, int] = "auto"
     axis: int = 0                          # derivative only
@@ -55,13 +72,22 @@ class AnalyticsRequest:
 
 class AnalyticsFrontend:
     """Batching frontend for analytics requests (no model, no slots: the
-    batch axis is formed per step from whatever is queued)."""
+    batch axis is formed per step from whatever is queued).  ``store``
+    enables id-addressed requests and materialized-stage reuse."""
 
     def __init__(self, cost_model: Optional[CostModel] = None,
-                 max_batch: int = 256):
+                 max_batch: int = 256, store=None):
         self.engine = BatchedAnalytics(cost_model)
         self.max_batch = max_batch
+        self.store = store
         self._queue: List[AnalyticsRequest] = []
+
+    def _resolve_fields(self, req: AnalyticsRequest, vector: bool):
+        """Id-free view of a request's fields (for grouping signatures);
+        raises on unknown ids / ids without a store (-> rejection).  One
+        resolver for the whole stack: this reuses the query front-end's."""
+        resolved, _ = _resolve_item(req.fields, self.store, vector)
+        return resolved
 
     def add_request(self, req: AnalyticsRequest) -> None:
         self._queue.append(req)
@@ -87,17 +113,24 @@ class AnalyticsFrontend:
         for req in batch:
             try:
                 ops = oplib.canonical_ops(req.op)
-                sig = (ops, str(req.stage), req.axis, _region_signature(req),
-                       _group_signature(req.fields, oplib.is_vector_ops(ops)))
-            except Exception as e:  # unknown op / fields aren't containers
+                vector = oplib.is_vector_ops(ops)
+                resolved = self._resolve_fields(req, vector)
+                sig = (ops, str(req.stage), req.axis,
+                       _region_signature(req, resolved),
+                       _group_signature(resolved, vector))
+            except Exception as e:  # unknown op / id / malformed fields
                 finished.append(self._reject(req, e))
                 continue
             groups.setdefault(sig, []).append(req)
         for group in groups.values():
             try:
+                # original (possibly id-bearing) fields go to the query:
+                # ids keep their cache identity, so hot fields are served
+                # from materialized stages
                 res = query([r.fields for r in group], group[0].op,
                             group[0].stage, axis=group[0].axis,
-                            region=group[0].region, engine=self.engine)
+                            region=group[0].region, engine=self.engine,
+                            store=self.store)
             except Exception as e:
                 # reject only this group (bad op / infeasible stage / ...);
                 # every request is always either answered or errored

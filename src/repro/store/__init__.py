@@ -1,0 +1,24 @@
+"""Materialized-stage field store: intermediate representations as values.
+
+``repro.store`` turns the stage reconstruction — the cost the paper says
+dominates analytics — into a first-class, cacheable artifact:
+
+* :class:`MaterializedStage` / :func:`materialize` — pytree containers for
+  one ``(field, stage, region, closure)`` intermediate (stage-② residual
+  sub-field, stage-③ integers, stage-④ floats);
+* :class:`FieldStore` — string-id registry of encoded fields plus a
+  byte-budgeted LRU cache of their materializations with hit / miss /
+  eviction accounting (:class:`StoreStats`).
+
+The analytics layers consume it end to end: ``query(..., store=)`` resolves
+ids, plans cache-aware (a resident stage prices at postlude-only cost), and
+seeds the batched engine's compiled programs from the resident
+intermediates; ``serve.AnalyticsFrontend(store=)`` lets requests name field
+ids so clients stop shipping arrays.  See DESIGN.md §7.
+"""
+from .field_store import FieldStore, MATERIALIZABLE, StoreStats
+from .materialized import (MaterializedStage, materialize,
+                           materialized_nbytes, serves, storage_stage)
+
+__all__ = ["FieldStore", "MATERIALIZABLE", "MaterializedStage", "StoreStats",
+           "materialize", "materialized_nbytes", "serves", "storage_stage"]

@@ -1,0 +1,483 @@
+"""Materialized-stage field store (ISSUE 4 acceptance).
+
+The contract under test:
+
+* store-backed query results are **bit-identical** to storeless queries for
+  every (scheme, op-set, stage, ±region) cell — field-arity and vector-arity
+  sets, Compressed and Encoded containers;
+* ``stage="auto"`` provably flips to a cached stage when the cache-aware
+  cost model says so — both uncalibrated (residency beats reconstruction)
+  and calibrated (measured cost minus fig34 reconstruction term);
+* the ``FieldStore`` is a byte-budgeted LRU with exact hit / miss /
+  eviction accounting and id-invalidation rules;
+* serve resolves string field ids end to end with one dispatch per group;
+* ``CostModel.save``/``load`` JSON round-trips the full calibration state.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import analytics
+from repro.analytics import BatchedAnalytics, CostModel, query
+from repro.core import (Scheme, Stage, homomorphic as H, hszp, hszp_nd, hszx,
+                        hszx_nd, oplib)
+from repro.serve import AnalyticsFrontend, AnalyticsRequest
+from repro.store import FieldStore, MaterializedStage, materialize
+
+ALL = [hszp, hszx, hszp_nd, hszx_nd]
+REGION = ((30, 75), (10, 52))  # unaligned window of the 181x97 field_2d
+
+FUSED_SETS = [("mean",), ("mean", "std"), ("mean", "std", "laplacian"),
+              ("std", "derivative"), ("mean", "gradient")]
+
+
+def _c(comp, data, rel_eb=1e-3):
+    return comp.compress(jnp.asarray(data), rel_eb=rel_eb)
+
+def _compress_many(comp, n, shape=(64, 48), rel_eb=1e-3, seed=0):
+    rng = np.random.default_rng(seed)
+    return [comp.compress(jnp.asarray(rng.normal(0, 1, shape).astype(np.float32)),
+                          rel_eb=rel_eb) for _ in range(n)]
+
+
+def _shared_stages(scheme, ops):
+    return [s for s in Stage if s != Stage.M
+            if all(s in analytics.feasible_stages(scheme, op) for op in ops)]
+
+
+def _assert_same(got, ref):
+    if isinstance(ref, tuple):
+        assert isinstance(got, tuple) and len(got) == len(ref)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# -- materialized stages ------------------------------------------------------
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_materialized_stage_is_pytree(comp, field_2d):
+    import jax
+    e = comp.encode(_c(comp, field_2d))
+    m = materialize(e, Stage.Q)
+    leaves = jax.tree_util.tree_leaves(m)
+    assert leaves and m.nbytes == sum(x.size * x.dtype.itemsize for x in leaves)
+    m2 = jax.tree.map(lambda x: x, m)
+    assert isinstance(m2, MaterializedStage) and m2.sig() == m.sig()
+    # stacking (what the engine's seeded programs do) keeps the treedef
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), m, m2)
+    assert stacked.q_spatial.shape == (2,) + m.q_spatial.shape
+
+
+def test_materialize_rejects_stage_m(field_2d):
+    e = hszx_nd.encode(_c(hszx_nd, field_2d))
+    with pytest.raises(ValueError, match="already resident"):
+        materialize(e, Stage.M)
+
+
+def test_mismatched_seed_rejected(field_2d):
+    e = hszp_nd.encode(_c(hszp_nd, field_2d))
+    m_q = materialize(e, Stage.Q)
+    with pytest.raises(ValueError, match="does not match"):
+        H.compute(e, "mean", Stage.P, seed=m_q)
+    m_reg = materialize(e, Stage.Q, region=REGION, closure="hull")
+    with pytest.raises(ValueError, match="does not match"):
+        H.compute(e, "mean", Stage.Q, seed=m_reg)  # region key mismatch
+
+
+# -- bit-identical store-backed queries: every (scheme, op-set, stage, ±region)
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("ops", FUSED_SETS, ids="+".join)
+def test_store_backed_bit_identical(comp, ops, field_2d):
+    c = _c(comp, field_2d)
+    e = comp.encode(c)
+    for field in (c, e):
+        store = FieldStore()
+        store.put("f", field)
+        eng = BatchedAnalytics()
+        for stage in _shared_stages(comp.scheme, ops):
+            for region in (None, REGION):
+                ref = query([field], list(ops), stage=stage, engine=eng,
+                            region=region)
+                got = query(["f"], list(ops), stage=stage, engine=eng,
+                            region=region, store=store)
+                hot = query(["f"], list(ops), stage=stage, engine=eng,
+                            region=region, store=store)
+                # first call misses (unless stage ④ reuses the ③ entry),
+                # second is always served resident
+                assert got.store_misses + got.store_hits >= 1
+                assert hot.store_misses == 0 and hot.store_hits >= 1
+                for op in ops:
+                    _assert_same(got.values[0][op], ref.values[0][op])
+                    _assert_same(hot.values[0][op], ref.values[0][op])
+
+
+@pytest.mark.parametrize("comp", [hszp_nd, hszx_nd], ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("ops", [("divergence",), ("divergence", "curl")],
+                         ids="+".join)
+def test_store_backed_vector_bit_identical(comp, ops, vector_field_2d):
+    u, v = vector_field_2d
+    cu, cv = _c(comp, u), _c(comp, v)
+    store = FieldStore()
+    store.put("u", cu)
+    store.put("v", cv)
+    eng = BatchedAnalytics()
+    region = ((20, 60), (40, 90))
+    for stage in _shared_stages(comp.scheme, ops):
+        for r in (None, region):
+            ref = query([(cu, cv)], list(ops), stage=stage, engine=eng,
+                        region=r)
+            for _ in range(2):  # miss pass, then hit pass
+                got = query([("u", "v")], list(ops), stage=stage, engine=eng,
+                            region=r, store=store)
+                for op in ops:
+                    _assert_same(got.values[0][op], ref.values[0][op])
+            assert got.store_hits >= 2  # both components served hot
+
+
+def test_store_backed_batch_and_mixed_inputs(field_2d):
+    """Ids and raw containers mix in one query; ids group separately (only
+    they can seed) but every value matches the storeless reference."""
+    cs = _compress_many(hszp_nd, 4)
+    store = FieldStore()
+    for i, c in enumerate(cs[:2]):
+        store.put(f"f{i}", c)
+    eng = BatchedAnalytics()
+    ref = query(cs, ["mean", "std"], stage=Stage.P, engine=eng)
+    got = query(["f0", "f1", cs[2], cs[3]], ["mean", "std"], stage=Stage.P,
+                engine=eng, store=store)
+    assert got.n_batches == 2  # store-backed vs raw split
+    for i in range(4):
+        for op in ("mean", "std"):
+            _assert_same(got.values[i][op], ref.values[i][op])
+
+
+def test_seeded_engine_program_is_separate_and_equal(field_2d):
+    eng = BatchedAnalytics()
+    cs = _compress_many(hszp_nd, 3)
+    store = FieldStore()
+    ids = [store.put(f"f{i}", c) for i, c in enumerate(cs)]
+    cold = query(cs, "std", stage=Stage.Q, engine=eng)
+    assert eng.cache_size == 1
+    hot = query(ids, "std", stage=Stage.Q, engine=eng, store=store)
+    assert eng.cache_size == 2  # seeded program compiles separately
+    for a, b in zip(cold.values, hot.values):
+        _assert_same(b, a)
+    query(ids, "std", stage=Stage.Q, engine=eng, store=store)
+    assert eng.cache_size == 2  # and is reused on the hit path
+
+
+def test_stage_f_std_accurate_for_mean_dominated_fields():
+    """The stage-④ std (the accuracy reference) must be mean-subtracted: a
+    single-pass moments form catastrophically cancels in f32 when the mean
+    dominates the spread (1000 ± 0.1 -> garbage)."""
+    rng = np.random.default_rng(3)
+    d = (1000.0 + rng.normal(0, 0.1, (128, 128))).astype(np.float32)
+    c = hszx_nd.compress(jnp.asarray(d), rel_eb=1e-4)
+    got = float(H.std(c, Stage.F))
+    assert abs(got - d.std(ddof=1)) < 1e-3, (got, d.std(ddof=1))
+
+
+def test_vector_op_bare_string_id_rejected(field_2d):
+    store = FieldStore()
+    store.put("uv", _c(hszp_nd, field_2d))
+    with pytest.raises(TypeError, match="per component"):
+        query(["uv"], "curl", stage=Stage.Q, store=store)
+
+
+# -- cache-aware auto planning ------------------------------------------------
+
+def test_auto_flips_to_cached_stage_uncalibrated(field_2d):
+    """Residency alone flips the plan: Lorenzo {mean, std} auto-plans ② cold,
+    but a resident stage-③ materialization beats any reconstruction."""
+    c = _c(hszp_nd, field_2d)
+    store = FieldStore()
+    store.put("f", c)
+    eng = BatchedAnalytics()
+    cold = query([c], ["mean", "std"], engine=eng)
+    assert cold.stages[0] == {"mean": Stage.P, "std": Stage.P}
+    store.ensure("f", Stage.Q)
+    hot = query(["f"], ["mean", "std"], engine=eng, store=store)
+    assert hot.stages[0] == {"mean": Stage.Q, "std": Stage.Q}
+    assert hot.store_hits >= 1
+    ref = query([c], ["mean", "std"], stage=Stage.Q, engine=eng)
+    for op in ("mean", "std"):
+        _assert_same(hot.values[0][op], ref.values[0][op])
+
+
+def test_auto_flip_calibrated_reconstruction_term():
+    """With measured costs, a cached stage is priced at cost minus the fig34
+    reconstruction term — which flips the choice exactly when that term is
+    what made the higher stage lose."""
+    scheme = Scheme.HSZP_ND
+    cm = CostModel()
+    for op in ("mean", "std"):
+        cm.record(scheme, op, Stage.P, 100.0)
+        cm.record(scheme, op, Stage.Q, 120.0)
+        cm.record(scheme, op, Stage.F, 500.0)
+    cm.record_reconstruction(scheme, Stage.Q, 110.0)
+    # cold: P wins (200 < 240)
+    assert analytics.plan_stages(scheme, ["mean", "std"],
+                                 cost_model=cm).fused == Stage.P
+    # Q resident: 2 * (120 - 110) = 20 < 200 -> flips to Q
+    plan = analytics.plan_stages(scheme, ["mean", "std"], cost_model=cm,
+                                 cached=frozenset({Stage.Q}))
+    assert plan.fused == Stage.Q
+    # a cached stage never goes below zero cost, and stage order breaks ties
+    cm.record_reconstruction(scheme, Stage.P, 500.0)
+    assert cm.cost(scheme, "mean", Stage.P, cached=True) == 0.0
+
+
+def test_unmeasured_reconstruction_discount_is_conservative():
+    """A cached stage with no measured reconstruction must not undercut a
+    measured rival on made-up numbers: the fallback discount is the largest
+    reconstruction measured at a *lower* stage (monotone in stage), so a
+    stage-③ entry that also serves stage ④ still routes the plan to ③."""
+    scheme = Scheme.HSZP_ND
+    cm = CostModel()
+    for op, p, q, f in (("mean", 90.0, 130.0, 700.0),
+                        ("std", 95.0, 140.0, 700.0)):
+        cm.record(scheme, op, Stage.P, p)
+        cm.record(scheme, op, Stage.Q, q)
+        cm.record(scheme, op, Stage.F, f)
+    cm.record_reconstruction(scheme, Stage.Q, 80.0)
+    # Q entry resident => both Q and F count as cached; F's reconstruction
+    # is unmeasured and discounts by recon(Q)=80, keeping F at 1240 vs 110
+    plan = analytics.plan_stages(scheme, ["mean", "std"], cost_model=cm,
+                                 cached=frozenset({Stage.Q, Stage.F}))
+    assert plan.fused == Stage.Q
+    assert cm.cost(scheme, "mean", Stage.F, cached=True) == 620.0
+    # with nothing measured at a lower stage there is no discount at all
+    cm2 = CostModel()
+    cm2.record(scheme, "mean", Stage.P, 90.0)
+    cm2.record(scheme, "mean", Stage.Q, 130.0)
+    assert cm2.cost(scheme, "mean", Stage.Q, cached=True) == 130.0
+
+
+def test_plan_stage_cached_preference_keeps_metadata_fast_path():
+    """Stage ① needs no reconstruction (metadata is resident in the
+    container), so a cached higher stage must not displace it."""
+    assert analytics.plan_stage(Scheme.HSZX_ND, "mean",
+                                cached=frozenset({Stage.Q})) == Stage.M
+    assert analytics.plan_stage(Scheme.HSZP_ND, "mean",
+                                cached=frozenset({Stage.Q})) == Stage.Q
+
+
+def test_cached_stages_requires_matching_region_and_closure(field_2d):
+    c = _c(hszp_nd, field_2d)
+    store = FieldStore()
+    store.put("f", c)
+    store.ensure("f", Stage.Q)
+    # the stage-③ integers serve stage ④ too (dequantize is postlude)
+    assert store.cached_stages("f", ["mean", "std"]) == {Stage.Q, Stage.F}
+    # the full-field entry does not serve a region query (different key) ...
+    assert store.cached_stages("f", ["mean", "std"], region=REGION) == frozenset()
+    cl = oplib.set_closure(["mean", "std"], c.scheme, Stage.Q)
+    store.ensure("f", Stage.Q, region=REGION, closure=cl)
+    assert store.cached_stages("f", ["mean", "std"],
+                               region=REGION) == {Stage.Q, Stage.F}
+    # ... and closures are part of the key: a stage-② derivative band entry
+    # is not the hull the {mean, std} set needs
+    band = oplib.set_closure("derivative", c.scheme, Stage.P, axis=0)
+    hull = oplib.set_closure(["mean", "std"], c.scheme, Stage.P)
+    assert band != hull
+    store.ensure("f", Stage.P, region=REGION, closure=band)
+    assert Stage.P not in store.cached_stages("f", ["mean", "std"],
+                                              region=REGION)
+    assert Stage.P in store.cached_stages("f", "derivative", region=REGION)
+
+
+# -- FieldStore semantics -----------------------------------------------------
+
+def test_field_registry_semantics(field_2d):
+    c = _c(hszx_nd, field_2d)
+    store = FieldStore()
+    store.put("a", c)
+    assert "a" in store and store.get("a") is c and store.ids() == ("a",)
+    with pytest.raises(ValueError, match="already registered"):
+        store.put("a", c)
+    with pytest.raises(KeyError, match="unknown field id"):
+        store.get("missing")
+    with pytest.raises(TypeError):
+        store.put("b", np.zeros(4))
+    with pytest.raises(ValueError):
+        store.put("", c)
+
+
+def test_replace_and_remove_invalidate_materializations(field_2d):
+    c1 = _c(hszx_nd, field_2d)
+    c2 = _c(hszx_nd, field_2d * 2.0)
+    store = FieldStore()
+    store.put("a", c1)
+    store.ensure("a", Stage.Q)
+    assert store.cache_entries == 1
+    store.put("a", c2, replace=True)
+    assert store.cache_entries == 0  # stale intermediate dropped
+    assert store.stats.evictions == 1  # invalidation counts as churn
+    m = store.ensure("a", Stage.Q)
+    _assert_same(m.q_spatial, materialize(c2, Stage.Q).q_spatial)
+    store.remove("a")
+    assert "a" not in store and store.cache_entries == 0
+    assert store.cache_bytes_in_use == 0
+
+
+def test_lru_eviction_under_byte_budget(field_2d):
+    c = _c(hszx_nd, field_2d)
+    one = materialize(c, Stage.Q).nbytes
+    store = FieldStore(cache_bytes=int(2.5 * one))
+    for i in range(3):
+        store.put(f"f{i}", c)
+    store.ensure("f0", Stage.Q)
+    store.ensure("f1", Stage.Q)
+    assert store.cache_entries == 2
+    store.lookup("f0", Stage.Q)          # refresh f0 -> f1 becomes LRU
+    store.ensure("f2", Stage.Q)          # budget forces one eviction
+    assert store.cache_entries == 2
+    assert store.stats.evictions == 1
+    assert store.cache_bytes_in_use <= store.cache_bytes
+    assert store.lookup("f0", Stage.Q) is not None   # survivor
+    assert store.lookup("f1", Stage.Q) is None       # evicted (miss)
+    assert (store.stats.hits, store.stats.misses) == (2, 4)
+
+
+def test_oversized_entry_not_retained(field_2d):
+    c = _c(hszx_nd, field_2d)
+    store = FieldStore(cache_bytes=16)   # smaller than any materialization
+    store.put("a", c)
+    m = store.ensure("a", Stage.Q)       # still computed and returned ...
+    assert m.q_spatial is not None
+    assert store.cache_entries == 0      # ... but never resident
+    # counted as a rejection, not an eviction (it was never resident)
+    assert store.stats.rejected == 1 and store.stats.evictions == 0
+    # seed() declines outright (no wasted reconstruction), so queries fall
+    # back to unseeded execution instead of re-materializing every call
+    assert store.seed("a", Stage.Q) is None
+    assert store.stats.rejected == 2
+    misses0 = store.stats.misses
+    res = query(["a"], ["mean", "std"], stage=Stage.Q, store=store)
+    ref = query([c], ["mean", "std"], stage=Stage.Q)
+    for op in ("mean", "std"):
+        _assert_same(res.values[0][op], ref.values[0][op])
+    assert store.stats.misses == misses0  # never touched the cache again
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_materialized_nbytes_predicts_exactly(comp, field_2d):
+    """The static size predictor must equal the realized nbytes — it is the
+    retention decision, so drift would retain unboundedly or decline hot
+    cells."""
+    from repro.store import materialized_nbytes
+    e = comp.encode(_c(comp, field_2d))
+    for stage in (Stage.P, Stage.Q, Stage.F):
+        for region, cl in ((None, "cover"),
+                           (REGION, oplib.set_closure(["mean", "std"],
+                                                      e.scheme, stage))):
+            predicted = materialized_nbytes(e, stage, region=region,
+                                            closure=cl)
+            actual = materialize(e, stage, region=region, closure=cl).nbytes
+            assert predicted == actual, (stage, region)
+
+
+# -- serving by field id ------------------------------------------------------
+
+def test_serve_resolves_field_ids_one_dispatch_per_group(field_2d):
+    cs = _compress_many(hszx_nd, 3)
+    store = FieldStore()
+    for i, c in enumerate(cs):
+        store.put(f"fields/{i}", c)
+    fe = AnalyticsFrontend(store=store)
+    for i in range(3):
+        fe.add_request(AnalyticsRequest(uid=i, fields=f"fields/{i}",
+                                        op=["mean", "std"]))
+    done = {r.uid: r for r in fe.run_until_drained()}
+    assert all(r.error is None for r in done.values())
+    assert fe.engine.cache_size == 1     # the whole id group: one program
+    stage = done[0].result_stage["mean"]
+    import jax
+    refs = {op: jax.jit(lambda f, o=op: getattr(H, o)(f, stage))
+            for op in ("mean", "std")}
+    for i in range(3):
+        _assert_same(done[i].result["mean"], refs["mean"](cs[i]))
+        _assert_same(done[i].result["std"], refs["std"](cs[i]))
+    # second round is served from resident materializations
+    h0 = store.stats.hits
+    fe.add_request(AnalyticsRequest(uid=9, fields="fields/0", op=["mean", "std"]))
+    done = fe.run_until_drained()
+    assert done[0].error is None and store.stats.hits > h0
+
+
+def test_serve_vector_ids_and_rejections(field_2d, vector_field_2d):
+    u, v = vector_field_2d
+    store = FieldStore()
+    store.put("u", _c(hszp_nd, u))
+    store.put("v", _c(hszp_nd, v))
+    fe = AnalyticsFrontend(store=store)
+    fe.add_request(AnalyticsRequest(uid=0, fields=("u", "v"), op="curl"))
+    fe.add_request(AnalyticsRequest(uid=1, fields="ghost", op="mean"))
+    done = {r.uid: r for r in fe.run_until_drained()}
+    assert done[0].error is None
+    import jax
+    ref = jax.jit(lambda a, b: H.curl([a, b], done[0].result_stage))
+    _assert_same(done[0].result, ref(store.get("u"), store.get("v")))
+    assert done[1].error is not None and "ghost" in done[1].error
+
+
+def test_serve_ids_without_store_rejected(field_2d):
+    fe = AnalyticsFrontend()             # no store attached
+    fe.add_request(AnalyticsRequest(uid=0, fields="some/id", op="mean"))
+    (r,) = fe.run_until_drained()
+    assert r.error is not None and "store" in r.error
+
+
+# -- CostModel persistence ----------------------------------------------------
+
+def test_cost_model_save_load_roundtrip(tmp_path):
+    cm = CostModel()
+    cm.record(Scheme.HSZP_ND, "mean", Stage.P, 100.0)
+    cm.record(Scheme.HSZP_ND, "mean", Stage.P, 200.0)   # running mean: 150
+    cm.record(Scheme.HSZX, "std", Stage.Q, 42.0)
+    cm.record_reconstruction(Scheme.HSZP_ND, Stage.Q, 80.0)
+    path = tmp_path / "cost.json"
+    cm.save(path)
+    loaded = CostModel.load(path)
+    assert loaded.table == cm.table
+    assert loaded.recon == cm.recon
+    assert loaded._counts == cm._counts
+    # counts round-trip => post-load observations continue the same mean
+    loaded.record(Scheme.HSZP_ND, "mean", Stage.P, 300.0)
+    cm.record(Scheme.HSZP_ND, "mean", Stage.P, 300.0)
+    assert loaded.table == cm.table
+    # and the loaded model plans identically
+    assert analytics.plan_stages(
+        Scheme.HSZP_ND, ["mean"], cost_model=loaded).fused == Stage.P
+
+
+def test_cost_model_load_rejects_foreign_json(tmp_path):
+    path = tmp_path / "bogus.json"
+    path.write_text('{"format": "something-else", "cells": []}')
+    with pytest.raises(ValueError, match="not a hsz-cost-model"):
+        CostModel.load(path)
+
+
+def test_cost_model_calibrates_reconstruction_from_fig34_rows():
+    csv = "\n".join([
+        "name,us_per_call,derived",
+        "fig34/Ocean/hszp_nd-q,80.0,GBps=1.0",
+        "fig34/NYX/hszp_nd-q,120.0,GBps=1.0",
+        "fig34/Ocean/hszp_nd-f,500.0,GBps=1.0",
+        "fig58/Ocean/mean/hszp_nd-q,130.0,GBps=1.0",
+        "fig58/Ocean/mean/hszp_nd-p,90.0,GBps=1.0",
+        "fig58/Ocean/mean/hszp_nd-f,700.0,GBps=1.0",
+    ])
+    cm = CostModel.from_benchmark_csv(csv)
+    assert cm.reconstruction(Scheme.HSZP_ND, Stage.Q) == 100.0  # mean of 2
+    assert cm.reconstruction(Scheme.HSZP_ND, Stage.M) == 0.0
+    assert cm.cost(Scheme.HSZP_ND, "mean", Stage.Q) == 130.0
+    assert cm.cost(Scheme.HSZP_ND, "mean", Stage.Q, cached=True) == 30.0
+    # cold: P (90 < 130); Q resident: 30 < 90 -> flip
+    stages = (Stage.P, Stage.Q, Stage.F)
+    assert cm.cheapest(Scheme.HSZP_ND, "mean", stages) == Stage.P
+    assert cm.cheapest(Scheme.HSZP_ND, "mean", stages,
+                       cached={Stage.Q}) == Stage.Q
