@@ -18,6 +18,7 @@ Framework-level (beyond paper):
   compressed-collective wire bytes           -> fw_collective_bytes
   fused op sets vs sequential single ops     -> fw_fused_analytics
   store-backed hot-cache vs cold queries     -> fw_store_analytics
+  streaming append+query vs re-encode        -> fw_stream_analytics
 
 ``--filter PREFIX[,PREFIX...]`` runs only the row families whose name
 starts with a prefix (e.g. ``--filter fw_store`` or ``--filter fig2,fw_``),
@@ -45,6 +46,7 @@ from repro.data.scientific import dataset_dims, synth_field
 ROWS: List[Tuple[str, float, str]] = []
 FUSED_JSON: List[dict] = []
 STORE_JSON: List[dict] = []
+STREAM_JSON: List[dict] = []
 SCALE = 8
 REPS = 3
 
@@ -411,6 +413,80 @@ def fw_store_analytics():
                                    "speedup": round(speedup, 3)})
 
 
+def fw_stream_analytics():
+    """Streaming ingest: incremental append+query vs re-encode-from-scratch.
+
+    The incremental path appends ONE compressed slab and merges its integer
+    summary into the stream's resident :class:`~repro.stream.TemporalSummary`
+    (``repro.stream``, DESIGN.md §9), then answers the temporal op set from
+    the merged summary; the baseline re-encodes the *whole* concatenated
+    history as a fresh field on every step and recomputes from scratch —
+    which is what a store without streaming support would have to do.  Both
+    sides run through warmed jit caches and identical op machinery, so the
+    speedup isolates exactly what incrementality saves: re-compressing and
+    re-reconstructing the history.  Results are bit-identical by the
+    integer-merge contract (pinned in ``tests/test_stream.py``); the CI
+    gate holds the per-scheme speedup at >= 2x.
+    """
+    from repro.analytics import BatchedAnalytics, query
+    from repro.stream import StreamFieldStore, TemporalField
+
+    # like the other fw serving benches this pins the streaming regime (a
+    # steady feed of moderate timestep tiles) instead of scaling the tile
+    # with --scale; per-op throughput vs size is covered by fig3-12
+    # the baseline history length matches the stream's slab count midway
+    # through the incremental measurement (it keeps growing; the
+    # incremental cost does not)
+    k, n_prefill, n_baseline, tile = 3, 4, 8, (96, 96)
+    ops = ("tmean", "tstd", "tdelta")
+    # feed sizing: prefill + 2 warm appends + best_of's 1 + max(5, REPS)
+    # timed appends (so high --reps never exhausts the stream), + slack
+    n_feed = n_prefill + 3 + max(5, REPS) + 2
+    slab_data = [np.stack([synth_field("Ocean", 0, tile, seed=i * k + t)
+                           for t in range(k)]).astype(np.float32)
+                 for i in range(n_feed)]
+    for name in COMPRESSORS:
+        comp = by_name(name)
+        eng = BatchedAnalytics()
+        store = StreamFieldStore(engine=eng)
+        tf = TemporalField(comp, rel_eb=1e-2, bits=16)
+        store.put_temporal("stream/ocean", tf)
+        feed = iter(slab_data)
+        for _ in range(n_prefill):
+            store.append("stream/ocean", next(feed))
+        # warm: one cold query (summary build) + one steady append cycle
+        query(["stream/ocean"], list(ops), store=store, engine=eng)
+        store.append("stream/ocean", next(feed))
+        query(["stream/ocean"], list(ops), store=store, engine=eng)
+
+        def inc_step():
+            store.append("stream/ocean", next(feed))
+            return query(["stream/ocean"], list(ops), store=store,
+                         engine=eng).values
+
+        us_inc = best_of(inc_step, k=5)
+
+        history = np.concatenate(slab_data[:n_baseline], axis=0)
+        eng2 = BatchedAnalytics()
+
+        def reencode_step():
+            fresh = TemporalField(comp, eps=tf.eps, bits=16)
+            fresh.append(history)           # re-encode the whole history
+            return query([fresh], list(ops), engine=eng2).values
+
+        us_re = best_of(reencode_step, k=5)
+        speedup = us_re / us_inc
+        row_name = f"fw_stream_analytics/{name}/append+query"
+        row(row_name, us_inc,
+            f"reencode_us={us_re:.1f} speedup={speedup:.2f}x "
+            f"slabs={tf.n_slabs} steps={tf.n_steps} "
+            f"merges={store.incremental_merges}")
+        STREAM_JSON.append({"name": row_name, "scheme": name,
+                            "us": round(us_inc, 1),
+                            "reencode_us": round(us_re, 1),
+                            "speedup": round(speedup, 3)})
+
+
 def fw_collective_bytes():
     """Wire bytes of the gradient all-reduce: f32 baseline vs hom-int16.
 
@@ -430,8 +506,8 @@ def fw_collective_bytes():
 BENCHES = [fig2_compression_ratio, fig34_decompression, fig58_statistics,
            fig910_differentiation, fig1112_multivariate, table4_breakdown,
            table5_op_errors, fw_batched_analytics, fw_fused_analytics,
-           fw_region_analytics, fw_store_analytics, fw_checkpoint,
-           fw_collective_bytes]
+           fw_region_analytics, fw_store_analytics, fw_stream_analytics,
+           fw_checkpoint, fw_collective_bytes]
 
 
 def select_benches(benches, filter_spec: str | None, only: str | None):
@@ -468,6 +544,11 @@ def main() -> None:
                     help="write fw_store_analytics rows (name, us, cold_us, "
                          "speedup) as JSON, e.g. BENCH_store.json for the "
                          "hot-vs-cold CI gate")
+    ap.add_argument("--json-stream", default=None, metavar="PATH",
+                    help="write fw_stream_analytics rows (name, us, "
+                         "reencode_us, speedup) as JSON, e.g. "
+                         "BENCH_stream.json for the incremental-vs-reencode "
+                         "CI gate")
     args = ap.parse_args()
     SCALE, REPS = args.scale, args.reps
     print("name,us_per_call,derived")
@@ -484,6 +565,9 @@ def main() -> None:
     if args.json_store is not None:
         with open(args.json_store, "w") as f:
             json.dump(STORE_JSON, f, indent=2)
+    if args.json_stream is not None:
+        with open(args.json_stream, "w") as f:
+            json.dump(STREAM_JSON, f, indent=2)
 
 
 if __name__ == "__main__":

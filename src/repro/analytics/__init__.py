@@ -21,15 +21,16 @@ live.  This package turns that into an engine:
   cache-aware (resident stages drop their reconstruction term), and the
   compiled programs are seeded from resident materialized stages.
 """
-from .planner import (CostModel, FEASIBILITY, MULTIVARIATE, OPS,
-                      StageSetPlan, as_stage, check_feasible, feasible_stages,
-                      is_feasible, plan_stage, plan_stages)
+from .planner import (CostModel, FEASIBILITY, MULTIVARIATE, OPS, RefreshPlan,
+                      StageSetPlan, TEMPORAL, as_stage, check_feasible,
+                      feasible_stages, is_feasible, plan_refresh, plan_stage,
+                      plan_stages)
 from .engine import BatchedAnalytics, batch_key
 from .query import QueryResult, query
 
 __all__ = [
-    "OPS", "MULTIVARIATE", "FEASIBILITY", "as_stage",
+    "OPS", "TEMPORAL", "MULTIVARIATE", "FEASIBILITY", "as_stage",
     "feasible_stages", "is_feasible", "check_feasible", "plan_stage",
-    "plan_stages", "StageSetPlan",
+    "plan_stages", "StageSetPlan", "plan_refresh", "RefreshPlan",
     "CostModel", "BatchedAnalytics", "batch_key", "QueryResult", "query",
 ]

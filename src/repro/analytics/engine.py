@@ -131,6 +131,91 @@ class BatchedAnalytics:
     def cache_size(self) -> int:
         return len(self._jitted)
 
+    def _cache_put(self, key: Tuple, fn) -> None:
+        self._jitted[key] = fn
+        while len(self._jitted) > self.cache_limit:
+            self._jitted.popitem(last=False)
+
+    # -- temporal (streaming) programs --------------------------------------
+    def summarize(self, slabs: Sequence[Field], stage: Stage, *,
+                  region=None):
+        """Per-slab temporal summaries, batched: one compiled program per
+        ``(slab layout, stage, region, padded batch)``.
+
+        The key never includes the stream's total slab count or the slab
+        index — every append of a same-layout slab reuses the same program,
+        which is what keeps streaming ingest retrace-free
+        (``repro.stream``, DESIGN.md §9).  Returns a
+        :class:`~repro.core.oplib.TemporalSummary` whose leaves carry a
+        leading batch axis (``len(slabs)``); merging is the caller's job —
+        summaries are order-sensitive (``last2``), and padding repeats the
+        last slab, so a blind in-program reduce would double-count it.
+        """
+        if not slabs:
+            raise ValueError("empty slab batch")
+        first = slabs[0]
+        stage = Stage(stage)
+        norm = (region_mod.normalize_region(region, first.shape[1:])
+                if region is not None else None)
+        b = len(slabs)
+        padded = list(slabs)
+        if self.bucket_batches:
+            padded += [slabs[-1]] * (self._bucket(b) - b)
+        key = layout_key(first) + ("__temporal_summary__", stage, norm,
+                                   len(padded))
+        fn = self._jitted.get(key)
+        fresh = fn is None
+        if fn is None:
+            def run(*flat, _stage=stage, _r=norm, _b=len(padded)):
+                stacked = batch_stack(flat[:_b])
+                return jax.vmap(lambda c: oplib.summarize_slab(
+                    c, _stage, region=_r))(stacked)
+
+            fn = jax.jit(run)
+            self._cache_put(key, fn)
+        else:
+            self._jitted.move_to_end(key)
+        try:
+            out = fn(*padded)
+        except Exception:
+            if fresh:  # infeasible stage raises at trace: don't cache it
+                self._jitted.pop(key, None)
+            raise
+        if len(padded) != b:
+            out = jax.tree.map(lambda x: x[:b], out)
+        return out
+
+    def merge_summaries(self, a, b):
+        """Jitted pairwise summary merge — ONE program per summary
+        signature, reused for every append and every fold step, so merging
+        a K-slab stream never retraces as K grows."""
+        key = ("__temporal_merge__", a.sig(), b.sig())
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = jax.jit(oplib.merge_summaries)
+            self._cache_put(key, fn)
+        else:
+            self._jitted.move_to_end(key)
+        return fn(a, b)
+
+    def run_temporal(self, ops: Union[str, Sequence[str]], summary, eps):
+        """Temporal op postludes on one merged summary: one compiled
+        program per (canonical op set, summary signature) — independent of
+        how many slabs the summary merged, so querying a growing stream
+        compiles exactly once."""
+        names = oplib.canonical_ops(ops)
+        if not oplib.is_temporal_ops(names):
+            raise ValueError(f"{names} is not a temporal op set")
+        key = ("__temporal_post__", names, summary.sig())
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = jax.jit(lambda s, e, _names=names:
+                         oplib.temporal_postlude(_names, s, e))
+            self._cache_put(key, fn)
+        else:
+            self._jitted.move_to_end(key)
+        return fn(summary, eps)
+
     # -- stage resolution ---------------------------------------------------
     def _resolve(self, scheme, names: Tuple[str, ...], stage: StageLike,
                  region, field, axis: int) -> StageSetPlan:

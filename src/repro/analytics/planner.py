@@ -45,16 +45,20 @@ from repro.core import region as region_mod
 
 #: planned operations, in the op registry's canonical order.
 OPS: Tuple[str, ...] = tuple(oplib.OPS)
+#: temporal (time-axis) operations over appended streams (repro.stream).
+TEMPORAL: Tuple[str, ...] = tuple(oplib.TEMPORAL_OPS)
 #: ops that take a sequence of component fields instead of a single field
 MULTIVARIATE = frozenset(
     name for name, spec in oplib.OPS.items() if spec.arity == "vector")
 
 
 def _build_matrix() -> Dict[Tuple[Scheme, str], Tuple[Stage, ...]]:
-    """Table I as data, derived from the op registry's own feasibility rows
-    (one source of truth: :data:`repro.core.oplib.OPS`)."""
+    """Table I as data, derived from the op registries' own feasibility rows
+    (one source of truth: :data:`repro.core.oplib.OPS` plus the temporal
+    registry :data:`repro.core.oplib.TEMPORAL_OPS`)."""
     return {(scheme, name): spec.feasible(scheme)
-            for scheme in Scheme for name, spec in oplib.OPS.items()}
+            for scheme in Scheme
+            for name, spec in oplib._ALL_OPS.items()}
 
 
 #: Table I: (scheme, op) -> stages the op is defined at, cheapest first.
@@ -77,7 +81,8 @@ def feasible_stages(scheme: Scheme, op: str) -> Tuple[Stage, ...]:
     try:
         return FEASIBILITY[(Scheme(scheme), op)]
     except KeyError:
-        raise ValueError(f"unknown operation {op!r}; expected one of {OPS}")
+        raise ValueError(
+            f"unknown operation {op!r}; expected one of {OPS + TEMPORAL}")
 
 
 def is_feasible(scheme: Scheme, op: str, stage: Stage) -> bool:
@@ -229,7 +234,16 @@ class CostModel:
     def load(cls, path: Union[str, os.PathLike]) -> "CostModel":
         """Inverse of :meth:`save`: an exact round-trip, including the
         observation counts, so post-load :meth:`record` calls continue the
-        same running means."""
+        same running means.
+
+        Tolerates JSON written by older versions: entries missing required
+        keys (stage, microseconds, ...) — and a missing reconstruction
+        table entirely — are skipped with a warning, so the affected cells
+        simply fall back to the uncalibrated planning path instead of the
+        whole load dying with a ``KeyError``.
+        """
+        import warnings
+
         with open(path) as f:
             data = json.load(f)
         if data.get("format") != cls._FORMAT:
@@ -237,14 +251,31 @@ class CostModel:
         if data.get("version") != 1:
             raise ValueError(f"{path}: unsupported version {data.get('version')!r}")
         model = cls()
+        skipped = 0
         for cell in data.get("cells", ()):
-            key = (Scheme(cell["scheme"]), str(cell["op"]), Stage[cell["stage"]])
-            model.table[key] = float(cell["us"])
+            try:
+                key = (Scheme(cell["scheme"]), str(cell["op"]),
+                       Stage[cell["stage"]])
+                us = float(cell["us"])
+            except (KeyError, ValueError, TypeError):
+                skipped += 1
+                continue
+            model.table[key] = us
             model._counts[key] = int(cell.get("count", 1))
         for cell in data.get("recon", ()):
-            key = (Scheme(cell["scheme"]), Stage[cell["stage"]])
-            model.recon[key] = float(cell["us"])
+            try:
+                key = (Scheme(cell["scheme"]), Stage[cell["stage"]])
+                us = float(cell["us"])
+            except (KeyError, ValueError, TypeError):
+                skipped += 1
+                continue
+            model.recon[key] = us
             model._recon_counts[key] = int(cell.get("count", 1))
+        if skipped:
+            warnings.warn(
+                f"{path}: skipped {skipped} malformed cost-model cell(s) "
+                "(older save format?); the affected cells plan uncalibrated",
+                stacklevel=2)
         return model
 
     # -- lookup ------------------------------------------------------------
@@ -413,6 +444,15 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
     if not inter:
         return StageSetPlan(names, per_op_plan(), None)
 
+    # residency only ever discounts stages the candidate can actually run
+    # at: for the *shared* choice that is the feasible intersection, so a
+    # cached stage outside it (e.g. a resident stage-② materialization
+    # under a gradient-bearing set on a 1-D scheme) is neither priced nor
+    # raises — the shared stage falls back to cold planning over the
+    # remaining feasible stages, while per-op fallbacks keep their own
+    # (per-op-feasible) residency discounts
+    shared_cached = cached & frozenset(inter)
+
     calibrated = cost_model is not None and all(
         cost_model.cost(scheme, op, s) is not None
         for op in names for s in feas[op])
@@ -435,12 +475,58 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
         per_total = sum(cost(op, s) for op, s in per_op)
         if per_total < totals[shared]:
             return StageSetPlan(names, per_op, None)
-    elif cached:
+    elif shared_cached:
         # uncalibrated but residency is known: a resident shared stage pays
         # no reconstruction at all — prefer it over any cold stage
-        shared = min(inter, key=_resident_rank(cached))
+        shared = min(inter, key=_resident_rank(shared_cached))
     else:
         # stage order is monotone in decompression work (paper §V): the
         # lowest shared stage is the cheapest joint reconstruction
         shared = inter[0]
     return StageSetPlan(names, tuple((op, shared) for op in names), shared)
+
+
+# ===========================================================================
+# streaming appends: incremental-update vs full-recompute costing
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPlan:
+    """How to bring a temporal field's resident summary up to date after an
+    append (``repro.stream``, DESIGN.md §9).
+
+    ``mode`` is ``"incremental"`` (reconstruct only the appended slab and
+    merge it into the resident summary) or ``"recompute"`` (reconstruct
+    every slab — the only option when no summary is resident).  The costs
+    are reconstruction microseconds from the calibrated fig3/4 table
+    (``None`` when uncalibrated: the decision then rests on slab counts
+    alone, which is exact — merge work is O(extent), reconstruction is the
+    whole cost).
+    """
+
+    mode: str                            # "incremental" | "recompute"
+    incremental_us: Optional[float]      # one-slab reconstruction cost
+    recompute_us: Optional[float]        # all-slab reconstruction cost
+
+
+def plan_refresh(scheme: Scheme, stage: Stage, n_slabs: int,
+                 cost_model: Optional[CostModel] = None, *,
+                 summary_resident: bool = True) -> RefreshPlan:
+    """Cost an append's summary refresh: incremental merge vs full rebuild.
+
+    Incremental pays one slab's stage reconstruction; a recompute pays
+    ``n_slabs`` of them.  With a resident summary the incremental path is
+    never dearer (reconstruction cost is nonnegative and the integer merge
+    is exact, so there is no accuracy argument for recomputing); without
+    one there is nothing to merge into and the plan is a recompute — which
+    the store then defers to the next query rather than paying eagerly.
+    """
+    if n_slabs < 1:
+        raise ValueError(f"n_slabs must be >= 1, got {n_slabs}")
+    rec = (cost_model.reconstruction(scheme, Stage(stage))
+           if cost_model is not None else None)
+    inc = rec
+    full = rec * n_slabs if rec is not None else None
+    if not summary_resident:
+        return RefreshPlan("recompute", inc, full)
+    return RefreshPlan("incremental", inc, full)

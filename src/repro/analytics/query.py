@@ -61,6 +61,8 @@ class QueryResult:
 def _group_signature(item: FieldOrVector, vector: bool) -> Tuple:
     if vector:
         return tuple(layout_key(c) for c in item)
+    if hasattr(item, "layout_sig"):  # TemporalField (repro.stream)
+        return item.layout_sig()
     return layout_key(item)
 
 
@@ -102,6 +104,13 @@ def _resolve_item(item, store, vector):
             else:
                 comps.append(c)
                 ids.append(None)
+        named = [i for i in ids if i is not None]
+        if len(set(named)) != len(named):
+            # a vector field's components are distinct physical quantities;
+            # repeating an id is a malformed request, and rejecting it here
+            # keeps serve-side isolation (only this request errors)
+            raise ValueError(
+                f"duplicate field ids in vector components: {tuple(ids)}")
         all_ids = all(i is not None for i in ids)
         return tuple(comps), (tuple(ids) if all_ids else None)
     if isinstance(item, str):
@@ -155,6 +164,13 @@ def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
     """
     single = isinstance(op, str)
     names = oplib.canonical_ops(op)
+    if oplib.is_temporal_ops(names):
+        # temporal op sets run over appended streams: same query() surface,
+        # streaming execution path (slab-count-stable compiled programs)
+        from repro.stream.query import query_temporal
+        return query_temporal(fields, op, stage, axis=axis, region=region,
+                              cost_model=cost_model, engine=engine,
+                              store=store)
     vector = oplib.is_vector_ops(names)
     if engine is None:
         engine = default_engine
@@ -164,6 +180,12 @@ def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
     ids: List = []
     for item in fields:
         r, fid = _resolve_item(item, store, vector)
+        for c in (r if vector else (r,)):
+            if hasattr(c, "layout_sig"):  # TemporalField (repro.stream)
+                raise TypeError(
+                    f"spatial op set {names} takes Compressed/Encoded "
+                    "fields; a temporal field answers temporal ops "
+                    f"({', '.join(oplib.TEMPORAL_OPS)}) instead")
         resolved.append(r)
         ids.append(fid)
 

@@ -27,11 +27,18 @@ rule consumes the context's windowing helpers, which degrade to crop/mask
 operations when no region is given.  Fused and single-op results are
 bit-identical at a given stage because both run the same rule against
 contexts that differ at most in their (integer-exact) gather closure.
+
+A second registry, :data:`TEMPORAL_OPS`, covers streaming time-slab
+analytics (``repro.stream``, DESIGN.md §9): reductions over the time axis
+of an appended stream (``tdelta``, running ``tmean``/``tmin``/``tmax``/
+``tstd``), lowered as postludes on an integer-exact
+:class:`TemporalSummary` built per slab (:func:`summarize_slab`) and
+merged homomorphically (:func:`merge_summaries`).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field as dc_field
-from functools import cached_property
+from functools import cached_property, partial
 from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -42,7 +49,7 @@ from . import blocking, quantize
 from . import encode as encode_mod
 from . import region as R
 from .pipeline import HSZCompressor, UnsupportedStageError, by_name
-from .stages import Compressed, Encoded, Scheme, Stage
+from .stages import (Compressed, Encoded, Scheme, Stage, _dataclass_pytree)
 
 Field = Union[Compressed, Encoded]
 
@@ -79,6 +86,10 @@ def set_closure(ops: Union[str, Sequence[str]], scheme: Scheme, stage: Stage,
         raise ValueError(
             f"vector op set {names} has per-component closures; "
             "use component_closures()")
+    if is_temporal_ops(names):
+        raise ValueError(
+            f"temporal op set {names} closes over slabs, not a spatial "
+            "gather; see repro.stream")
     return join_closures(
         [OPS[n].closure(Scheme(scheme), Stage(stage), axis) for n in names])
 
@@ -538,6 +549,7 @@ class OpSpec:
     component_axes: Optional[Callable[[int], Tuple[Tuple[int, ...], ...]]] = None
     lower: Mapping[Tuple[Stage, str], Rule] = dc_field(default_factory=dict)
     lower_vector: Optional[Callable] = None
+    lower_temporal: Optional[Callable] = None  # (TemporalSummary, eps) -> result
 
 
 def _mean_stages(scheme: Scheme) -> Tuple[Stage, ...]:
@@ -659,7 +671,219 @@ OPS: Dict[str, OpSpec] = {
     )
 }
 
-_ORDER = {name: i for i, name in enumerate(OPS)}
+# ===========================================================================
+# temporal operations (streaming time-slab analytics)
+# ===========================================================================
+# A *temporal field* (``repro.stream.TemporalField``) is an append-only
+# sequence of error-bounded-compressed time slabs, each an ordinary
+# Compressed/Encoded field of shape ``(k, *spatial)`` sharing one eps (one
+# quantization grid).  Temporal ops reduce over the time axis and lower as
+# homomorphic *merges* of per-slab integer summaries: every leaf of a
+# :class:`TemporalSummary` is integer-exact (int32, modular), so merging
+# slab summaries in any association is bit-identical to one reduction over
+# the fully decompressed concatenated field — the streaming analogue of the
+# store's integer-materialization contract (DESIGN.md §9).
+
+
+@partial(
+    _dataclass_pytree,
+    data_fields=("count", "q_sum", "q_sumsq", "q_min", "q_max", "last2"),
+    meta_fields=(),
+)
+@dataclass(frozen=True)
+class TemporalSummary:
+    """Integer-exact per-slab (or merged) temporal summary.
+
+    All leaves are ``int32`` over the queried spatial extent; sums are
+    modular (two's-complement wrap), which keeps merging associative and
+    bit-exact in any order — results are numerically meaningful while the
+    true sums fit int32 (``|q| * T < 2^31`` for ``q_sum``, ``q^2 * T < 2^31``
+    for ``q_sumsq``), the same residual-bounded regime the rest of the
+    integer pipeline assumes.  ``last2`` holds the quantization integers of
+    the final two timesteps (duplicated while only one exists), which is
+    what ``tdelta`` — the latest inter-timestep change — consumes.
+    """
+
+    count: jax.Array    # int32 scalar: timesteps summarized
+    q_sum: jax.Array    # int32 (*extent,): sum over time of q
+    q_sumsq: jax.Array  # int32 (*extent,): sum over time of q^2 (modular)
+    q_min: jax.Array    # int32 (*extent,)
+    q_max: jax.Array    # int32 (*extent,)
+    last2: jax.Array    # int32 (2, *extent): q at timesteps T-2, T-1
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes kept resident (store LRU accounting)."""
+        leaves = (self.count, self.q_sum, self.q_sumsq, self.q_min,
+                  self.q_max, self.last2)
+        return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
+    def sig(self) -> Tuple:
+        """Hashable static signature (jit-cache key component)."""
+        return tuple((tuple(x.shape), str(x.dtype))
+                     for x in (self.count, self.q_sum, self.q_sumsq,
+                               self.q_min, self.q_max, self.last2))
+
+
+def summary_from_q(q: jax.Array) -> TemporalSummary:
+    """Summarize a time-major integer block ``q`` of shape ``(k, *extent)``.
+
+    The one reduction rule both paths share: per-slab summaries (this, per
+    slab, then merged) and the full-decompression reference (this, once,
+    over the concatenated field) are bit-identical because every reduction
+    is int32 (modular addition / min / max — associative, order-free).
+    """
+    k = int(q.shape[0])
+    last2 = q[-2:] if k >= 2 else jnp.concatenate([q[-1:], q[-1:]], axis=0)
+    return TemporalSummary(
+        count=jnp.asarray(k, jnp.int32),
+        q_sum=jnp.sum(q, axis=0),
+        q_sumsq=jnp.sum(q * q, axis=0),
+        q_min=jnp.min(q, axis=0),
+        q_max=jnp.max(q, axis=0),
+        last2=last2,
+    )
+
+
+def merge_summaries(a: TemporalSummary, b: TemporalSummary) -> TemporalSummary:
+    """Homomorphic merge of two temporally *adjacent* summaries (a before b).
+
+    Integer-exact and associative — ``merge(s_1, merge(s_2, s_3))`` equals
+    one pass over the concatenation — but not commutative: ``last2`` tracks
+    the stream's final frames, so order is the append order.
+    """
+    last2 = jnp.where(b.count >= 2, b.last2,
+                      jnp.stack([a.last2[1], b.last2[1]]))
+    return TemporalSummary(
+        count=a.count + b.count,
+        q_sum=a.q_sum + b.q_sum,
+        q_sumsq=a.q_sumsq + b.q_sumsq,
+        q_min=jnp.minimum(a.q_min, b.q_min),
+        q_max=jnp.maximum(a.q_max, b.q_max),
+        last2=last2,
+    )
+
+
+def _slab_q_view(ctx: StageContext) -> jax.Array:
+    """Quantization integers of one slab on the queried extent, time-major.
+
+    Stage ③/④ read the shared ``q_spatial`` reconstruction; stage ② derives
+    q from the stage-② intermediates (block-mean: residuals + upsampled
+    means, elementwise; Lorenzo: the context's cumsum recorrelation — the
+    same stage-② work the spatial ``std@P`` lowerings already do).  All
+    paths produce the *same integers*, which is why one summary serves every
+    feasible stage bit-identically.
+    """
+    if ctx.stage != Stage.P:
+        return ctx.q_spatial
+    if ctx.scheme.is_blockmean:
+        return ctx.spatial_window(ctx.sub.residuals + ctx.upsampled_means)
+    return ctx.spatial_window(ctx.lorenzo_q)
+
+
+def temporal_region(c: Field, region) -> Optional[Tuple]:
+    """Lift a *spatial* region to the slab layout (time axis 0 kept whole)."""
+    if region is None:
+        return None
+    if len(region) != len(c.shape) - 1:
+        raise ValueError(
+            f"temporal region is spatial-only: rank {len(c.shape) - 1} "
+            f"expected, got {len(region)}")
+    return ((0, c.shape[0]),) + tuple(region)
+
+
+def summarize_slab(c: Field, stage: Stage, *,
+                   region=None) -> TemporalSummary:
+    """One slab's integer temporal summary at ``stage`` (the per-append
+    reconstruction unit: appending a slab summarizes *only* that slab).
+
+    ``region`` is spatial (the slab's time axis is always axis 0 and always
+    fully covered).  Infeasible stages raise ``UnsupportedStageError`` with
+    the temporal ops' own error semantics.
+    """
+    stage = Stage(stage)
+    _check_feasible(TEMPORAL_OPS["tmean"], c.scheme, stage)
+    slab_region = temporal_region(c, region)
+    closure = R.op_closure(c.scheme, "mean", stage)
+    ctx = StageContext(c, stage, slab_region, closure)
+    return summary_from_q(_slab_q_view(ctx))
+
+
+def _temporal_cnt(s: TemporalSummary) -> jax.Array:
+    return s.count.astype(jnp.float32)
+
+
+def _tmean_rule(s: TemporalSummary, eps) -> jax.Array:
+    return s.q_sum.astype(jnp.float32) * (2.0 * eps) / _temporal_cnt(s)
+
+
+def _tstd_rule(s: TemporalSummary, eps) -> jax.Array:
+    n = _temporal_cnt(s)
+    s1 = s.q_sum.astype(jnp.float32)
+    s2 = s.q_sumsq.astype(jnp.float32)
+    # frame-at-a-time streams query after a single timestep: ddof=1 would be
+    # 0/0 there, so clamp the denominator — zero spread, not NaN, until a
+    # second timestep arrives
+    var = (s2 - s1 * s1 / n) / jnp.maximum(n - 1.0, 1.0)
+    return jnp.sqrt(jnp.maximum(var, 0.0)) * (2.0 * eps)
+
+
+def _tmin_rule(s: TemporalSummary, eps) -> jax.Array:
+    return s.q_min.astype(jnp.float32) * (2.0 * eps)
+
+
+def _tmax_rule(s: TemporalSummary, eps) -> jax.Array:
+    return s.q_max.astype(jnp.float32) * (2.0 * eps)
+
+
+def _tdelta_rule(s: TemporalSummary, eps) -> jax.Array:
+    # latest inter-timestep change, exact integer difference scaled once
+    # (same single-rounding form as the spatial stage-④ stencils)
+    return (s.last2[1] - s.last2[0]).astype(jnp.float32) * (2.0 * eps)
+
+
+def _temporal_stages(scheme: Scheme) -> Tuple[Stage, ...]:
+    # stage ② needs the (time, *spatial) layout; 1-D partitioning flattens
+    # it away, exactly like the spatial stencils (paper §V-B)
+    return tuple(([Stage.P] if scheme.is_nd else []) + [Stage.Q, Stage.F])
+
+
+#: temporal op registry: reductions over the time axis of an appended
+#: stream, each a postlude on one merged :class:`TemporalSummary`.
+TEMPORAL_OPS: Dict[str, OpSpec] = {
+    spec.name: spec for spec in (
+        OpSpec("tdelta", "temporal", "temporal", _temporal_stages,
+               lower_temporal=_tdelta_rule),
+        OpSpec("tmean", "temporal", "temporal", _temporal_stages,
+               lower_temporal=_tmean_rule),
+        OpSpec("tmin", "temporal", "temporal", _temporal_stages,
+               lower_temporal=_tmin_rule),
+        OpSpec("tmax", "temporal", "temporal", _temporal_stages,
+               lower_temporal=_tmax_rule),
+        OpSpec("tstd", "temporal", "temporal", _temporal_stages,
+               lower_temporal=_tstd_rule),
+    )
+}
+
+
+def temporal_postlude(ops: Union[str, Sequence[str]], summary: TemporalSummary,
+                      eps) -> Dict[str, jax.Array]:
+    """Lower a temporal op set onto one merged summary: ``{op: result}``.
+
+    The summary already paid every reconstruction; postludes are tiny
+    elementwise float tails, identical at every stage the summary serves
+    (②③④ — the integers are the same, ④'s dequantize is the final multiply).
+    """
+    names = canonical_ops(ops)
+    if not is_temporal_ops(names):
+        raise ValueError(f"{names} is not a temporal op set")
+    return {n: TEMPORAL_OPS[n].lower_temporal(summary, eps) for n in names}
+
+
+#: single lookup across both registries (spatial + temporal).
+_ALL_OPS: Dict[str, OpSpec] = {**OPS, **TEMPORAL_OPS}
+
+_ORDER = {name: i for i, name in enumerate(_ALL_OPS)}
 
 
 # ===========================================================================
@@ -676,21 +900,28 @@ def canonical_ops(ops: Union[str, Sequence[str]]) -> Tuple[str, ...]:
         raise ValueError("empty op set")
     out = []
     for name in names:
-        if name not in OPS:
+        if name not in _ALL_OPS:
             raise ValueError(
-                f"unknown operation {name!r}; expected one of {tuple(OPS)}")
+                f"unknown operation {name!r}; expected one of "
+                f"{tuple(_ALL_OPS)}")
         if name not in out:
             out.append(name)
     out.sort(key=_ORDER.__getitem__)
-    if len({OPS[n].arity for n in out}) > 1:
+    if len({_ALL_OPS[n].arity for n in out}) > 1:
         raise ValueError(
-            f"cannot fuse single-field and vector ops in one set: {tuple(out)}")
+            f"cannot fuse ops of different arities in one set: {tuple(out)} "
+            "(field, vector, and temporal ops consume different arguments)")
     return tuple(out)
 
 
 def is_vector_ops(ops: Sequence[str]) -> bool:
     """True when the (canonical) op set takes vector-field arguments."""
-    return OPS[ops[0]].arity == "vector"
+    return _ALL_OPS[ops[0]].arity == "vector"
+
+
+def is_temporal_ops(ops: Sequence[str]) -> bool:
+    """True when the (canonical) op set reduces over a temporal stream."""
+    return _ALL_OPS[ops[0]].arity == "temporal"
 
 
 def _check_feasible(spec: OpSpec, scheme: Scheme, stage: Stage) -> None:
@@ -701,6 +932,13 @@ def _check_feasible(spec: OpSpec, scheme: Scheme, stage: Stage) -> None:
         if spec.name == "mean":
             raise UnsupportedStageError("stage-1 mean needs HSZx-family metadata")
         raise UnsupportedStageError("std needs pointwise info (stages 2-4)")
+    if spec.category == "temporal":
+        if stage == Stage.M:
+            raise UnsupportedStageError(
+                "temporal ops need pointwise info (stages 2-4)")
+        # 1-D partitioning flattens the (time, spatial) layout away, like
+        # the spatial stencils (paper §V-B)
+        raise UnsupportedStageError("stage-2 temporal ops require nd schemes")
     if stage == Stage.M:
         raise UnsupportedStageError("stencils need pointwise info")
     # paper §V-B: 1-D partitioning destroys multidimensional layout
@@ -729,6 +967,11 @@ def compute(target, ops: Union[str, Sequence[str]], stage: Stage, *,
     """
     stage = Stage(stage)
     names = canonical_ops(ops)
+    if is_temporal_ops(names):
+        raise ValueError(
+            f"temporal op set {names} runs over an appended stream of time "
+            "slabs; use repro.stream (TemporalField / query) instead of "
+            "compute()")
     specs = [OPS[n] for n in names]
 
     if is_vector_ops(names):

@@ -1,5 +1,7 @@
-"""Serving: batched token generation + batched homomorphic analytics."""
+"""Serving: batched token generation + batched homomorphic analytics +
+streaming temporal ingest."""
 from .engine import Engine, Request
-from .analytics import AnalyticsFrontend, AnalyticsRequest
+from .analytics import AnalyticsFrontend, AnalyticsRequest, AppendRequest
 
-__all__ = ["Engine", "Request", "AnalyticsFrontend", "AnalyticsRequest"]
+__all__ = ["Engine", "Request", "AnalyticsFrontend", "AnalyticsRequest",
+           "AppendRequest"]

@@ -19,6 +19,15 @@ repeated queries of a hot field reuse its materialized stage reconstruction
 (``repro.analytics.query`` seeds the compiled program) and clients stop
 shipping arrays entirely — the serve-millions contract.  Unknown ids reject
 only their own request.
+
+With a streaming store (:class:`repro.stream.StreamFieldStore`), the queue
+also carries :class:`AppendRequest` — producers ship raw timestep batches
+against a temporal field id; each serving step applies appends (in order)
+*before* its analytics, and temporal ops (``tmean``/``tdelta``/...) over
+the same ids answer from incrementally merged summaries.  Every request is
+always either answered or rejected with a structured error; a malformed
+request (unknown id, empty op set, out-of-bounds region, duplicate vector
+component ids) never poisons another request's group or the jit cache.
 """
 from __future__ import annotations
 
@@ -55,7 +64,9 @@ class AnalyticsRequest:
 
     ``fields`` carries the data — or, with a store-attached frontend, names
     it: a registered field id (or a sequence of component ids) instead of
-    the container itself.
+    the container itself.  With a streaming store
+    (:class:`repro.stream.StreamFieldStore`), temporal ops (``tmean``,
+    ``tdelta``, ...) over a temporal field id query the appended stream.
     """
 
     uid: int
@@ -67,6 +78,27 @@ class AnalyticsRequest:
     result: Any = None                     # array, or {op: array} for op sets
     result_stage: Any = None               # Stage, or {op: Stage} for op sets
     error: Optional[str] = None            # set instead of result on rejection
+    done: bool = False
+
+
+@dataclasses.dataclass
+class AppendRequest:
+    """Streaming ingest: append one time slab to a registered temporal field.
+
+    The client-side half of the streaming contract — producers ship raw
+    timestep batches (``data``: shape ``(k, *spatial)``) against a field
+    *id*; the frontend's :class:`repro.stream.StreamFieldStore` compresses
+    the slab and incrementally refreshes the id's resident temporal
+    summaries (reconstructing only the new slab).  Within one serving step
+    appends are applied before analytics, so an append+query pair enqueued
+    together observes the appended timesteps.
+    """
+
+    uid: int
+    field_id: str
+    data: Any                              # (timesteps, *spatial) raw values
+    slab_index: Optional[int] = None       # set on success
+    error: Optional[str] = None            # set instead on rejection
     done: bool = False
 
 
@@ -89,28 +121,52 @@ class AnalyticsFrontend:
         resolved, _ = _resolve_item(req.fields, self.store, vector)
         return resolved
 
-    def add_request(self, req: AnalyticsRequest) -> None:
+    def add_request(self, req: Union[AnalyticsRequest, "AppendRequest"]) -> None:
         self._queue.append(req)
 
     # -- one serving step --------------------------------------------------
     @staticmethod
-    def _reject(req: AnalyticsRequest, exc: Exception) -> AnalyticsRequest:
+    def _reject(req, exc: Exception):
         req.error = f"{type(exc).__name__}: {exc}"
         req.done = True
         return req
 
-    def step(self) -> List[AnalyticsRequest]:
+    def _apply_append(self, req: AppendRequest) -> AppendRequest:
+        """Ingest one slab through the streaming store (rejections are
+        per-request, like analytics)."""
+        try:
+            if self.store is None or not hasattr(self.store, "append"):
+                raise ValueError(
+                    "append requests need a streaming store "
+                    "(repro.stream.StreamFieldStore) attached to the frontend")
+            req.slab_index = self.store.append(req.field_id, req.data)
+        except Exception as e:  # unknown id / shape mismatch / no store
+            return self._reject(req, e)
+        req.done = True
+        return req
+
+    def step(self) -> List[Union[AnalyticsRequest, AppendRequest]]:
         """Serve up to ``max_batch`` queued requests; returns those finished.
 
-        Requests are grouped by (canonical op set, stage directive, axis,
-        region, field layout), so a rejection — infeasible stage, malformed
-        fields — only affects its own group; everything servable in the step
-        is served.
+        Appends are applied first (in arrival order — ingest precedes the
+        step's analytics), then analytics requests are grouped by
+        (canonical op set, stage directive, axis, region, field layout), so
+        a rejection — infeasible stage, malformed fields, duplicate ids,
+        out-of-bounds region — only affects its own request or group;
+        everything servable in the step is served, and a rejected request
+        never leaves a poisoned entry in the engine's jit cache (fresh
+        failing programs are evicted by the engine itself).
         """
         batch, self._queue = self._queue[:self.max_batch], self._queue[self.max_batch:]
-        finished: List[AnalyticsRequest] = []
-        groups: Dict[Tuple, List[AnalyticsRequest]] = {}
+        finished: List[Union[AnalyticsRequest, AppendRequest]] = []
+        analytics_batch: List[AnalyticsRequest] = []
         for req in batch:
+            if isinstance(req, AppendRequest):
+                finished.append(self._apply_append(req))
+            else:
+                analytics_batch.append(req)
+        groups: Dict[Tuple, List[AnalyticsRequest]] = {}
+        for req in analytics_batch:
             try:
                 ops = oplib.canonical_ops(req.op)
                 vector = oplib.is_vector_ops(ops)

@@ -198,20 +198,37 @@ class FieldStore:
         self._insert(key, m)
         return m
 
-    def _insert(self, key: Tuple, m: MaterializedStage) -> None:
+    def _insert(self, key: Tuple, m) -> None:
+        """Insert (or replace) one cache entry, keeping ``_bytes`` equal to
+        the sum of resident ``nbytes`` through every path.
+
+        The replace path subtracts the old entry's bytes exactly once (the
+        ``pop`` removes it before the eviction loop can see it, so it can
+        never be double-subtracted as both replacement and victim), and the
+        eviction loop walks from the LRU end but never touches ``key``
+        itself — the just-inserted entry must not be its own victim even if
+        a future refactor changes its position in the order.
+        """
         nb = m.nbytes
-        if nb > self.cache_bytes:
-            # never retained: computed for this query, dropped immediately
-            self.stats.rejected += 1
-            return
         old = self._cache.pop(key, None)
         if old is not None:
             self._bytes -= old.nbytes
+        if nb > self.cache_bytes:
+            # never retained: computed for this call, dropped immediately.
+            # A *replaced* entry stays dropped — keeping the stale value
+            # would serve outdated intermediates (fatal for streaming
+            # summaries, which are replaced on every append).
+            self.stats.rejected += 1
+            if old is not None:
+                self.stats.evictions += 1
+            return
         self._cache[key] = m
         self._bytes += nb
-        while self._bytes > self.cache_bytes and len(self._cache) > 1:
-            _, victim = self._cache.popitem(last=False)
-            self._bytes -= victim.nbytes
+        while self._bytes > self.cache_bytes:
+            victim_key = next(iter(self._cache))
+            if victim_key == key:  # never evict the entry just inserted
+                break
+            self._bytes -= self._cache.pop(victim_key).nbytes
             self.stats.evictions += 1
 
     def invalidate(self, field_id: str) -> int:

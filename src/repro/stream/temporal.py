@@ -1,0 +1,208 @@
+"""Append-only temporal fields: streaming time-slab ingestion (DESIGN.md §9).
+
+Scientific producers (simulations, instruments) emit data as an append-only
+stream of timesteps; the paper's framework assumes fields arrive whole.  A
+:class:`TemporalField` closes that gap: each ``append`` error-bound-
+compresses one *time slab* — a batch of timesteps, shape ``(k, *spatial)``
+— as an ordinary field of any of the four schemes, **without re-encoding
+history**.  All slabs share one quantization grid (``eps`` is resolved at
+the first append and pinned), so their stage-③ integers concatenate into
+one coherent field, and the temporal operations registered in
+``repro.core.oplib`` (``tdelta``, ``tmean``/``tmin``/``tmax``/``tstd``
+over the time axis) lower as homomorphic merges of per-slab integer
+summaries — bit-identical to the same reduction over the full
+decompression of the concatenated field, because every summary leaf is
+int32 (modular, associative, order-free).
+
+Layout discipline: slabs appended with the same timestep count encode to
+the same static layout, so the engine's per-slab summarizer program
+(``BatchedAnalytics.summarize``) is compiled once and reused by every
+append — streaming ingest never retraces as the stream grows.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Compressed, Encoded, HSZCompressor, Stage, by_name, oplib
+from repro.core import quantize
+
+Field = Union[Compressed, Encoded]
+
+
+@lru_cache(maxsize=64)
+def _jit_compress(scheme, block):
+    """One compiled slab compressor per (scheme, block) — shared across
+    streams, so steady-state ingest pays device work, not per-op dispatch."""
+    comp = HSZCompressor(scheme, block)
+    return jax.jit(lambda data, eps: comp.compress(data, eps=eps))
+
+
+@lru_cache(maxsize=64)
+def _jit_encode(scheme, block, bits: int):
+    """One compiled bit-packer per (scheme, block, width)."""
+    comp = HSZCompressor(scheme, block)
+    return jax.jit(lambda c: comp.encode(c, bits=bits))
+
+
+class TemporalField:
+    """An append-only stream of error-bounded-compressed time slabs.
+
+    Parameters
+    ----------
+    compressor:
+        An :class:`~repro.core.HSZCompressor` (or scheme name) used for
+        every slab.
+    rel_eb / abs_eb / eps:
+        Error-bound policy.  ``eps`` (the absolute quantization step) is
+        resolved from the *first* appended slab and then pinned, so every
+        slab shares one quantization grid — the precondition for merging
+        per-slab integer summaries exactly.
+    bits:
+        Payload policy: ``"auto"`` (default) bit-packs each slab at the
+        first slab's exact max width plus ``headroom`` spare bits; an int
+        pins the width; ``None`` keeps slabs as decoded
+        :class:`~repro.core.Compressed` containers (no packing).  A slab
+        whose residuals exceed the pinned width is encoded at its own
+        exact width instead — correctness first; only the retrace-free
+        layout guarantee narrows to the conforming slabs.
+    """
+
+    def __init__(self, compressor: Union[HSZCompressor, str], *,
+                 rel_eb: Optional[float] = None,
+                 abs_eb: Optional[float] = None,
+                 eps=None, bits: Union[str, int, None] = "auto",
+                 headroom: int = 2):
+        self.compressor = (by_name(compressor)
+                           if isinstance(compressor, str) else compressor)
+        self._rel_eb = rel_eb
+        self._abs_eb = abs_eb
+        self._eps = None if eps is None else jnp.asarray(eps, jnp.float32)
+        if not (bits is None or bits == "auto" or isinstance(bits, int)):
+            raise ValueError(f"bits must be 'auto', an int, or None; got {bits!r}")
+        self._bits = bits
+        self._headroom = int(headroom)
+        self.slabs: List[Field] = []
+        self._spatial_shape: Optional[Tuple[int, ...]] = None
+        self._dtype = None
+
+    # -- static identity ----------------------------------------------------
+    @property
+    def scheme(self):
+        return self.compressor.scheme
+
+    @property
+    def eps(self) -> jax.Array:
+        if self._eps is None:
+            raise ValueError("eps is resolved at the first append; "
+                             "no slab has been appended yet")
+        return self._eps
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """The *spatial* shape (regions and results live here; time grows)."""
+        if self._spatial_shape is None:
+            raise ValueError("no slab has been appended yet")
+        return self._spatial_shape
+
+    @property
+    def n_slabs(self) -> int:
+        return len(self.slabs)
+
+    @property
+    def n_steps(self) -> int:
+        """Total appended timesteps across all slabs."""
+        return sum(s.shape[0] for s in self.slabs)
+
+    def layout_sig(self) -> Tuple:
+        """Hashable grouping signature (the serve frontend batches requests
+        whose temporal fields share compression identity)."""
+        eps = None if self._eps is None else float(self._eps)
+        return ("temporal", self.scheme, self._spatial_shape, eps,
+                None if self._dtype is None else str(self._dtype))
+
+    # -- ingestion ----------------------------------------------------------
+    def append(self, data) -> int:
+        """Compress (and encode) one time slab; returns its index.
+
+        ``data`` has shape ``(k, *spatial)`` — ``k`` timesteps of the
+        field.  History is never touched: the slab is compressed alone,
+        against the stream's pinned ``eps``.
+        """
+        data = jnp.asarray(data)
+        if data.ndim < 2:
+            raise ValueError(
+                f"a time slab is (timesteps, *spatial); got shape {data.shape}")
+        spatial = tuple(data.shape[1:])
+        if self._spatial_shape is None:
+            self._spatial_shape = spatial
+            self._dtype = data.dtype
+        elif spatial != self._spatial_shape:
+            raise ValueError(
+                f"slab spatial shape {spatial} != stream spatial shape "
+                f"{self._spatial_shape}")
+        if self._eps is None:
+            self._eps = quantize.resolve_eps(data, abs_eb=self._abs_eb,
+                                             rel_eb=self._rel_eb)
+            self._eps = jnp.asarray(self._eps, jnp.float32)
+        comp = self.compressor
+        c = _jit_compress(comp.scheme, comp.block)(data, self._eps)
+        slab: Field = c
+        if self._bits is not None:
+            width = comp.max_bits(c)
+            if self._bits == "auto":
+                if not self.slabs:
+                    self._bits = min(32, width + self._headroom)
+            if isinstance(self._bits, int):
+                # a pinned width narrower than the slab's residuals would
+                # corrupt the payload: encode such a slab at its own width
+                slab = _jit_encode(comp.scheme, comp.block,
+                                   max(self._bits, width))(c)
+        self.slabs.append(slab)
+        return len(self.slabs) - 1
+
+    # -- reference path (full decompression of the concatenated field) ------
+    def decompress_q(self, region=None) -> jax.Array:
+        """Stage-③ integers of the *concatenated* field, ``(T, *spatial)``
+        (optionally cropped to a spatial ``region``) — the full
+        multi-stage decompression the homomorphic merges are pinned
+        against."""
+        if not self.slabs:
+            raise ValueError("no slab has been appended yet")
+        qs = [self.compressor.decompress(s, Stage.Q) for s in self.slabs]
+        q = jnp.concatenate(qs, axis=0)
+        if region is not None:
+            from repro.core.region import normalize_region
+            norm = normalize_region(region, self.shape)
+            q = q[(slice(None),) + tuple(slice(s, e) for s, e in norm)]
+        return q
+
+    def decompress(self, stage: Stage = Stage.F) -> jax.Array:
+        """Fully decompress the concatenated stream at ``stage``."""
+        stage = Stage(stage)
+        if stage == Stage.Q:
+            return self.decompress_q()
+        return jnp.concatenate(
+            [self.compressor.decompress(s, stage) for s in self.slabs], axis=0)
+
+    def reference(self, ops: Union[str, Sequence[str]],
+                  region=None) -> Dict[str, jax.Array]:
+        """Temporal ops evaluated on the full decompression of the
+        concatenated field: one direct reduction over the stage-③ integers
+        of the whole stream, then the shared op postludes.
+
+        This is the oracle the incremental (per-slab merged) path is pinned
+        bit-identical to in ``tests/test_stream.py``.
+        """
+        names = oplib.canonical_ops(ops)
+        summary = _REF_SUMMARIZE(self.decompress_q(region=region))
+        return _REF_POSTLUDE(names, summary, self.eps)
+
+
+#: jitted reference programs — the same formulas the engine compiles, so
+#: reference and served results share their entire float tails.
+_REF_SUMMARIZE = jax.jit(oplib.summary_from_q)
+_REF_POSTLUDE = jax.jit(oplib.temporal_postlude, static_argnums=0)

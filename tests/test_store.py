@@ -481,3 +481,188 @@ def test_cost_model_calibrates_reconstruction_from_fig34_rows():
     assert cm.cheapest(Scheme.HSZP_ND, "mean", stages) == Stage.P
     assert cm.cheapest(Scheme.HSZP_ND, "mean", stages,
                        cached={Stage.Q}) == Stage.Q
+
+
+# -- byte-accounting audit (ISSUE 5 satellite) --------------------------------
+
+def _bytes_consistent(store):
+    assert store.cache_bytes_in_use == sum(
+        m.nbytes for m in store._cache.values())
+    assert store.cache_bytes_in_use <= max(store.cache_bytes, 0) or (
+        store.cache_entries == 1)
+
+
+def test_byte_accounting_replay_put_replace_evict(field_2d):
+    """Replay put/replace/evict sequences; after every step the byte counter
+    must equal the sum of resident nbytes (no double-subtraction on the
+    replace-with-eviction path, no self-eviction of the fresh entry)."""
+    c1 = _c(hszx_nd, field_2d)
+    c2 = _c(hszx_nd, field_2d * 2.0)
+    one = materialize(c1, Stage.Q).nbytes
+    store = FieldStore(cache_bytes=int(2.2 * one))
+    for i in range(3):
+        store.put(f"f{i}", c1)
+    store.ensure("f0", Stage.Q); _bytes_consistent(store)
+    store.ensure("f1", Stage.Q); _bytes_consistent(store)
+    store.ensure("f2", Stage.Q); _bytes_consistent(store)   # evicts f0
+    assert store.stats.evictions == 1
+    # replace under pressure: invalidate + re-materialize
+    store.put("f1", c2, replace=True); _bytes_consistent(store)
+    store.ensure("f1", Stage.Q); _bytes_consistent(store)
+    # same-key replace (the streaming summary refresh path)
+    m = materialize(c2, Stage.Q)
+    key = next(iter(store._cache))
+    store._insert(key, m); _bytes_consistent(store)
+    assert store._cache[key] is m                     # replaced in place
+    # the just-inserted entry is never its own victim even at a tight budget
+    small = FieldStore(cache_bytes=one)
+    small._insert(("a",), materialize(c1, Stage.Q)); _bytes_consistent(small)
+    small._insert(("b",), materialize(c2, Stage.Q)); _bytes_consistent(small)
+    assert list(k[0] for k in small._cache) == ["b"]  # a evicted, b resident
+
+
+def test_oversized_replacement_drops_stale_entry(field_2d):
+    """Replacing a resident cell with a value too large to retain must not
+    leave the *stale* old value serving hits (fatal for streaming summaries,
+    which are replaced on every append)."""
+    c = _c(hszx_nd, field_2d)
+    m_small = materialize(c, Stage.Q)
+    store = FieldStore(cache_bytes=2 * m_small.nbytes)
+    key = ("x", Stage.Q, None, "cover")
+    store._insert(key, m_small)
+    assert key in store._cache
+
+    class Oversized:
+        nbytes = 10 * m_small.nbytes
+
+    store._insert(key, Oversized())
+    assert key not in store._cache        # stale entry gone, nothing resident
+    assert store.cache_bytes_in_use == 0
+    assert store.stats.rejected == 1 and store.stats.evictions == 1
+    _bytes_consistent(store)
+
+
+# -- cached-stage planning: infeasible intersections (ISSUE 5 satellite) ------
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_plan_stages_cached_outside_feasible_intersection(comp, field_2d):
+    """A resident stage-② materialization under a gradient-bearing op set:
+    for 1-D schemes the cached stage is outside the set's feasible
+    intersection — planning must fall back to the cold choice (not raise,
+    not price the infeasible stage), and store-backed queries must still
+    answer bit-identically."""
+    scheme = comp.scheme
+    cold = analytics.plan_stages(scheme, ["mean", "gradient"])
+    plan = analytics.plan_stages(scheme, ["mean", "gradient"],
+                                 cached=frozenset({Stage.P}))
+    if Stage.P in analytics.feasible_stages(scheme, "gradient"):
+        assert plan.fused == Stage.P      # nd: resident stage serves the set
+    else:
+        assert plan.fused == cold.fused   # 1-D: clean cold fallback
+    # calibrated: the discount must only ever apply inside the intersection
+    cm = CostModel()
+    for op in ("mean", "gradient"):
+        for s in analytics.feasible_stages(scheme, op):
+            cm.record(scheme, op, s, 100.0 * int(s))
+        cm.record_reconstruction(scheme, Stage.Q, 50.0)
+    plan_cal = analytics.plan_stages(scheme, ["mean", "gradient"],
+                                     cost_model=cm,
+                                     cached=frozenset({Stage.P}))
+    for op, s in plan_cal.stages:
+        assert s in analytics.feasible_stages(scheme, op)
+    # end to end through the store
+    c = _c(comp, field_2d)
+    store = FieldStore()
+    store.put("f", c)
+    store.ensure("f", Stage.P)
+    eng = BatchedAnalytics()
+    got = query(["f"], ["mean", "gradient"], store=store, engine=eng)
+    ref = query([c], ["mean", "gradient"],
+                stage={op: s for op, s in
+                       zip(("mean", "gradient"),
+                           (got.stages[0]["mean"], got.stages[0]["gradient"]))}
+                if got.stages[0]["mean"] != got.stages[0]["gradient"]
+                else got.stages[0]["mean"], engine=eng)
+    _assert_same(got.values[0]["mean"], ref.values[0]["mean"])
+    _assert_same(got.values[0]["gradient"], ref.values[0]["gradient"])
+
+
+# -- CostModel.load: older / hand-stripped payloads (ISSUE 5 satellite) -------
+
+def test_cost_model_load_tolerates_stripped_payload(tmp_path):
+    import json
+    cm = CostModel()
+    cm.record(Scheme.HSZP_ND, "mean", Stage.P, 100.0)
+    cm.record(Scheme.HSZX, "std", Stage.Q, 42.0)
+    cm.record_reconstruction(Scheme.HSZP_ND, Stage.Q, 80.0)
+    path = tmp_path / "cost.json"
+    cm.save(path)
+    data = json.loads(path.read_text())
+    del data["recon"]                       # older version: no recon table
+    for cell in data["cells"]:
+        cell.pop("count", None)             # no observation counts
+    data["cells"].append({"scheme": "hszp_nd", "op": "std"})  # stripped cell
+    path.write_text(json.dumps(data))
+    with pytest.warns(UserWarning, match="skipped 1 malformed"):
+        loaded = CostModel.load(path)
+    # intact cells round-trip; the stripped cell and recon fall back to the
+    # uncalibrated path instead of KeyError
+    assert loaded.table[(Scheme.HSZP_ND, "mean", Stage.P)] == 100.0
+    assert loaded.table[(Scheme.HSZX, "std", Stage.Q)] == 42.0
+    assert loaded.recon == {}
+    assert loaded.cost(Scheme.HSZP_ND, "std", Stage.Q) is None
+    assert loaded.reconstruction(Scheme.HSZP_ND, Stage.Q) is None
+    # counts default to 1, so post-load recording still averages sanely
+    loaded.record(Scheme.HSZP_ND, "mean", Stage.P, 300.0)
+    assert loaded.table[(Scheme.HSZP_ND, "mean", Stage.P)] == 200.0
+    # and planning with the degraded model works (uncalibrated fallback)
+    assert analytics.plan_stages(Scheme.HSZP_ND, ["mean", "std"],
+                                 cost_model=loaded).fused == Stage.P
+
+
+# -- serve-by-id per-request isolation (ISSUE 5 satellite) --------------------
+
+def test_serve_per_request_isolation_and_cache_hygiene(field_2d, vector_field_2d):
+    """Malformed requests — duplicate component ids, empty op list, region
+    out of bounds — reject individually with a structured error; healthy
+    requests in the same batch are served, and nothing poisons the engine's
+    jit cache (subsequent identical queries still answer)."""
+    u, v = vector_field_2d
+    store = FieldStore()
+    store.put("u", _c(hszp_nd, u))
+    store.put("v", _c(hszp_nd, v))
+    store.put("f", _c(hszp_nd, field_2d))
+    fe = AnalyticsFrontend(store=store)
+    fe.add_request(AnalyticsRequest(uid=0, fields=("u", "u"), op="curl"))
+    fe.add_request(AnalyticsRequest(uid=1, fields="f", op=[]))
+    fe.add_request(AnalyticsRequest(uid=2, fields="f", op="mean",
+                                    region=((0, 5000), (0, 10))))
+    fe.add_request(AnalyticsRequest(uid=3, fields=("u", "v"), op="curl"))
+    fe.add_request(AnalyticsRequest(uid=4, fields="f", op=["mean", "std"]))
+    done = {r.uid: r for r in fe.run_until_drained()}
+    assert "duplicate field ids" in done[0].error
+    assert "empty op set" in done[1].error
+    assert "out of bounds" in done[2].error
+    assert done[3].error is None and done[4].error is None
+    n = fe.engine.cache_size
+    # the rejected shapes left no poisoned programs: replaying the healthy
+    # requests compiles nothing new and answers identically
+    fe.add_request(AnalyticsRequest(uid=5, fields=("u", "v"), op="curl"))
+    fe.add_request(AnalyticsRequest(uid=6, fields="f", op=["mean", "std"]))
+    done2 = {r.uid: r for r in fe.run_until_drained()}
+    assert fe.engine.cache_size == n
+    assert done2[5].error is None and done2[6].error is None
+    _assert_same(done2[5].result, done[3].result)
+    for op in ("mean", "std"):
+        _assert_same(done2[6].result[op], done[4].result[op])
+
+
+def test_query_rejects_duplicate_vector_ids_but_allows_raw_duplicates(field_2d):
+    store = FieldStore()
+    store.put("u", _c(hszp_nd, field_2d))
+    with pytest.raises(ValueError, match="duplicate field ids"):
+        query([("u", "u")], "curl", stage=Stage.Q, store=store)
+    # raw containers carry no identity: physical duplication stays legal
+    c = _c(hszp_nd, field_2d)
+    res = query([(c, c)], "curl", stage=Stage.Q)
+    assert np.isfinite(np.asarray(res.values[0])).all()

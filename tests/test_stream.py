@@ -1,0 +1,432 @@
+"""Streaming time-slab ingestion + incremental temporal analytics (ISSUE 5).
+
+The contract under test:
+
+* for every scheme, temporal ops (``tdelta``, running ``tmean``/``tmin``/
+  ``tmax``/``tstd``) over appended slabs are **bit-identical** to the same
+  reduction over the full decompression of the concatenated field — ± a
+  spatial region, at every feasible stage (② and ③ for nd schemes, ③ for
+  1-D ones), served incrementally through a :class:`StreamFieldStore`;
+* appends refresh resident summaries in place and never invalidate
+  unrelated materializations;
+* querying a stream in steady state compiles nothing new — appends never
+  retrace (slab-count-stable jit cache keys);
+* feasibility and malformed-input errors mirror the spatial ops' semantics.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import analytics
+from repro.analytics import BatchedAnalytics, CostModel, query
+from repro.core import (Scheme, Stage, UnsupportedStageError, hszp, hszp_nd,
+                        hszx, hszx_nd, oplib)
+from repro.serve import AnalyticsFrontend, AnalyticsRequest, AppendRequest
+from repro.store import FieldStore
+from repro.stream import (StreamFieldStore, TemporalField, merge_summaries,
+                          query_temporal, summarize_slab, summary_from_q)
+
+ALL = [hszp, hszx, hszp_nd, hszx_nd]
+TOPS = ("tdelta", "tmean", "tmin", "tmax", "tstd")
+SPATIAL = (48, 40)
+REGION = ((10, 40), (5, 29))     # unaligned spatial window
+
+
+def _slab(i, k=3, spatial=SPATIAL, seed=0):
+    rng = np.random.default_rng(seed + 100 * i)
+    t = np.arange(i * k, (i + 1) * k, dtype=np.float32)[:, None, None]
+    x = (np.linspace(0, 2 * np.pi, spatial[0])[None, :, None]
+         + np.linspace(0, np.pi, spatial[1])[None, None, :])
+    return (np.sin(x + 0.1 * t) * 2 + 0.05 * t
+            + rng.normal(0, 0.02, (k,) + spatial)).astype(np.float32)
+
+
+def _stream(comp, n_slabs=4, k=3, **kw):
+    tf = TemporalField(comp, rel_eb=1e-3, **kw)
+    raw = [_slab(i, k=k) for i in range(n_slabs)]
+    for d in raw:
+        tf.append(d)
+    return tf, np.concatenate(raw, axis=0)
+
+
+def _feasible(scheme):
+    return analytics.feasible_stages(scheme, "tmean")
+
+
+def _same(got, ref):
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# -- bit-identity: incremental merges == full decompression -------------------
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_store_served_bit_identical_to_full_decompression(comp):
+    """Incrementally appended + merged summaries answer every temporal op
+    bit-identically to one reduction over the concatenated decompression,
+    at every feasible stage, full-field and windowed."""
+    eng = BatchedAnalytics()
+    store = StreamFieldStore(engine=eng)
+    tf = TemporalField(comp, rel_eb=1e-3)
+    store.put_temporal("sim/T", tf)
+    for i in range(4):
+        store.append("sim/T", _slab(i))
+    for stage in _feasible(comp.scheme):
+        for region in (None, REGION):
+            ref = tf.reference(TOPS, region=region)
+            got = query(["sim/T"], list(TOPS), stage=stage, store=store,
+                        engine=eng, region=region)
+            for op in TOPS:
+                _same(got.values[0][op], ref[op])
+                assert got.stages[0][op] == stage
+
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+def test_storeless_and_single_op_match_fused(comp):
+    tf, _ = _stream(comp)
+    eng = BatchedAnalytics()
+    fused = query([tf], list(TOPS), engine=eng)
+    for op in TOPS:
+        single = query([tf], op, engine=eng)
+        _same(single.values[0], fused.values[0][op])
+        assert single.stages[0] == fused.stages[0][op]
+
+
+def test_summaries_identical_across_stages_and_slabs():
+    """The per-slab summary is the same integers at every feasible stage,
+    and merging slab summaries equals summarizing the concatenation."""
+    comp = hszx_nd
+    tf, _ = _stream(comp, n_slabs=3)
+    per_stage = []
+    for stage in _feasible(comp.scheme):
+        parts = [summarize_slab(s, stage) for s in tf.slabs]
+        merged = parts[0]
+        for p in parts[1:]:
+            merged = merge_summaries(merged, p)
+        per_stage.append(merged)
+    full = summary_from_q(tf.decompress_q())
+    for m in per_stage:
+        for leaf in ("count", "q_sum", "q_sumsq", "q_min", "q_max", "last2"):
+            _same(getattr(m, leaf), getattr(full, leaf))
+
+
+def test_temporal_accuracy_vs_raw_data():
+    """Sanity against the uncompressed stream: every op lands within the
+    error bound's reach of the raw-statistic (not just self-consistent)."""
+    tf, raw = _stream(hszp_nd, n_slabs=5)
+    eps = float(tf.eps)
+    res = query([tf], list(TOPS))
+    v = res.values[0]
+    assert np.abs(np.asarray(v["tmean"]) - raw.mean(0)).max() <= 2 * eps
+    assert np.abs(np.asarray(v["tmin"]) - raw.min(0)).max() <= 2 * eps
+    assert np.abs(np.asarray(v["tmax"]) - raw.max(0)).max() <= 2 * eps
+    assert np.abs(np.asarray(v["tdelta"]) - (raw[-1] - raw[-2])).max() <= 3 * eps
+    assert np.abs(np.asarray(v["tstd"]) - raw.std(0, ddof=1)).max() <= 5e-3
+
+
+# -- appends: in-place refresh, no collateral invalidation --------------------
+
+def test_appends_never_invalidate_unrelated_materializations(field_2d):
+    eng = BatchedAnalytics()
+    store = StreamFieldStore(engine=eng)
+    c = hszx_nd.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+    store.put("static/field", c)
+    store.ensure("static/field", Stage.Q)
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    store.put_temporal("sim/T", tf)
+    store.append("sim/T", _slab(0))
+    query(["sim/T"], "tmean", store=store, engine=eng)   # summary resident
+    entries0 = store.cache_entries
+    ev0 = store.stats.evictions
+    for i in range(1, 4):
+        store.append("sim/T", _slab(i))
+    # same resident set (summary replaced in place), zero evictions, and the
+    # unrelated spatial materialization still serves hits
+    assert store.cache_entries == entries0
+    assert store.stats.evictions == ev0
+    assert store.lookup("static/field", Stage.Q) is not None
+    assert store.incremental_merges == 3
+    # ... and the refreshed summary is still exact
+    _same(query(["sim/T"], "tmean", store=store, engine=eng).values[0],
+          tf.reference(["tmean"])["tmean"])
+
+
+def test_append_byte_accounting_stays_exact():
+    store = StreamFieldStore()
+    tf = TemporalField(hszp_nd, rel_eb=1e-3)
+    store.put_temporal("s", tf)
+    store.append("s", _slab(0))
+    for region in (None, REGION):
+        store.temporal_summary("s", region=region)
+    for i in range(1, 4):
+        store.append("s", _slab(i))
+        assert store.cache_bytes_in_use == sum(
+            m.nbytes for m in store._cache.values())
+
+
+def test_append_survives_cross_cell_eviction_under_budget_pressure():
+    """Refreshing one resident summary can evict a sibling cell of the same
+    stream under a tight budget; the append must skip the evicted cell (the
+    next query rebuilds it) instead of crashing, and every survivor must
+    stay exact."""
+    eng = BatchedAnalytics()
+    store = StreamFieldStore(engine=eng)
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    store.put_temporal("s", tf)
+    store.append("s", _slab(0))
+    store.temporal_summary("s")                   # full-field cell
+    store.temporal_summary("s", region=REGION)    # region cell
+    assert store.cache_entries == 2
+    # budget holds ~one cell: every further append evicts one sibling
+    store.cache_bytes = store.cache_bytes_in_use - 1
+    for i in range(1, 4):
+        store.append("s", _slab(i))               # must not raise
+        assert store.cache_bytes_in_use <= store.cache_bytes
+        assert store.cache_bytes_in_use == sum(
+            m.nbytes for m in store._cache.values())
+    for region in (None, REGION):
+        got = query(["s"], "tmean", store=store, engine=eng, region=region)
+        _same(got.values[0], tf.reference(["tmean"], region=region)["tmean"])
+
+
+def test_tstd_single_timestep_is_zero_not_nan():
+    """Frame-at-a-time streaming: a one-timestep stream has zero spread,
+    not NaN (ddof=1 denominator is clamped until a second frame arrives)."""
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    tf.append(_slab(0, k=1))
+    v = query([tf], ["tstd", "tmean", "tdelta"]).values[0]
+    assert np.all(np.asarray(v["tstd"]) == 0.0)
+    assert np.all(np.asarray(v["tdelta"]) == 0.0)   # duplicated last2 frame
+    assert np.isfinite(np.asarray(v["tmean"])).all()
+    tf.append(_slab(1, k=1))
+    raw = np.concatenate([_slab(0, k=1), _slab(1, k=1)], axis=0)
+    got = np.asarray(query([tf], "tstd").values[0])
+    assert np.isfinite(got).all()
+    # two-sample std = |a - b| / sqrt(2): each value within eps of raw
+    assert np.abs(got - raw.std(0, ddof=1)).max() <= 2 * float(tf.eps)
+
+
+def test_per_op_calibrated_plan_collapses_to_one_shared_stage():
+    """A calibrated model pricing temporal ops cheapest at different stages
+    triggers plan_stages' per-op fallback; the temporal path must collapse
+    it to one shared feasible stage (one summary serves every op) instead
+    of crashing on a fused=None plan."""
+    scheme = hszp.scheme                  # 1-D: feasible stages Q, F
+    cm = CostModel()
+    for op, q_us, f_us in (("tmean", 10.0, 500.0), ("tstd", 500.0, 10.0)):
+        cm.record(scheme, op, Stage.Q, q_us)
+        cm.record(scheme, op, Stage.F, f_us)
+    plan = analytics.plan_stages(scheme, ["tmean", "tstd"], cost_model=cm)
+    assert plan.fused is None             # the fallback actually fires
+    tf, _ = _stream(hszp, n_slabs=2)
+    res = query([tf], ["tmean", "tstd"], cost_model=cm)
+    ref = tf.reference(["tmean", "tstd"])
+    for op in ("tmean", "tstd"):
+        _same(res.values[0][op], ref[op])
+    assert res.stages[0]["tmean"] == res.stages[0]["tstd"]
+
+
+def test_summary_eviction_degrades_to_recompute_not_wrong_answers():
+    """A summary the budget rejects is rebuilt from all slabs on the next
+    query — bit-identical to the incrementally maintained one."""
+    eng = BatchedAnalytics()
+    store = StreamFieldStore(cache_bytes=16, engine=eng)  # nothing fits
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    store.put_temporal("s", tf)
+    for i in range(3):
+        store.append("s", _slab(i))
+    res = query(["s"], ["tmean", "tstd"], store=store, engine=eng)
+    assert store.cache_entries == 0 and store.stats.rejected >= 1
+    ref = tf.reference(["tmean", "tstd"])
+    for op in ("tmean", "tstd"):
+        _same(res.values[0][op], ref[op])
+
+
+# -- retrace-freedom ----------------------------------------------------------
+
+def test_steady_state_appends_and_queries_compile_nothing_new():
+    """After one warm append+query cycle, K further appends + queries reuse
+    exactly the compiled programs: the summarizer is keyed on slab layout
+    (never the stream length), the postlude on the summary signature."""
+    eng = BatchedAnalytics()
+    store = StreamFieldStore(engine=eng)
+    # a pinned payload width keeps every slab on one static layout — the
+    # precondition for the guarantee (auto width would split the layout,
+    # and only the split slab, once, if the stream's range outgrew it)
+    tf = TemporalField(hszp_nd, rel_eb=1e-3, bits=12)
+    store.put_temporal("s", tf)
+    store.append("s", _slab(0))
+    query(["s"], list(TOPS), store=store, engine=eng)   # cold: compile
+    store.append("s", _slab(1))                         # warm the append path
+    query(["s"], list(TOPS), store=store, engine=eng)
+    n0 = eng.cache_size
+    for i in range(2, 7):
+        store.append("s", _slab(i))
+        res = query(["s"], list(TOPS), store=store, engine=eng)
+        assert res.store_hits >= 1 and res.store_misses == 0
+        assert eng.cache_size == n0   # no per-append retrace, ever
+    _same(query(["s"], "tmean", store=store, engine=eng).values[0],
+          tf.reference(["tmean"])["tmean"])
+
+
+def test_query_uses_one_postlude_program_per_op_set():
+    eng = BatchedAnalytics()
+    tf, _ = _stream(hszx_nd, n_slabs=2)
+    query([tf], ["tmean", "tstd"], engine=eng)
+    n0 = eng.cache_size
+    # order-insensitive op-set key, same program on repeat queries
+    query([tf], ["tstd", "tmean"], engine=eng)
+    assert eng.cache_size == n0
+
+
+# -- planner / feasibility ----------------------------------------------------
+
+@pytest.mark.parametrize("comp", ALL, ids=lambda c: c.scheme.value)
+@pytest.mark.parametrize("op", TOPS)
+@pytest.mark.parametrize("stage", list(Stage))
+def test_temporal_feasibility_matrix_matches_ops(comp, op, stage):
+    """Every temporal Table-I cell: the planner says feasible <=> the
+    summarizer does not raise (drift guard, like the spatial matrix)."""
+    e = comp.encode(comp.compress(jnp.asarray(_slab(0)), rel_eb=1e-3))
+    feasible = analytics.is_feasible(comp.scheme, op, stage)
+    if feasible:
+        s = summarize_slab(e, stage)
+        assert all(np.isfinite(np.asarray(x)).all() or x.dtype == np.int32
+                   for x in jax.tree.leaves(s))
+    else:
+        with pytest.raises(UnsupportedStageError):
+            summarize_slab(e, stage)
+
+
+def test_explicit_infeasible_stage_rejected_before_any_work():
+    tf, _ = _stream(hszp)            # 1-D scheme: no stage ②
+    with pytest.raises(UnsupportedStageError):
+        query([tf], "tmean", stage=Stage.P)
+    with pytest.raises(UnsupportedStageError):
+        query([tf], "tmean", stage=Stage.M)
+
+
+def test_mixed_arity_op_sets_rejected():
+    with pytest.raises(ValueError, match="different arities"):
+        oplib.canonical_ops(["mean", "tmean"])
+    with pytest.raises(ValueError, match="different arities"):
+        oplib.canonical_ops(["tdelta", "curl"])
+
+
+def test_plan_refresh_costing():
+    cm = CostModel()
+    cm.record_reconstruction(Scheme.HSZP_ND, Stage.Q, 80.0)
+    plan = analytics.plan_refresh(Scheme.HSZP_ND, Stage.Q, 5, cm)
+    assert plan.mode == "incremental"
+    assert plan.incremental_us == 80.0 and plan.recompute_us == 400.0
+    # no resident summary -> nothing to merge into
+    cold = analytics.plan_refresh(Scheme.HSZP_ND, Stage.Q, 5, cm,
+                                  summary_resident=False)
+    assert cold.mode == "recompute"
+    # uncalibrated: decision from residency alone
+    assert analytics.plan_refresh(Scheme.HSZX, Stage.Q, 3).mode == "incremental"
+    with pytest.raises(ValueError):
+        analytics.plan_refresh(Scheme.HSZX, Stage.Q, 0)
+
+
+# -- malformed inputs / guards ------------------------------------------------
+
+def test_eps_pinned_across_slabs():
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    tf.append(_slab(0))
+    eps0 = float(tf.eps)
+    tf.append(10.0 * _slab(1))       # very different range: eps must not move
+    assert float(tf.eps) == eps0
+    assert float(tf.slabs[1].eps) == eps0
+
+
+def test_shape_and_rank_validation():
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    tf.append(_slab(0))
+    with pytest.raises(ValueError, match="spatial shape"):
+        tf.append(np.zeros((3, 8, 8), np.float32))
+    with pytest.raises(ValueError, match="time slab"):
+        TemporalField(hszx_nd, rel_eb=1e-3).append(np.zeros((5,), np.float32))
+
+
+def test_temporal_ops_reject_spatial_fields_and_vice_versa(field_2d):
+    c = hszx_nd.compress(jnp.asarray(field_2d), rel_eb=1e-3)
+    with pytest.raises(TypeError, match="TemporalField"):
+        query([c], "tmean")
+    tf, _ = _stream(hszx_nd, n_slabs=1)
+    with pytest.raises(TypeError, match="temporal ops"):
+        query([tf], "mean")
+    with pytest.raises(ValueError, match="temporal op set"):
+        oplib.compute(c, "tmean", Stage.Q)
+
+
+def test_empty_stream_and_missing_store_rejected():
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    with pytest.raises(ValueError, match="no appended slabs"):
+        query_temporal([tf], "tmean")
+    with pytest.raises(ValueError, match="no store"):
+        query_temporal(["some/id"], "tmean")
+    with pytest.raises(TypeError, match="put_temporal"):
+        StreamFieldStore().put("x", tf)
+
+
+# -- serving end-to-end -------------------------------------------------------
+
+def test_serve_append_then_query_end_to_end():
+    eng_store = StreamFieldStore()
+    tf = TemporalField(hszp_nd, rel_eb=1e-3)
+    eng_store.put_temporal("sim/T", tf)
+    fe = AnalyticsFrontend(store=eng_store)
+    for i in range(3):
+        fe.add_request(AppendRequest(uid=i, field_id="sim/T", data=_slab(i)))
+    fe.add_request(AnalyticsRequest(uid=10, fields="sim/T",
+                                    op=["tmean", "tdelta"]))
+    fe.add_request(AnalyticsRequest(uid=11, fields="sim/T", op="tstd",
+                                    region=REGION))
+    done = {r.uid: r for r in fe.run_until_drained()}
+    assert [done[i].slab_index for i in range(3)] == [0, 1, 2]
+    assert all(done[i].error is None for i in done)
+    # the same-step query saw every appended slab (ingest precedes analytics)
+    ref = tf.reference(["tmean", "tdelta"])
+    _same(done[10].result["tmean"], ref["tmean"])
+    _same(done[10].result["tdelta"], ref["tdelta"])
+    _same(done[11].result, tf.reference(["tstd"], region=REGION)["tstd"])
+
+
+def test_serve_append_rejections_are_per_request():
+    store = StreamFieldStore()
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    store.put_temporal("s", tf)
+    store.put("plain", hszx_nd.compress(jnp.asarray(_slab(0)[0]), rel_eb=1e-3))
+    fe = AnalyticsFrontend(store=store)
+    fe.add_request(AppendRequest(uid=0, field_id="ghost", data=_slab(0)))
+    fe.add_request(AppendRequest(uid=1, field_id="plain", data=_slab(0)))
+    fe.add_request(AppendRequest(uid=2, field_id="s", data=_slab(0)))
+    done = {r.uid: r for r in fe.run_until_drained()}
+    assert "unknown field id" in done[0].error
+    assert "not a temporal field" in done[1].error
+    assert done[2].error is None and done[2].slab_index == 0
+    # a frontend without a streaming store rejects appends cleanly
+    fe2 = AnalyticsFrontend(store=FieldStore())
+    fe2.add_request(AppendRequest(uid=0, field_id="s", data=_slab(0)))
+    (r,) = fe2.run_until_drained()
+    assert r.error is not None and "streaming store" in r.error
+
+
+def test_temporal_field_registry_semantics():
+    store = StreamFieldStore()
+    tf = TemporalField(hszx_nd, rel_eb=1e-3)
+    store.put_temporal("s", tf)
+    assert store.is_temporal("s") and "s" in store
+    with pytest.raises(ValueError, match="already registered"):
+        store.put_temporal("s", tf)
+    tf.append(_slab(0))
+    store.temporal_summary("s")
+    assert store.cache_entries == 1
+    tf2 = TemporalField(hszx_nd, rel_eb=1e-3)
+    store.put_temporal("s", tf2, replace=True)
+    assert store.cache_entries == 0          # stale summary invalidated
+    store.remove("s")
+    assert "s" not in store
+    with pytest.raises(TypeError, match="TemporalField"):
+        StreamFieldStore().put_temporal("x", np.zeros(3))
