@@ -17,6 +17,7 @@ Framework-level (beyond paper):
   checkpoint bytes + homomorphic validation  -> fw_checkpoint
   compressed-collective wire bytes           -> fw_collective_bytes
   fused op sets vs sequential single ops     -> fw_fused_analytics
+  expression DAGs vs per-leaf recompute      -> fw_expr_analytics
   store-backed hot-cache vs cold queries     -> fw_store_analytics
   streaming append+query vs re-encode        -> fw_stream_analytics
 
@@ -26,7 +27,8 @@ so CI gates and local iteration stop paying for the whole suite.
 
 ``--json PATH`` additionally writes the fused-analytics rows as machine-
 readable JSON (name / us / speedup) for CI regression gating;
-``--json-store PATH`` does the same for the store-backed rows.
+``--json-store PATH`` does the same for the store-backed rows and
+``--json-expr PATH`` for the expression-DAG rows.
 """
 from __future__ import annotations
 
@@ -45,6 +47,7 @@ from repro.data.scientific import dataset_dims, synth_field
 
 ROWS: List[Tuple[str, float, str]] = []
 FUSED_JSON: List[dict] = []
+EXPR_JSON: List[dict] = []
 STORE_JSON: List[dict] = []
 STREAM_JSON: List[dict] = []
 SCALE = 8
@@ -319,6 +322,65 @@ def fw_fused_analytics():
                                "speedup": round(speedup, 3)})
 
 
+def fw_expr_analytics():
+    """Expression DAGs vs naive per-leaf recompute of the same derived ops.
+
+    Three classic derived quantities over one encoded (u, v) velocity pair —
+    vorticity ``ddx(v) - ddy(u)``, divergence ``ddx(u) + ddy(v)`` and the
+    stretching deformation ``ddx(u) - ddy(v)`` — as ONE expression program
+    (DESIGN.md §10): four distinct derivative nodes over two leaves, each
+    leaf reconstructed exactly once, one compiled dispatch for all three
+    roots.  The naive baseline spells the same math the only way the flat
+    API allows: one single-derivative query per node (four dispatches, four
+    stage reconstructions — u and v each unpacked and recorrelated twice)
+    plus host-side combines.  Both sides run through warmed engine caches,
+    so the speedup isolates what the DAG compiler saves: the duplicated
+    leaf preludes and the per-node dispatch overhead.  Rows cover both
+    shared stages (② and ③) per scheme; like the other fw serving benches
+    the tile is pinned (per-op throughput vs size is covered by fig3-12).
+    """
+    from repro.analytics import query
+    from repro.analytics.engine import BatchedAnalytics
+    from repro.core import expr
+
+    tile = (96, 96)
+    for name in ("hszp_nd", "hszx_nd"):
+        comp = by_name(name)
+        u = comp.encode(comp.compress(
+            jnp.asarray(synth_field("Ocean", 0, tile, seed=0)), rel_eb=1e-2))
+        v = comp.encode(comp.compress(
+            jnp.asarray(synth_field("Ocean", 1, tile, seed=1)), rel_eb=1e-2))
+        ddx_u, ddy_u = expr.derivative(u, axis=0), expr.derivative(u, axis=1)
+        ddx_v, ddy_v = expr.derivative(v, axis=0), expr.derivative(v, axis=1)
+        roots = [ddx_v - ddy_u,   # vorticity
+                 ddx_u + ddy_v,   # divergence
+                 ddx_u - ddy_v]   # stretching deformation
+        singles = [ddx_v, ddy_u, ddx_u, ddy_v]
+        for stage, tag in ((Stage.P, "p"), (Stage.Q, "q")):
+            eng = BatchedAnalytics()
+            us_expr = best_of(lambda s=stage: query(
+                exprs=roots, stage=s, engine=eng).values)
+
+            eng2 = BatchedAnalytics()
+
+            def naive(s=stage):
+                dvx, duy, dux, dvy = [
+                    query(exprs=[e], stage=s, engine=eng2).values[0]
+                    for e in singles]
+                return [dvx - duy, dux + dvy, dux - dvy]
+
+            us_naive = best_of(naive)
+            speedup = us_naive / us_expr
+            row_name = f"fw_expr_analytics/{name}/vort+div+stretch-{tag}"
+            row(row_name, us_expr,
+                f"naive_us={us_naive:.1f} speedup={speedup:.2f}x "
+                f"roots=3 leaves=2 nodes=4")
+            EXPR_JSON.append({"name": row_name, "scheme": name,
+                              "stage": stage.name, "us": round(us_expr, 1),
+                              "naive_us": round(us_naive, 1),
+                              "speedup": round(speedup, 3)})
+
+
 def fw_region_analytics():
     """Region queries vs full-field queries at the same (scheme, op, stage).
 
@@ -506,7 +568,8 @@ def fw_collective_bytes():
 BENCHES = [fig2_compression_ratio, fig34_decompression, fig58_statistics,
            fig910_differentiation, fig1112_multivariate, table4_breakdown,
            table5_op_errors, fw_batched_analytics, fw_fused_analytics,
-           fw_region_analytics, fw_store_analytics, fw_stream_analytics,
+           fw_expr_analytics, fw_region_analytics, fw_store_analytics,
+           fw_stream_analytics,
            fw_checkpoint, fw_collective_bytes]
 
 
@@ -540,6 +603,10 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write fw_fused_analytics rows (name, us, speedup) "
                          "as JSON, e.g. BENCH_fused.json for the CI gate")
+    ap.add_argument("--json-expr", default=None, metavar="PATH",
+                    help="write fw_expr_analytics rows (name, us, naive_us, "
+                         "speedup) as JSON, e.g. BENCH_expr.json for the "
+                         "expression-vs-recompute CI gate")
     ap.add_argument("--json-store", default=None, metavar="PATH",
                     help="write fw_store_analytics rows (name, us, cold_us, "
                          "speedup) as JSON, e.g. BENCH_store.json for the "
@@ -562,6 +629,9 @@ def main() -> None:
     if args.json is not None:
         with open(args.json, "w") as f:
             json.dump(FUSED_JSON, f, indent=2)
+    if args.json_expr is not None:
+        with open(args.json_expr, "w") as f:
+            json.dump(EXPR_JSON, f, indent=2)
     if args.json_store is not None:
         with open(args.json_store, "w") as f:
             json.dump(STORE_JSON, f, indent=2)

@@ -13,24 +13,28 @@ live.  This package turns that into an engine:
   a leading batch axis (``repro.core.batch_stack``) and runs the homomorphic
   op set once, ``vmap``-ed and ``jit``-ed, with a compilation cache keyed on
   ``(scheme, block, shape, frozen op-set, stage, region)``;
-* :mod:`repro.analytics.query` — ``query(fields, op_or_ops, stage="auto")``:
-  groups arbitrary field collections by layout, plans each group once,
-  executes batched — one compiled call per layout group for a fused op set —
-  and returns results in input order.  With ``store=`` (a
-  :class:`repro.store.FieldStore`) fields may be string ids, planning is
-  cache-aware (resident stages drop their reconstruction term), and the
-  compiled programs are seeded from resident materialized stages.
+* :mod:`repro.analytics.query` — ``query(exprs=[...], store=...)``: the
+  expression front-end.  Roots are ``repro.core.expr`` DAGs (cross-field
+  derived operators — vorticity from u and v, ensemble deltas); the whole
+  batch compiles to one program with exactly one stage-reconstruction
+  prelude per distinct leaf, planned jointly per connected component
+  (``plan_expr``).  With ``store=`` (a :class:`repro.store.FieldStore`)
+  leaves may be string ids, planning is cache-aware (resident stages drop
+  their reconstruction term), and the compiled program is seeded from
+  resident materialized stages.  The flat op-set spelling
+  ``query(fields, op_or_ops)`` remains as a deprecated bit-identical shim.
 """
-from .planner import (CostModel, FEASIBILITY, MULTIVARIATE, OPS, RefreshPlan,
-                      StageSetPlan, TEMPORAL, as_stage, check_feasible,
-                      feasible_stages, is_feasible, plan_refresh, plan_stage,
-                      plan_stages)
+from .planner import (CostModel, ExprPlan, FEASIBILITY, MULTIVARIATE, OPS,
+                      RefreshPlan, StageSetPlan, TEMPORAL, as_stage,
+                      check_feasible, feasible_stages, is_feasible,
+                      plan_expr, plan_refresh, plan_stage, plan_stages)
 from .engine import BatchedAnalytics, batch_key
 from .query import QueryResult, query
 
 __all__ = [
     "OPS", "TEMPORAL", "MULTIVARIATE", "FEASIBILITY", "as_stage",
     "feasible_stages", "is_feasible", "check_feasible", "plan_stage",
-    "plan_stages", "StageSetPlan", "plan_refresh", "RefreshPlan",
-    "CostModel", "BatchedAnalytics", "batch_key", "QueryResult", "query",
+    "plan_stages", "StageSetPlan", "plan_expr", "ExprPlan", "plan_refresh",
+    "RefreshPlan", "CostModel", "BatchedAnalytics", "batch_key",
+    "QueryResult", "query",
 ]

@@ -216,6 +216,80 @@ class BatchedAnalytics:
             self._jitted.move_to_end(key)
         return fn(summary, eps)
 
+    # -- expression DAGs ----------------------------------------------------
+    def run_expr(self, program, bindings: Sequence, stages: Sequence[Stage],
+                 *, region=None, seeds: Sequence | None = None,
+                 precomputed: Mapping[str, object] | None = None):
+        """Execute one analyzed expression DAG as a single compiled program.
+
+        ``bindings`` holds one entry per leaf slot — a field, a component
+        tuple (vector bundles), or ``None`` for temporal slots whose op
+        values arrive through ``precomputed`` (keyed by canonical node
+        serial; computed outside the trace so streams never enter the jit).
+        ``stages`` is the joint per-component plan
+        (:class:`~repro.analytics.planner.ExprPlan`); ``seeds`` optionally
+        store-seeds individual slots.  The cache key is the program's
+        structural hash plus every static input signature, so two
+        structurally-identical DAGs over same-layout fields share one
+        compiled program regardless of which concrete arrays they bind.
+        """
+        from repro.core import expr as expr_mod
+
+        precomputed = dict(precomputed or {})
+        seeds = list(seeds) if seeds is not None else [None] * len(bindings)
+        if len(seeds) != len(bindings):
+            raise ValueError(f"{len(seeds)} seeds for {len(bindings)} slots")
+
+        def slot_layout(b):
+            if b is None:
+                return None
+            if isinstance(b, tuple):
+                return tuple(layout_key(c) for c in b)
+            return layout_key(b)
+
+        def slot_region(b):
+            if b is None or region is None:
+                return None
+            f = b[0] if isinstance(b, tuple) else b
+            return region_mod.normalize_region(region, f.shape)
+
+        def slot_seed_sig(s):
+            if s is None:
+                return None
+            if isinstance(s, tuple):
+                return tuple(x.sig() for x in s)
+            return s.sig()
+
+        pre_keys = tuple(sorted(precomputed))
+        pre_sig = tuple((k, jnp.shape(precomputed[k]),
+                         str(jnp.result_type(precomputed[k])))
+                        for k in pre_keys)
+        key = ("__expr__", program.key,
+               tuple(slot_layout(b) for b in bindings),
+               tuple(Stage(s) for s in stages),
+               tuple(slot_region(b) for b in bindings),
+               tuple(slot_seed_sig(s) for s in seeds), pre_sig)
+        fn = self._jitted.get(key)
+        fresh = fn is None
+        if fn is None:
+            def run(binds, sds, pre_vals, _stages=tuple(stages), _r=region):
+                return expr_mod.lower(program, binds, _stages, region=_r,
+                                      seeds=sds,
+                                      precomputed=dict(zip(pre_keys,
+                                                           pre_vals)))
+
+            fn = jax.jit(run)
+            self._cache_put(key, fn)
+        else:
+            self._jitted.move_to_end(key)
+        try:
+            return fn(list(bindings), seeds,
+                      [precomputed[k] for k in pre_keys])
+        except Exception:
+            if fresh:  # infeasible stage raises at trace: don't cache it
+                self._jitted.pop(key, None)
+            raise
+
     # -- stage resolution ---------------------------------------------------
     def _resolve(self, scheme, names: Tuple[str, ...], stage: StageLike,
                  region, field, axis: int) -> StageSetPlan:

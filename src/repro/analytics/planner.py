@@ -81,8 +81,14 @@ def feasible_stages(scheme: Scheme, op: str) -> Tuple[Stage, ...]:
     try:
         return FEASIBILITY[(Scheme(scheme), op)]
     except KeyError:
-        raise ValueError(
-            f"unknown operation {op!r}; expected one of {OPS + TEMPORAL}")
+        spec = oplib._ALL_OPS.get(op)
+        if spec is None:
+            raise ValueError(
+                f"unknown operation {op!r}; expected one of "
+                f"{tuple(oplib._ALL_OPS)}") from None
+        # registered after the matrix was derived (oplib.register_op):
+        # resolve straight from the spec — same source of truth
+        return spec.feasible(Scheme(scheme))
 
 
 def is_feasible(scheme: Scheme, op: str, stage: Stage) -> bool:
@@ -484,6 +490,99 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
         # lowest shared stage is the cheapest joint reconstruction
         shared = inter[0]
     return StageSetPlan(names, tuple((op, shared) for op in names), shared)
+
+
+# ===========================================================================
+# expression DAGs: joint stage planning per connected component
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ExprPlan:
+    """Resolved joint stages for an analyzed expression DAG
+    (``repro.core.expr.ExprProgram``): one :class:`Stage` per connected
+    component, indexed by the program's ``leaf_component`` /
+    ``root_component`` maps.  The whole DAG lowers into a single compiled
+    program, so the plan itself contributes one dispatch."""
+
+    stages: Tuple[Stage, ...]
+
+
+def plan_expr(program, bindings: Sequence, stage="auto",
+              cost_model: Optional[CostModel] = None, *, region=None,
+              cached: Optional[Sequence[AbstractSet[Stage]]] = None) -> ExprPlan:
+    """Jointly plan the execution stage of each DAG component.
+
+    Every ``(op application, leaf scheme)`` pair in a component contributes
+    its feasible-stage row; the component runs at one stage from the
+    intersection (never empty — stages ③④ are universally feasible), so all
+    preludes a combinator joins are stage-compatible.  An explicit ``stage``
+    is validated against every pair (op error semantics preserved).  With
+    ``stage="auto"``: a fully calibrated cost model minimizes the total
+    (region-closure-scaled, residency-discounted) cost; otherwise stages at
+    which *every* leaf of the component is store-resident (``cached``, per
+    leaf slot) rank first, falling back to stage order.  An unaligned
+    ``region`` drops stage ① exactly as in :func:`plan_stages`.
+    """
+    cached = (list(cached) if cached is not None
+              else [frozenset()] * len(bindings))
+
+    def slot_field(slot: int):
+        b = bindings[slot]
+        return b[0] if isinstance(b, tuple) else b
+
+    out = []
+    for comp in range(program.n_components):
+        pairs = []  # (op name, scheme, leaf slot, axis)
+        for name, axis, slot in program.component_ops(comp):
+            b = bindings[slot]
+            schemes = ([c.scheme for c in b] if isinstance(b, tuple)
+                       else [b.scheme])
+            pairs.extend((name, sch, slot, axis) for sch in schemes)
+        if stage != "auto":
+            resolved = as_stage(stage)
+            for name, sch, slot, axis in pairs:
+                check_feasible(sch, name, resolved)
+                if (resolved == Stage.M and region is not None
+                        and not region_mod.region_aligned(slot_field(slot),
+                                                          region)):
+                    raise UnsupportedStageError(
+                        f"stage-1 {name} over a region needs a "
+                        "block-aligned window")
+            out.append(resolved)
+            continue
+
+        feas_sets = []
+        for name, sch, slot, axis in pairs:
+            stages = feasible_stages(sch, name)
+            if region is not None and Stage.M in stages:
+                if not region_mod.region_aligned(slot_field(slot), region):
+                    stages = tuple(s for s in stages if s != Stage.M)
+            feas_sets.append(stages)
+        inter = tuple(s for s in Stage if all(s in f for f in feas_sets))
+
+        comp_slots = sorted({slot for _, _, slot, _ in pairs})
+        resident = frozenset(
+            s for s in inter
+            if all(s in cached[sl] for sl in comp_slots))
+        calibrated = cost_model is not None and all(
+            cost_model.cost(sch, name, s) is not None
+            for name, sch, slot, axis in pairs for s in inter)
+        if calibrated:
+            def pair_cost(name, sch, slot, axis, s):
+                frac = 1.0
+                if region is not None:
+                    frac = region_mod.closure_fraction(
+                        slot_field(slot), name, s, region, axis=axis)
+                return cost_model.cost(sch, name, s,
+                                       cached=s in cached[slot]) * frac
+
+            totals = {s: sum(pair_cost(*p, s) for p in pairs) for s in inter}
+            out.append(min(inter, key=lambda s: (totals[s], int(s))))
+        elif resident:
+            out.append(min(inter, key=_resident_rank(resident)))
+        else:
+            out.append(inter[0])
+    return ExprPlan(tuple(out))
 
 
 # ===========================================================================

@@ -22,12 +22,14 @@ storeless path at the same stage.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import Compressed, Encoded, Stage, layout_key, oplib
+from repro.core import expr as expr_mod
 
 from .engine import BatchedAnalytics, default_engine
-from .planner import CostModel, plan_stages
+from .planner import CostModel, plan_expr, plan_stages
 
 Field = Union[Compressed, Encoded]
 FieldOrVector = Union[Field, Sequence[Field]]
@@ -50,6 +52,7 @@ class QueryResult:
     n_dispatches: int              # jitted compiled calls actually issued
     store_hits: int = 0            # materializations served from cache
     store_misses: int = 0          # materializations built on demand
+    exprs: Optional[Tuple] = None  # root expressions (expression queries)
 
     def __iter__(self):
         return iter(self.values)
@@ -118,12 +121,63 @@ def _resolve_item(item, store, vector):
     return item, None
 
 
-def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
+def query(fields: Optional[Sequence[FieldOrVector]] = None,
+          op: Union[str, Sequence[str], None] = None,
           stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
           region=None,
           cost_model: Optional[CostModel] = None,
           engine: Optional[BatchedAnalytics] = None,
-          store=None) -> QueryResult:
+          store=None, exprs=None, ops=None) -> QueryResult:
+    """Run analytics: expression DAGs (``exprs=``) or a flat op set.
+
+    The expression form is the primary surface: ``exprs`` is one
+    :class:`repro.core.expr.Expr` or a sequence of them — cross-field
+    derived quantities (vorticity from u and v, ensemble deltas, ...) whose
+    leaves are raw fields, component bundles, ``TemporalField`` streams, or
+    (with ``store=``) string field ids.  The whole batch compiles into one
+    program with exactly one stage-reconstruction prelude per distinct
+    leaf; stages are planned jointly per connected component
+    (:func:`repro.analytics.planner.plan_expr`), cache-aware when a store
+    is attached.  See :func:`_query_exprs` for the result layout.
+
+    The flat spellings — ``query(fields, op="mean")``, ``op=[...]``, and
+    the ``ops=[...]`` alias — are **deprecated** shims over the same
+    machinery: they stay bit-identical (and keep their grouped-batch
+    dispatch accounting) but emit a :class:`DeprecationWarning` pointing at
+    the expression form.  Migration: ``query([f1, f2], "mean")`` becomes
+    ``query(exprs=[expr.mean(f1), expr.mean(f2)])``.
+    """
+    if exprs is not None:
+        if fields is not None or op is not None or ops is not None:
+            raise TypeError(
+                "query(exprs=...) is the expression form; do not also pass "
+                "fields/op/ops — put the fields inside the expressions")
+        return _query_exprs(exprs, stage, region=region,
+                            cost_model=cost_model, engine=engine,
+                            store=store)
+    if op is not None and ops is not None:
+        raise TypeError("pass op= or ops=, not both")
+    if ops is not None:
+        op = ops
+    if fields is None or op is None:
+        raise TypeError("query() needs exprs=, or the deprecated "
+                        "(fields, op) pair")
+    warnings.warn(
+        "query(fields, op=...) / query(fields, ops=[...]) are deprecated; "
+        "build expressions instead: query(exprs=[expr.op_name(f) for f in "
+        "fields]) (see repro.core.expr)",
+        DeprecationWarning, stacklevel=2)
+    return _query_opset(fields, op, stage, axis=axis, region=region,
+                        cost_model=cost_model, engine=engine, store=store)
+
+
+def _query_opset(fields: Sequence[FieldOrVector],
+                 op: Union[str, Sequence[str]],
+                 stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
+                 region=None,
+                 cost_model: Optional[CostModel] = None,
+                 engine: Optional[BatchedAnalytics] = None,
+                 store=None) -> QueryResult:
     """Run one analytical operation — or a fused op set — over many fields.
 
     Parameters
@@ -251,3 +305,165 @@ def query(fields: Sequence[FieldOrVector], op: Union[str, Sequence[str]],
                        op=op if single else names,
                        n_batches=len(groups), n_dispatches=n_dispatches,
                        store_hits=store_hits, store_misses=store_misses)
+
+
+def _resolve_leaf(lf, store):
+    """Resolve one leaf slot's source: string ids -> store entries.
+
+    Returns ``(binding, fid)`` where ``fid`` is the slot's cache identity
+    (id or per-component id tuple) when *fully* store-backed, else None."""
+    src = lf.source
+    if isinstance(src, tuple):
+        comps, fids = [], []
+        for c in src:
+            if isinstance(c, str):
+                comps.append(_store_get(store, c))
+                fids.append(c)
+            else:
+                comps.append(c)
+                fids.append(None)
+        all_ids = all(f is not None for f in fids)
+        return tuple(comps), (tuple(fids) if all_ids else None)
+    if isinstance(src, str):
+        return _store_get(store, src), src
+    return src, None
+
+
+def _query_exprs(exprs, stage="auto", *, region=None,
+                 cost_model: Optional[CostModel] = None,
+                 engine: Optional[BatchedAnalytics] = None,
+                 store=None) -> QueryResult:
+    """Execute a batch of expression DAGs as one compiled program.
+
+    ``values[i]`` is root ``i``'s result and ``stages[i]`` its component's
+    jointly-planned stage; ``op`` is ``"expr"`` and ``exprs`` carries the
+    roots.  ``n_dispatches`` counts compiled calls actually issued — one
+    for the spatial DAG program (skipped when every root is purely
+    temporal), plus the temporal summarize/merge/postlude calls; store
+    counters mirror the flat path.  Results are bit-identical to composing
+    the corresponding single-op queries at the same stage.
+    """
+    if engine is None:
+        engine = default_engine
+    single = isinstance(exprs, expr_mod.Expr)
+    program = expr_mod.analyze([exprs] if single else list(exprs))
+
+    stats = getattr(store, "stats", None) if store is not None else None
+    hits0, misses0 = (stats.hits, stats.misses) if stats else (0, 0)
+
+    bindings: List = []
+    slot_ids: List = []
+    for slot, lf in enumerate(program.leaves):
+        b, fid = _resolve_leaf(lf, store)
+        temporal = program.leaf_is_temporal(slot)
+        for c in (b if isinstance(b, tuple) else (b,)):
+            if hasattr(c, "layout_sig") != temporal:
+                consumers = ", ".join(n for n, _ in
+                                      program.leaf_consumers(slot))
+                raise TypeError(
+                    f"leaf {lf.key} binds a {type(c).__name__} but its "
+                    f"consumers ({consumers}) are "
+                    f"{'temporal' if temporal else 'spatial'} ops")
+        if temporal and not b.slabs:
+            raise ValueError("temporal field has no appended slabs"
+                             + (f" (id {fid!r})" if fid else ""))
+        bindings.append(b)
+        slot_ids.append(fid)
+    expr_mod.validate_bound(program, bindings, region=region)
+
+    def slot_cached(slot: int) -> frozenset:
+        fid = slot_ids[slot]
+        if (fid is None or program.leaf_is_temporal(slot)
+                or not hasattr(store, "is_resident")):
+            return frozenset()
+        b = bindings[slot]
+        out = set()
+        for s in (Stage.P, Stage.Q, Stage.F):
+            try:
+                if isinstance(b, tuple):
+                    cls = expr_mod.vector_closures(
+                        program, slot, [c.scheme for c in b], s)
+                    ok = all(store.is_resident(f, s, region=region,
+                                               closure=cl)
+                             for f, cl in zip(fid, cls))
+                else:
+                    cl = expr_mod.leaf_closure(program, slot, b.scheme, s)
+                    ok = store.is_resident(fid, s, region=region, closure=cl)
+            except Exception:  # closure undefined at an infeasible stage
+                continue
+            if ok:
+                out.add(s)
+        return frozenset(out)
+
+    cached = [slot_cached(s) for s in range(len(program.leaves))]
+    plan = plan_expr(program, bindings, stage,
+                     cost_model or engine.cost_model,
+                     region=region, cached=cached)
+
+    # temporal op nodes: summaries reduce outside the spatial trace (one
+    # shared summary per stream slot), values join the DAG via `precomputed`
+    n_dispatches = 0
+    precomputed: Dict[str, object] = {}
+    summaries: Dict[int, object] = {}
+    for node in program.temporal_nodes:
+        slot = program.slot_of(node.operand)
+        tf = bindings[slot]
+        s = plan.stages[program.leaf_component[slot]]
+        if slot not in summaries:
+            fid = slot_ids[slot]
+            if fid is not None:
+                if not hasattr(store, "temporal_summary"):
+                    raise TypeError(
+                        "temporal ids need a StreamFieldStore "
+                        "(repro.stream.StreamFieldStore)")
+                summaries[slot] = store.temporal_summary(fid, region=region,
+                                                         stage=s)
+            else:
+                from repro.stream.query import _cold_summary
+                summaries[slot], n_cold = _cold_summary(tf, s, region,
+                                                        engine)
+                n_dispatches += n_cold
+        out = engine.run_temporal((node.name,), summaries[slot], tf.eps)
+        n_dispatches += 1
+        precomputed[program.serial(node)] = out[node.name]
+
+    seeds: List = [None] * len(bindings)
+    if store is not None and hasattr(store, "seed"):
+        for slot in range(len(program.leaves)):
+            fid = slot_ids[slot]
+            if fid is None or program.leaf_is_temporal(slot):
+                continue
+            s = plan.stages[program.leaf_component[slot]]
+            if s == Stage.M:
+                continue  # metadata is always resident in the container
+            b = bindings[slot]
+            if isinstance(b, tuple):
+                cls = expr_mod.vector_closures(
+                    program, slot, [c.scheme for c in b], s)
+                ms = tuple(store.seed(f, s, region=region, closure=cl)
+                           for f, cl in zip(fid, cls))
+                seeds[slot] = ms if all(m is not None for m in ms) else None
+            else:
+                cl = expr_mod.leaf_closure(program, slot, b.scheme, s)
+                seeds[slot] = store.seed(fid, s, region=region, closure=cl)
+
+    if all(program.serial(r) in precomputed for r in program.roots):
+        out = tuple(precomputed[program.serial(r)] for r in program.roots)
+    else:
+        jit_bindings = [None if program.leaf_is_temporal(sl) else b
+                        for sl, b in enumerate(bindings)]
+        out = engine.run_expr(program, jit_bindings, plan.stages,
+                              region=region, seeds=seeds,
+                              precomputed=precomputed)
+        n_dispatches += 1
+
+    store_hits = store_misses = 0
+    if stats is not None:
+        store_hits = stats.hits - hits0
+        store_misses = stats.misses - misses0
+    stages = [plan.stages[program.root_component[i]]
+              for i in range(len(program.roots))]
+    return QueryResult(values=list(out), stages=stages, op="expr",
+                       n_batches=1, n_dispatches=n_dispatches,
+                       store_hits=store_hits, store_misses=store_misses,
+                       exprs=program.roots)

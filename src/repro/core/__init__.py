@@ -12,8 +12,8 @@ from .pipeline import (
     hszx,
     hszx_nd,
 )
-from . import (blocking, decorrelate, encode, error_analysis, homomorphic,
-               oplib, quantize, region)
+from . import (blocking, decorrelate, encode, error_analysis, expr,
+               homomorphic, oplib, quantize, region)
 from .region import RegionPlan, normalize_region
 
 __all__ = [
@@ -22,6 +22,6 @@ __all__ = [
     "HSZCompressor", "UnsupportedStageError", "by_name",
     "hszp", "hszp_nd", "hszx", "hszx_nd",
     "RegionPlan", "normalize_region",
-    "blocking", "decorrelate", "encode", "error_analysis", "homomorphic",
-    "oplib", "quantize", "region",
+    "blocking", "decorrelate", "encode", "error_analysis", "expr",
+    "homomorphic", "oplib", "quantize", "region",
 ]

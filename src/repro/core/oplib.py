@@ -880,10 +880,45 @@ def temporal_postlude(ops: Union[str, Sequence[str]], summary: TemporalSummary,
     return {n: TEMPORAL_OPS[n].lower_temporal(summary, eps) for n in names}
 
 
+def _merge_registries(*registries: Mapping[str, OpSpec]) -> Dict[str, OpSpec]:
+    """Combine op registries into the single lookup, rejecting name
+    collisions: a name silently shadowed across registries would make
+    ``canonical_ops`` / planning disagree about an op's arity and
+    feasibility, so the merge fails loudly instead."""
+    out: Dict[str, OpSpec] = {}
+    for reg in registries:
+        for name, spec in reg.items():
+            if name in out:
+                raise ValueError(
+                    f"op name collision: {name!r} is registered more than "
+                    "once (the spatial OPS and temporal TEMPORAL_OPS "
+                    "registries — and any user-registered spec — must use "
+                    "unique names)")
+            out[name] = spec
+    return out
+
+
 #: single lookup across both registries (spatial + temporal).
-_ALL_OPS: Dict[str, OpSpec] = {**OPS, **TEMPORAL_OPS}
+_ALL_OPS: Dict[str, OpSpec] = _merge_registries(OPS, TEMPORAL_OPS)
 
 _ORDER = {name: i for i, name in enumerate(_ALL_OPS)}
+
+
+def register_op(spec: OpSpec) -> OpSpec:
+    """Register a user-defined :class:`OpSpec` (collision-guarded).
+
+    The spec joins the arity-appropriate registry and the canonical order;
+    ``repro.analytics.planner`` resolves feasibility for unknown matrix
+    cells straight from the spec, so registered ops plan like built-ins.
+    """
+    if spec.name in _ALL_OPS:
+        raise ValueError(
+            f"op name collision: {spec.name!r} is already registered")
+    registry = TEMPORAL_OPS if spec.arity == "temporal" else OPS
+    registry[spec.name] = spec
+    _ALL_OPS[spec.name] = spec
+    _ORDER[spec.name] = len(_ORDER)
+    return spec
 
 
 # ===========================================================================
@@ -908,8 +943,9 @@ def canonical_ops(ops: Union[str, Sequence[str]]) -> Tuple[str, ...]:
             out.append(name)
     out.sort(key=_ORDER.__getitem__)
     if len({_ALL_OPS[n].arity for n in out}) > 1:
+        detail = ", ".join(f"{n} ({_ALL_OPS[n].arity})" for n in out)
         raise ValueError(
-            f"cannot fuse ops of different arities in one set: {tuple(out)} "
+            f"cannot fuse ops of different arities in one set: {detail} "
             "(field, vector, and temporal ops consume different arguments)")
     return tuple(out)
 
@@ -998,3 +1034,58 @@ def compute(target, ops: Union[str, Sequence[str]], stage: Stage, *,
         rule = spec.lower.get((stage, family)) or spec.lower[(stage, "any")]
         out[spec.name] = rule(ctx, axis)
     return out
+
+
+def compute_exprs(exprs, stage: Stage, *,
+                  region: Optional[R.RegionSpec] = None, seeds=None):
+    """Lower expression DAGs (``repro.core.expr``) at one explicit stage.
+
+    The core-level, storeless entry: every leaf must carry its data
+    directly (containers / component bundles / ``TemporalField`` streams —
+    string ids need the store-aware ``repro.analytics.query(exprs=...)``).
+    Each leaf gets exactly one :class:`StageContext` prelude shared by all
+    consuming expressions; temporal op nodes are summarized over their
+    stream's slabs (host-side reduction of the integer-exact per-slab
+    summaries) and fed into the pointwise tail.  Returns one result per
+    expression (a single expression returns its value directly), each
+    bit-identical to composing the corresponding single-op results.
+
+    ``seeds`` optionally maps leaf slots to resident
+    ``MaterializedStage`` intermediates, as in :func:`compute`.
+    """
+    from functools import reduce
+
+    from . import expr as expr_mod
+
+    single = isinstance(exprs, expr_mod.Expr)
+    program = expr_mod.analyze([exprs] if single else list(exprs))
+    stage = Stage(stage)
+
+    bindings = []
+    for slot, lf in enumerate(program.leaves):
+        src = lf.source
+        flat = src if isinstance(src, tuple) else (src,)
+        if any(isinstance(c, str) for c in flat):
+            raise ValueError(
+                f"leaf {lf.key} names a field id; ids resolve through a "
+                "store — use repro.analytics.query(exprs=..., store=...)")
+        bindings.append(src)
+    expr_mod.validate_bound(program, bindings, region=region)
+
+    precomputed = {}
+    for node in program.temporal_nodes:
+        slot = program.slot_of(node.operand)
+        tf = bindings[slot]
+        _check_feasible(node.spec, tf.scheme, stage)
+        if not tf.slabs:
+            raise ValueError("temporal field has no appended slabs")
+        summary = reduce(merge_summaries,
+                         [summarize_slab(s, stage, region=region)
+                          for s in tf.slabs])
+        precomputed[program.serial(node)] = node.spec.lower_temporal(
+            summary, tf.eps)
+
+    out = expr_mod.lower(program, bindings,
+                         (stage,) * program.n_components,
+                         region=region, seeds=seeds, precomputed=precomputed)
+    return out[0] if single else list(out)

@@ -32,12 +32,14 @@ component ids) never poisons another request's group or the jit cache.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.analytics import CostModel, query
 from repro.analytics.engine import BatchedAnalytics
-from repro.analytics.query import _group_signature, _resolve_item
+from repro.analytics.query import _group_signature, _query_opset, _resolve_item
 from repro.core import Compressed, Encoded, Stage, oplib
+from repro.core import expr as expr_mod
 from repro.core import region as region_mod
 
 Field = Union[Compressed, Encoded]
@@ -60,21 +62,32 @@ def _region_signature(req: "AnalyticsRequest", resolved=None):
 
 @dataclasses.dataclass
 class AnalyticsRequest:
-    """One or more analytical operations over one (possibly vector) field.
+    """One analytics request: expression DAGs, or a flat (field, op) pair.
 
-    ``fields`` carries the data — or, with a store-attached frontend, names
-    it: a registered field id (or a sequence of component ids) instead of
-    the container itself.  With a streaming store
+    The expression form is primary: ``exprs`` is one
+    :class:`repro.core.expr.Expr` (or a sequence) whose leaves carry the
+    data — containers, component bundles, or (with a store-attached
+    frontend) registered field ids.  Cross-field derived quantities
+    (vorticity from u and v, ensemble deltas) are one request; same-step
+    expression requests with the same stage directive and region fuse into
+    one compiled program, sharing leaf preludes across requests.
+
+    The flat form — ``fields`` + ``op`` — remains for back-compat:
+    ``fields`` carries (or names) one possibly-vector field and ``op`` one
+    op name.  The op-*set* spelling (``op=["mean", "std"]``) is deprecated
+    in favor of expressions and warns.  With a streaming store
     (:class:`repro.stream.StreamFieldStore`), temporal ops (``tmean``,
-    ``tdelta``, ...) over a temporal field id query the appended stream.
+    ``tdelta``, ...) over a temporal field id query the appended stream in
+    either form.
     """
 
     uid: int
-    fields: Union[Field, str, Sequence[Union[Field, str]]]
+    fields: Union[Field, str, Sequence[Union[Field, str]], None] = None
     op: Union[str, Sequence[str]] = "mean"  # one op, or a fused op set
     stage: Union[Stage, str, int] = "auto"
     axis: int = 0                          # derivative only
     region: Any = None                     # per-axis window, or None for full
+    exprs: Any = None                      # Expr or sequence of Expr roots
     result: Any = None                     # array, or {op: array} for op sets
     result_stage: Any = None               # Stage, or {op: Stage} for op sets
     error: Optional[str] = None            # set instead of result on rejection
@@ -166,7 +179,37 @@ class AnalyticsFrontend:
             else:
                 analytics_batch.append(req)
         groups: Dict[Tuple, List[AnalyticsRequest]] = {}
+        # expression requests: group value is [(request, its roots), ...]
+        expr_groups: Dict[Tuple, List[Tuple[AnalyticsRequest, list]]] = {}
         for req in analytics_batch:
+            if req.exprs is not None:
+                try:
+                    if req.fields is not None:
+                        raise TypeError(
+                            "an expression request carries its fields inside "
+                            "the expressions; do not also set .fields")
+                    roots = ([req.exprs]
+                             if isinstance(req.exprs, expr_mod.Expr)
+                             else list(req.exprs))
+                    expr_mod.analyze(roots)  # per-request validation
+                    # repr-canonical region: equivalent-but-differently-
+                    # spelled windows may land in separate (still correct)
+                    # groups — exprs carry no single shape to normalize by
+                    sig = (str(req.stage), repr(req.region))
+                except Exception as e:
+                    finished.append(self._reject(req, e))
+                    continue
+                expr_groups.setdefault(sig, []).append((req, roots))
+                continue
+            if req.fields is None:
+                finished.append(self._reject(req, TypeError(
+                    "request needs exprs= or the flat fields/op pair")))
+                continue
+            if not isinstance(req.op, str):
+                warnings.warn(
+                    "the AnalyticsRequest.op op-set form is deprecated; "
+                    "send AnalyticsRequest(exprs=[...]) expressions instead "
+                    "(repro.core.expr)", DeprecationWarning, stacklevel=2)
             try:
                 ops = oplib.canonical_ops(req.op)
                 vector = oplib.is_vector_ops(ops)
@@ -183,10 +226,10 @@ class AnalyticsFrontend:
                 # original (possibly id-bearing) fields go to the query:
                 # ids keep their cache identity, so hot fields are served
                 # from materialized stages
-                res = query([r.fields for r in group], group[0].op,
-                            group[0].stage, axis=group[0].axis,
-                            region=group[0].region, engine=self.engine,
-                            store=self.store)
+                res = _query_opset([r.fields for r in group], group[0].op,
+                                   group[0].stage, axis=group[0].axis,
+                                   region=group[0].region, engine=self.engine,
+                                   store=self.store)
             except Exception as e:
                 # reject only this group (bad op / infeasible stage / ...);
                 # every request is always either answered or errored
@@ -202,6 +245,28 @@ class AnalyticsFrontend:
                     value, stage = {name: value}, {name: stage}
                 req.result = value
                 req.result_stage = stage
+                req.done = True
+                finished.append(req)
+        for egroup in expr_groups.values():
+            reqs = [r for r, _ in egroup]
+            all_roots = [root for _, roots in egroup for root in roots]
+            try:
+                # one fused program per group: leaves shared across requests
+                # dedupe into one prelude each
+                res = query(exprs=all_roots, stage=reqs[0].stage,
+                            region=reqs[0].region, engine=self.engine,
+                            store=self.store)
+            except Exception as e:
+                finished.extend(self._reject(r, e) for r in reqs)
+                continue
+            i = 0
+            for req, roots in egroup:
+                vals = res.values[i:i + len(roots)]
+                stgs = res.stages[i:i + len(roots)]
+                i += len(roots)
+                single = isinstance(req.exprs, expr_mod.Expr)
+                req.result = vals[0] if single else vals
+                req.result_stage = stgs[0] if single else stgs
                 req.done = True
                 finished.append(req)
         return finished

@@ -242,6 +242,17 @@ class FieldStore:
         return len(victims)
 
     # -- planner input ------------------------------------------------------
+    def is_resident(self, field_id: str, stage: Stage, *, region=None,
+                    closure: Closure = "cover") -> bool:
+        """Pure residency peek for one exact ``(stage, region, closure)``
+        cell — the expression planner's cache-awareness probe (expression
+        closures join over a DAG's consumer set, so they don't reduce to an
+        op-set's :meth:`cached_stages` row).  Neither the LRU order nor the
+        hit/miss counters move."""
+        field = self.get(field_id)
+        norm, closure = self._canonical(field, stage, region, closure)
+        return self._key(field_id, stage, norm, closure) in self._cache
+
     def cached_stages(self, field_ids: Union[str, Sequence[str]],
                       ops: Union[str, Iterable[str]], *, region=None,
                       axis: int = 0) -> FrozenSet[Stage]:

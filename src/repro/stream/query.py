@@ -23,7 +23,10 @@ from .temporal import TemporalField
 
 def _cold_summary(tf: TemporalField, stage: Stage, region, engine):
     """Storeless path: summarize every slab (batched per layout) and merge
-    in temporal order."""
+    in temporal order.  Returns ``(summary, n_calls)`` where ``n_calls``
+    counts the compiled calls issued (one batched summarize per layout
+    group plus one merge per fold step) so callers report dispatch
+    accounting uniformly with the spatial path."""
     from repro.core import layout_key
 
     groups = {}
@@ -35,7 +38,8 @@ def _cold_summary(tf: TemporalField, stage: Stage, region, engine):
                                    region=region)
         for j, i in enumerate(indices):
             parts[i] = jax.tree.map(lambda x, _j=j: x[_j], stacked)
-    return reduce(engine.merge_summaries, parts)
+    return (reduce(engine.merge_summaries, parts),
+            len(groups) + max(0, len(parts) - 1))
 
 
 def query_temporal(fields: Sequence, op: Union[str, Sequence[str]],
@@ -68,6 +72,7 @@ def query_temporal(fields: Sequence, op: Union[str, Sequence[str]],
                       if store is not None else (0, 0))
     values, stages = [], []
     n_dispatches = 0
+    group_sigs = set()  # layout batches, mirroring the spatial n_batches
     for item in fields:
         fid: Optional[str] = None
         if isinstance(item, str):
@@ -101,6 +106,7 @@ def query_temporal(fields: Sequence, op: Union[str, Sequence[str]],
         s = plan.fused
         if s is None:
             s = min((st for _, st in plan.stages), key=int)
+        group_sigs.add((tf.layout_sig(), fid is not None))
         if fid is not None:
             if not hasattr(store, "temporal_summary"):
                 raise TypeError(
@@ -108,7 +114,8 @@ def query_temporal(fields: Sequence, op: Union[str, Sequence[str]],
                     "(repro.stream.StreamFieldStore)")
             summary = store.temporal_summary(fid, region=region, stage=s)
         else:
-            summary = _cold_summary(tf, s, region, engine)
+            summary, n_cold = _cold_summary(tf, s, region, engine)
+            n_dispatches += n_cold
         out = engine.run_temporal(names, summary, tf.eps)
         n_dispatches += 1
         values.append(out[names[0]] if single else out)
@@ -119,5 +126,5 @@ def query_temporal(fields: Sequence, op: Union[str, Sequence[str]],
         store_misses = store.stats.misses - misses0
     return QueryResult(values=values, stages=stages,
                        op=op if single else names,
-                       n_batches=len(values), n_dispatches=n_dispatches,
+                       n_batches=len(group_sigs), n_dispatches=n_dispatches,
                        store_hits=store_hits, store_misses=store_misses)

@@ -182,4 +182,4 @@ class StreamFieldStore(FieldStore):
         for the storeless and store-miss paths (`query._cold_summary`)."""
         from .query import _cold_summary
 
-        return _cold_summary(tf, stage, region, self.engine)
+        return _cold_summary(tf, stage, region, self.engine)[0]
