@@ -31,11 +31,11 @@ readable JSON (name / us / speedup) for CI regression gating;
 ``--json-expr PATH`` for the expression-DAG rows.
 """
 from __future__ import annotations
+from collections.abc import Callable
 
 import argparse
 import json
 import time
-from typing import Callable, List, Tuple
 
 import numpy as np
 import jax
@@ -45,11 +45,11 @@ from repro.core import Stage, by_name, encode, homomorphic as H
 from repro.core import region as region_mod
 from repro.data.scientific import dataset_dims, synth_field
 
-ROWS: List[Tuple[str, float, str]] = []
-FUSED_JSON: List[dict] = []
-EXPR_JSON: List[dict] = []
-STORE_JSON: List[dict] = []
-STREAM_JSON: List[dict] = []
+ROWS: list[tuple[str, float, str]] = []
+FUSED_JSON: list[dict] = []
+EXPR_JSON: list[dict] = []
+STORE_JSON: list[dict] = []
+STREAM_JSON: list[dict] = []
 SCALE = 8
 REPS = 3
 
@@ -62,7 +62,7 @@ def row(name: str, us: float, derived: str):
     ROWS.append((name, us, derived))
 
 
-def timeit(fn: Callable, *args) -> Tuple[float, object]:
+def timeit(fn: Callable, *args) -> tuple[float, object]:
     out = fn(*args)
     jax.block_until_ready(out)
     t0 = time.perf_counter()
@@ -263,7 +263,8 @@ def fw_batched_analytics():
         for op_name, op in (("mean", H.mean), ("std", H.std),
                             ("derivative", lambda c, s: H.derivative(c, s, 0))):
             stage = plan_stage(comp.scheme, op_name)
-            us_batched, _ = timeit(lambda fs: eng.run(fs, op_name, stage), fields)
+            us_batched, _ = timeit(
+                lambda fs, _o=op_name, _s=stage: eng.run(fs, _o, _s), fields)
             loop_fn = jax.jit(lambda c, s=stage, o=op: o(c, s))
 
             def per_field_loop(fs):

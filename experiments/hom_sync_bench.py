@@ -36,8 +36,8 @@ def main(arch="qwen3-4b", multi_pod=False):
 
     results = {}
     for mode in ("f32", "hom16"):
-        def body(grads, residual):
-            if mode == "f32":
+        def body(grads, residual, _mode=mode):
+            if _mode == "f32":
                 summed = jax.tree.map(
                     lambda g: jax.lax.psum(g, axis) / world, grads)
                 return summed, residual

@@ -21,9 +21,9 @@ which already planned the group — is executed as-is; infeasible explicit
 stages still raise at trace time from the ops themselves.
 """
 from __future__ import annotations
+from collections.abc import Mapping, Sequence
 
 from collections import OrderedDict
-from typing import Mapping, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,14 +34,14 @@ from repro.core import region as region_mod
 
 from .planner import CostModel, StageSetPlan, plan_stages
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
 
-StageLike = Union[Stage, str, int, StageSetPlan, Mapping[str, Stage]]
+StageLike = Stage | str | int | StageSetPlan | Mapping[str, Stage]
 
 
-def batch_key(first: Field, ops: Union[str, Sequence[str]], stage: Stage,
+def batch_key(first: Field, ops: str | Sequence[str], stage: Stage,
               axis: int = 0, n_components: int = 1, batch: int = 1,
-              region=None, seed_sig: Tuple | None = None) -> Tuple:
+              region=None, seed_sig: tuple | None = None) -> tuple:
     """Static signature of one compiled batched-analytics program.
 
     The batch size is part of the key: stacking happens *inside* the jitted
@@ -78,14 +78,14 @@ class BatchedAnalytics:
         self.cost_model = cost_model
         self.bucket_batches = bucket_batches
         self.cache_limit = cache_limit
-        self._jitted: OrderedDict[Tuple, object] = OrderedDict()
+        self._jitted: OrderedDict[tuple, object] = OrderedDict()
 
     @staticmethod
     def _bucket(n: int) -> int:
         return 1 << (n - 1).bit_length()
 
     # -- compiled-program cache -------------------------------------------
-    def _compiled(self, key: Tuple, ops: Tuple[str, ...], stage: Stage,
+    def _compiled(self, key: tuple, ops: tuple[str, ...], stage: Stage,
                   axis: int, n_components: int, batch: int, region=None,
                   seeded: bool = False):
         fn = self._jitted.get(key)
@@ -131,7 +131,7 @@ class BatchedAnalytics:
     def cache_size(self) -> int:
         return len(self._jitted)
 
-    def _cache_put(self, key: Tuple, fn) -> None:
+    def _cache_put(self, key: tuple, fn) -> None:
         self._jitted[key] = fn
         while len(self._jitted) > self.cache_limit:
             self._jitted.popitem(last=False)
@@ -198,7 +198,7 @@ class BatchedAnalytics:
             self._jitted.move_to_end(key)
         return fn(a, b)
 
-    def run_temporal(self, ops: Union[str, Sequence[str]], summary, eps):
+    def run_temporal(self, ops: str | Sequence[str], summary, eps):
         """Temporal op postludes on one merged summary: one compiled
         program per (canonical op set, summary signature) — independent of
         how many slabs the summary merged, so querying a growing stream
@@ -291,7 +291,7 @@ class BatchedAnalytics:
             raise
 
     # -- stage resolution ---------------------------------------------------
-    def _resolve(self, scheme, names: Tuple[str, ...], stage: StageLike,
+    def _resolve(self, scheme, names: tuple[str, ...], stage: StageLike,
                  region, field, axis: int) -> StageSetPlan:
         """Plan only when asked to: a resolved Stage / StageSetPlan / per-op
         mapping from an upper layer is executed as-is (no double planning)."""
@@ -309,7 +309,7 @@ class BatchedAnalytics:
                            region=region, field=field, axis=axis)
 
     # -- execution ---------------------------------------------------------
-    def run(self, fields: Sequence, ops: Union[str, Sequence[str]],
+    def run(self, fields: Sequence, ops: str | Sequence[str],
             stage: StageLike = "auto", *, axis: int = 0, region=None,
             seeds: Sequence | None = None):
         """Run an op (or fused op set) over ``fields`` in jitted vmapped calls.

@@ -33,26 +33,25 @@ Lorenzo schemes (stage-② derivative bands vs stage-③ prefix hulls), so
 for the full field.
 """
 from __future__ import annotations
+from collections.abc import Iterable, Mapping, Sequence, Set as AbstractSet
 
 import dataclasses
 import json
 import os
-from typing import (AbstractSet, Dict, Iterable, Mapping, Optional, Sequence,
-                    Tuple, Union)
 
 from repro.core import Scheme, Stage, UnsupportedStageError, oplib
 from repro.core import region as region_mod
 
 #: planned operations, in the op registry's canonical order.
-OPS: Tuple[str, ...] = tuple(oplib.OPS)
+OPS: tuple[str, ...] = tuple(oplib.OPS)
 #: temporal (time-axis) operations over appended streams (repro.stream).
-TEMPORAL: Tuple[str, ...] = tuple(oplib.TEMPORAL_OPS)
+TEMPORAL: tuple[str, ...] = tuple(oplib.TEMPORAL_OPS)
 #: ops that take a sequence of component fields instead of a single field
 MULTIVARIATE = frozenset(
     name for name, spec in oplib.OPS.items() if spec.arity == "vector")
 
 
-def _build_matrix() -> Dict[Tuple[Scheme, str], Tuple[Stage, ...]]:
+def _build_matrix() -> dict[tuple[Scheme, str], tuple[Stage, ...]]:
     """Table I as data, derived from the op registries' own feasibility rows
     (one source of truth: :data:`repro.core.oplib.OPS` plus the temporal
     registry :data:`repro.core.oplib.TEMPORAL_OPS`)."""
@@ -62,21 +61,21 @@ def _build_matrix() -> Dict[Tuple[Scheme, str], Tuple[Stage, ...]]:
 
 
 #: Table I: (scheme, op) -> stages the op is defined at, cheapest first.
-FEASIBILITY: Dict[Tuple[Scheme, str], Tuple[Stage, ...]] = _build_matrix()
+FEASIBILITY: dict[tuple[Scheme, str], tuple[Stage, ...]] = _build_matrix()
 
 
-def as_stage(stage: Union[Stage, str, int]) -> Stage:
+def as_stage(stage: Stage | str | int) -> Stage:
     """Coerce ``Stage`` / int / name ("M", "p", ...) to a :class:`Stage`."""
     if isinstance(stage, str):
         try:
             return Stage[stage.upper()]
         except KeyError:
             raise ValueError(f"unknown stage {stage!r}; expected one of "
-                             f"{[s.name for s in Stage]} or 'auto'")
+                             f"{[s.name for s in Stage]} or 'auto'") from None
     return Stage(stage)
 
 
-def feasible_stages(scheme: Scheme, op: str) -> Tuple[Stage, ...]:
+def feasible_stages(scheme: Scheme, op: str) -> tuple[Stage, ...]:
     """Stages ``op`` is defined at for ``scheme``, cheapest first."""
     try:
         return FEASIBILITY[(Scheme(scheme), op)]
@@ -135,13 +134,13 @@ class CostModel:
     measured rival on made-up numbers.
     """
 
-    def __init__(self, table: Optional[Dict[Tuple[Scheme, str, Stage], float]] = None,
-                 recon: Optional[Dict[Tuple[Scheme, Stage], float]] = None):
-        self.table: Dict[Tuple[Scheme, str, Stage], float] = dict(table or {})
-        self._counts: Dict[Tuple[Scheme, str, Stage], int] = {
+    def __init__(self, table: dict[tuple[Scheme, str, Stage], float] | None = None,
+                 recon: dict[tuple[Scheme, Stage], float] | None = None):
+        self.table: dict[tuple[Scheme, str, Stage], float] = dict(table or {})
+        self._counts: dict[tuple[Scheme, str, Stage], int] = {
             k: 1 for k in self.table}
-        self.recon: Dict[Tuple[Scheme, Stage], float] = dict(recon or {})
-        self._recon_counts: Dict[Tuple[Scheme, Stage], int] = {
+        self.recon: dict[tuple[Scheme, Stage], float] = dict(recon or {})
+        self._recon_counts: dict[tuple[Scheme, Stage], int] = {
             k: 1 for k in self.recon}
 
     # -- calibration -------------------------------------------------------
@@ -166,7 +165,7 @@ class CostModel:
         self._recon_counts[key] = n + 1
 
     @classmethod
-    def from_benchmark_csv(cls, rows: Union[str, Iterable[str]]) -> "CostModel":
+    def from_benchmark_csv(cls, rows: str | Iterable[str]) -> "CostModel":
         """Calibrate from ``benchmarks/run.py`` output.
 
         Parses the op-throughput rows (``fig58/…``, ``fig910/…``,
@@ -212,7 +211,7 @@ class CostModel:
     # -- persistence (satellite: calibrations must survive the process) ----
     _FORMAT = "hsz-cost-model"
 
-    def save(self, path: Union[str, os.PathLike]) -> None:
+    def save(self, path: str | os.PathLike) -> None:
         """JSON-serialize the full calibration state (cells, reconstruction
         table, observation counts) so CI and serving reuse measured models."""
         def skey(k):
@@ -237,7 +236,7 @@ class CostModel:
             f.write("\n")
 
     @classmethod
-    def load(cls, path: Union[str, os.PathLike]) -> "CostModel":
+    def load(cls, path: str | os.PathLike) -> "CostModel":
         """Inverse of :meth:`save`: an exact round-trip, including the
         observation counts, so post-load :meth:`record` calls continue the
         same running means.
@@ -285,7 +284,7 @@ class CostModel:
         return model
 
     # -- lookup ------------------------------------------------------------
-    def reconstruction(self, scheme: Scheme, stage: Stage) -> Optional[float]:
+    def reconstruction(self, scheme: Scheme, stage: Stage) -> float | None:
         """Measured reconstruction microseconds for a stage (① is free —
         metadata is always resident)."""
         if Stage(stage) == Stage.M:
@@ -293,7 +292,7 @@ class CostModel:
         return self.recon.get((Scheme(scheme), Stage(stage)))
 
     def cost(self, scheme: Scheme, op: str, stage: Stage, *,
-             cached: bool = False) -> Optional[float]:
+             cached: bool = False) -> float | None:
         base = self.table.get((Scheme(scheme), op, Stage(stage)))
         if base is None or not cached:
             return base
@@ -309,8 +308,8 @@ class CostModel:
         return max(base - rec, 0.0)
 
     def cheapest(self, scheme: Scheme, op: str, stages: Sequence[Stage],
-                 fractions: Optional[Mapping[Stage, float]] = None,
-                 cached: Optional[AbstractSet[Stage]] = None) -> Stage:
+                 fractions: Mapping[Stage, float] | None = None,
+                 cached: AbstractSet[Stage] | None = None) -> Stage:
         """Cheapest stage; ``fractions`` scale each stage's measured cost by
         the share of the field its region closure touches (1.0 = full
         field); stages in ``cached`` are priced without their reconstruction
@@ -329,10 +328,10 @@ class CostModel:
 
 
 def plan_stage(scheme: Scheme, op: str,
-               stage: Union[Stage, str, int] = "auto",
-               cost_model: Optional[CostModel] = None, *,
+               stage: Stage | str | int = "auto",
+               cost_model: CostModel | None = None, *,
                region=None, field=None, axis: int = 0,
-               cached: Optional[AbstractSet[Stage]] = None) -> Stage:
+               cached: AbstractSet[Stage] | None = None) -> Stage:
     """Resolve the execution stage for ``op`` on ``scheme``.
 
     ``stage="auto"`` picks the cheapest feasible stage (never one that would
@@ -382,9 +381,9 @@ class StageSetPlan:
     resolved stage either way.
     """
 
-    ops: Tuple[str, ...]
-    stages: Tuple[Tuple[str, Stage], ...]
-    fused: Optional[Stage]
+    ops: tuple[str, ...]
+    stages: tuple[tuple[str, Stage], ...]
+    fused: Stage | None
 
     def stage_of(self, op: str) -> Stage:
         return dict(self.stages)[op]
@@ -395,11 +394,11 @@ class StageSetPlan:
         return 1 if self.fused is not None else len(self.ops)
 
 
-def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
-                stage: Union[Stage, str, int] = "auto",
-                cost_model: Optional[CostModel] = None, *,
+def plan_stages(scheme: Scheme, ops: str | Sequence[str],
+                stage: Stage | str | int = "auto",
+                cost_model: CostModel | None = None, *,
                 region=None, field=None, axis: int = 0,
-                cached: Optional[AbstractSet[Stage]] = None) -> StageSetPlan:
+                cached: AbstractSet[Stage] | None = None) -> StageSetPlan:
     """Jointly resolve the execution stage(s) for an op *set*.
 
     An explicit stage is validated against every op in the set.  With
@@ -429,7 +428,7 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
         return StageSetPlan(names, tuple((op, resolved) for op in names),
                             resolved)
 
-    feas: Dict[str, Tuple[Stage, ...]] = {}
+    feas: dict[str, tuple[Stage, ...]] = {}
     for op in names:
         stages = feasible_stages(scheme, op)
         if region is not None and Stage.M in stages:
@@ -439,7 +438,7 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
                 stages = tuple(s for s in stages if s != Stage.M)
         feas[op] = stages
 
-    def per_op_plan() -> Tuple[Tuple[str, Stage], ...]:
+    def per_op_plan() -> tuple[tuple[str, Stage], ...]:
         return tuple(
             (op, plan_stage(scheme, op, "auto", cost_model,
                             region=region, field=field, axis=axis,
@@ -463,7 +462,7 @@ def plan_stages(scheme: Scheme, ops: Union[str, Sequence[str]],
         cost_model.cost(scheme, op, s) is not None
         for op in names for s in feas[op])
     if calibrated:
-        fractions: Dict[Tuple[str, Stage], float] = {}
+        fractions: dict[tuple[str, Stage], float] = {}
 
         def cost(op: str, s: Stage) -> float:
             key = (op, s)
@@ -504,12 +503,12 @@ class ExprPlan:
     ``root_component`` maps.  The whole DAG lowers into a single compiled
     program, so the plan itself contributes one dispatch."""
 
-    stages: Tuple[Stage, ...]
+    stages: tuple[Stage, ...]
 
 
 def plan_expr(program, bindings: Sequence, stage="auto",
-              cost_model: Optional[CostModel] = None, *, region=None,
-              cached: Optional[Sequence[AbstractSet[Stage]]] = None) -> ExprPlan:
+              cost_model: CostModel | None = None, *, region=None,
+              cached: Sequence[AbstractSet[Stage]] | None = None) -> ExprPlan:
     """Jointly plan the execution stage of each DAG component.
 
     Every ``(op application, leaf scheme)`` pair in a component contributes
@@ -540,7 +539,7 @@ def plan_expr(program, bindings: Sequence, stage="auto",
             pairs.extend((name, sch, slot, axis) for sch in schemes)
         if stage != "auto":
             resolved = as_stage(stage)
-            for name, sch, slot, axis in pairs:
+            for name, sch, slot, _axis in pairs:
                 check_feasible(sch, name, resolved)
                 if (resolved == Stage.M and region is not None
                         and not region_mod.region_aligned(slot_field(slot),
@@ -552,7 +551,7 @@ def plan_expr(program, bindings: Sequence, stage="auto",
             continue
 
         feas_sets = []
-        for name, sch, slot, axis in pairs:
+        for name, sch, slot, _axis in pairs:
             stages = feasible_stages(sch, name)
             if region is not None and Stage.M in stages:
                 if not region_mod.region_aligned(slot_field(slot), region):
@@ -604,12 +603,12 @@ class RefreshPlan:
     """
 
     mode: str                            # "incremental" | "recompute"
-    incremental_us: Optional[float]      # one-slab reconstruction cost
-    recompute_us: Optional[float]        # all-slab reconstruction cost
+    incremental_us: float | None      # one-slab reconstruction cost
+    recompute_us: float | None        # all-slab reconstruction cost
 
 
 def plan_refresh(scheme: Scheme, stage: Stage, n_slabs: int,
-                 cost_model: Optional[CostModel] = None, *,
+                 cost_model: CostModel | None = None, *,
                  summary_resident: bool = True) -> RefreshPlan:
     """Cost an append's summary refresh: incremental merge vs full rebuild.
 

@@ -20,10 +20,10 @@ lifetime, LRU/byte-budget permitting).  Results are bit-identical to the
 storeless path at the same stage.
 """
 from __future__ import annotations
+from collections.abc import Sequence
 
 import dataclasses
 import warnings
-from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import Compressed, Encoded, Stage, layout_key, oplib
 from repro.core import expr as expr_mod
@@ -31,8 +31,8 @@ from repro.core import expr as expr_mod
 from .engine import BatchedAnalytics, default_engine
 from .planner import CostModel, plan_expr, plan_stages
 
-Field = Union[Compressed, Encoded]
-FieldOrVector = Union[Field, Sequence[Field]]
+Field = Compressed | Encoded
+FieldOrVector = Field | Sequence[Field]
 
 
 @dataclasses.dataclass
@@ -45,14 +45,14 @@ class QueryResult:
     query made (0 when no store was involved).
     """
 
-    values: List                   # result (or {op: result}) per input
-    stages: List                   # execution stage(s) per input
-    op: Union[str, Tuple[str, ...]]
+    values: list                   # result (or {op: result}) per input
+    stages: list                   # execution stage(s) per input
+    op: str | tuple[str, ...]
     n_batches: int                 # number of field groups (layout batches)
     n_dispatches: int              # jitted compiled calls actually issued
     store_hits: int = 0            # materializations served from cache
     store_misses: int = 0          # materializations built on demand
-    exprs: Optional[Tuple] = None  # root expressions (expression queries)
+    exprs: tuple | None = None  # root expressions (expression queries)
 
     def __iter__(self):
         return iter(self.values)
@@ -61,7 +61,7 @@ class QueryResult:
         return len(self.values)
 
 
-def _group_signature(item: FieldOrVector, vector: bool) -> Tuple:
+def _group_signature(item: FieldOrVector, vector: bool) -> tuple:
     if vector:
         return tuple(layout_key(c) for c in item)
     if hasattr(item, "layout_sig"):  # TemporalField (repro.stream)
@@ -121,12 +121,12 @@ def _resolve_item(item, store, vector):
     return item, None
 
 
-def query(fields: Optional[Sequence[FieldOrVector]] = None,
-          op: Union[str, Sequence[str], None] = None,
-          stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
+def query(fields: Sequence[FieldOrVector] | None = None,
+          op: str | Sequence[str] | None = None,
+          stage: Stage | str | int = "auto", *, axis: int = 0,
           region=None,
-          cost_model: Optional[CostModel] = None,
-          engine: Optional[BatchedAnalytics] = None,
+          cost_model: CostModel | None = None,
+          engine: BatchedAnalytics | None = None,
           store=None, exprs=None, ops=None) -> QueryResult:
     """Run analytics: expression DAGs (``exprs=``) or a flat op set.
 
@@ -172,11 +172,11 @@ def query(fields: Optional[Sequence[FieldOrVector]] = None,
 
 
 def _query_opset(fields: Sequence[FieldOrVector],
-                 op: Union[str, Sequence[str]],
-                 stage: Union[Stage, str, int] = "auto", *, axis: int = 0,
+                 op: str | Sequence[str],
+                 stage: Stage | str | int = "auto", *, axis: int = 0,
                  region=None,
-                 cost_model: Optional[CostModel] = None,
-                 engine: Optional[BatchedAnalytics] = None,
+                 cost_model: CostModel | None = None,
+                 engine: BatchedAnalytics | None = None,
                  store=None) -> QueryResult:
     """Run one analytical operation — or a fused op set — over many fields.
 
@@ -230,8 +230,8 @@ def _query_opset(fields: Sequence[FieldOrVector],
         engine = default_engine
     d_axis = axis if any(oplib.OPS[n].needs_axis for n in names) else 0
 
-    resolved: List = []
-    ids: List = []
+    resolved: list = []
+    ids: list = []
     for item in fields:
         r, fid = _resolve_item(item, store, vector)
         for c in (r if vector else (r,)):
@@ -248,13 +248,13 @@ def _query_opset(fields: Sequence[FieldOrVector],
 
     # group by static layout signature (store-backed items separately: only
     # they carry the cache identity seeding needs), preserving input order
-    groups: Dict[Tuple, List[int]] = {}
+    groups: dict[tuple, list[int]] = {}
     for i, item in enumerate(resolved):
         sig = (_group_signature(item, vector), ids[i] is not None)
         groups.setdefault(sig, []).append(i)
 
-    values: List = [None] * len(fields)
-    stages: List = [None] * len(fields)
+    values: list = [None] * len(fields)
+    stages: list = [None] * len(fields)
     n_dispatches = 0
     for (_, store_backed), indices in groups.items():
         group = [resolved[i] for i in indices]
@@ -330,8 +330,8 @@ def _resolve_leaf(lf, store):
 
 
 def _query_exprs(exprs, stage="auto", *, region=None,
-                 cost_model: Optional[CostModel] = None,
-                 engine: Optional[BatchedAnalytics] = None,
+                 cost_model: CostModel | None = None,
+                 engine: BatchedAnalytics | None = None,
                  store=None) -> QueryResult:
     """Execute a batch of expression DAGs as one compiled program.
 
@@ -351,8 +351,8 @@ def _query_exprs(exprs, stage="auto", *, region=None,
     stats = getattr(store, "stats", None) if store is not None else None
     hits0, misses0 = (stats.hits, stats.misses) if stats else (0, 0)
 
-    bindings: List = []
-    slot_ids: List = []
+    bindings: list = []
+    slot_ids: list = []
     for slot, lf in enumerate(program.leaves):
         b, fid = _resolve_leaf(lf, store)
         temporal = program.leaf_is_temporal(slot)
@@ -403,8 +403,8 @@ def _query_exprs(exprs, stage="auto", *, region=None,
     # temporal op nodes: summaries reduce outside the spatial trace (one
     # shared summary per stream slot), values join the DAG via `precomputed`
     n_dispatches = 0
-    precomputed: Dict[str, object] = {}
-    summaries: Dict[int, object] = {}
+    precomputed: dict[str, object] = {}
+    summaries: dict[int, object] = {}
     for node in program.temporal_nodes:
         slot = program.slot_of(node.operand)
         tf = bindings[slot]
@@ -427,7 +427,7 @@ def _query_exprs(exprs, stage="auto", *, region=None,
         n_dispatches += 1
         precomputed[program.serial(node)] = out[node.name]
 
-    seeds: List = [None] * len(bindings)
+    seeds: list = [None] * len(bindings)
     if store is not None and hasattr(store, "seed"):
         for slot in range(len(program.leaves)):
             fid = slot_ids[slot]

@@ -1,0 +1,32 @@
+"""Static invariant audit for the homomorphic pipeline (DESIGN.md §11).
+
+Four analyzers, one contract: ``python -m repro.audit`` exits 0 iff every
+statically checkable invariant the bit-identity guarantees rest on holds.
+
+* :mod:`.registry` — registry / Table-I completeness: exactly one lowering
+  rule per feasible (stage, scheme-family) cell, closures for every
+  region-capable cell, collision-free registry merge, planner matrix in
+  agreement with the declarations.
+* :mod:`.intwidth` — integer-width abstract interpretation: value-range
+  intervals propagated through quantize → decorrelate → bitpack →
+  TemporalSummary under a declared envelope, proving no int32 overflow and
+  emitting the per-scheme safe-size table.
+* :mod:`.tracesafety` — trace-safety lint: host syncs and Python branches
+  on traced values inside lowering rules and compiled engine programs,
+  with ``# audit: waive(...)`` for deliberate exceptions.
+* :mod:`.jitkeys` — jit-cache-key soundness: every free variable a traced
+  callable closes over is covered by its cache key (or declared invariant
+  with ``# audit: invariant(...)``).
+"""
+from .findings import AuditReport, Finding
+from .intwidth import DEFAULT_ENVELOPE, Envelope, analyze_int_width, safe_size_table
+from .jitkeys import analyze_jit_keys
+from .registry import analyze_registry
+from .runner import main, run_audit
+from .tracesafety import analyze_trace_safety
+
+__all__ = [
+    "AuditReport", "Finding", "Envelope", "DEFAULT_ENVELOPE",
+    "analyze_registry", "analyze_int_width", "safe_size_table",
+    "analyze_trace_safety", "analyze_jit_keys", "run_audit", "main",
+]

@@ -1,0 +1,6 @@
+"""``python -m repro.audit`` — run the static invariant audit."""
+import sys
+
+from .runner import main
+
+sys.exit(main())

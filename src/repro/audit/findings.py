@@ -1,0 +1,83 @@
+"""Structured findings for the static invariant audit (DESIGN.md §11).
+
+Every analyzer reports :class:`Finding` records — never free-form prints —
+so the CLI can render them uniformly, ``AUDIT.json`` stays machine-readable
+for CI artifacts, and tests can assert on exact (analyzer, invariant)
+pairs.  A finding names the *invariant* it protects, not just the symptom:
+the four families are the registry completeness matrix, the int32 width
+bounds, trace safety (no host syncs / tracer branches under jit), and
+jit-cache-key soundness.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One audit violation.
+
+    ``analyzer``  — which pass produced it (``registry`` / ``intwidth`` /
+    ``trace`` / ``jitkey``).
+    ``invariant`` — short machine-stable identifier of the violated rule
+    (e.g. ``missing-lowering-rule``, ``sumsq-overflow``, ``host-sync``,
+    ``unkeyed-closure``); tests and CI gates key on it.
+    ``file`` / ``line`` — source location when the pass is syntactic;
+    semantic passes (registry, intwidth) locate by subject instead.
+    ``subject`` — what the finding is about (op name, accumulator, symbol).
+    ``message`` — human-readable statement of the violation.
+    ``suggestion`` — the concrete fix (add the rule, key the variable,
+    waive with the documented comment syntax, ...).
+    """
+
+    analyzer: str
+    invariant: str
+    message: str
+    subject: str = ""
+    file: str | None = None
+    line: int | None = None
+    suggestion: str = ""
+
+    def location(self) -> str:
+        if self.file is None:
+            return self.subject or "<registry>"
+        loc = self.file if self.line is None else f"{self.file}:{self.line}"
+        return f"{loc} ({self.subject})" if self.subject else loc
+
+    def render(self) -> str:
+        out = f"[{self.analyzer}/{self.invariant}] {self.location()}: {self.message}"
+        if self.suggestion:
+            out += f"\n    fix: {self.suggestion}"
+        return out
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass
+class AuditReport:
+    """The full audit result: findings plus the derived safe-size tables."""
+
+    findings: list[Finding] = field(default_factory=list)
+    #: analyzer (2)'s machine-readable output: per-scheme maximum safe
+    #: field sizes / slab counts under the declared operating envelope.
+    safe_sizes: dict = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def extend(self, findings) -> None:
+        self.findings.extend(findings)
+
+    def to_dict(self) -> dict:
+        by_analyzer: dict[str, int] = {}
+        for f in self.findings:
+            by_analyzer[f.analyzer] = by_analyzer.get(f.analyzer, 0) + 1
+        return {
+            "ok": self.ok,
+            "n_findings": len(self.findings),
+            "findings_by_analyzer": by_analyzer,
+            "findings": [f.to_dict() for f in self.findings],
+            "safe_sizes": self.safe_sizes,
+        }

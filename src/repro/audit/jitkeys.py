@@ -1,0 +1,529 @@
+"""Analyzer (4): jit-cache-key soundness (DESIGN.md §11).
+
+The engine (`repro.analytics.engine`) keeps hand-built jit caches: a
+compiled program is stored under a tuple key and the traced callable binds
+its statics through default args and lexical capture.  The bug class PRs 3
+and 5 fixed by hand is a *free variable the trace depends on that the key
+does not distinguish* — two calls that should compile differently silently
+share one cached program.
+
+For every ``jax.jit(<callable>)`` site this pass:
+
+1. extracts the traced callable's **free variables** — lexical captures
+   (via :mod:`symtable`, i.e. CPython's own closure analysis) plus the
+   free names of default-argument expressions (``_ops=ops`` binds ``ops``
+   from the enclosing scope at definition time);
+2. finds the **cache-key expression** governing the site — the first
+   argument of ``self._jitted.get(...)`` / ``self._jitted[...] = ...`` /
+   ``self._cache_put(...)`` in the enclosing function, or the enclosing
+   function's parameters when it is ``lru_cache``-decorated (the
+   functools key *is* the parameter tuple);
+3. verifies each free variable is **covered**: it flows into the key
+   (backward slice), is fully derived from key components (forward
+   closure), is a module global / import / builtin / local helper
+   function (recursed), or is on the declared invariant allowlist;
+4. when the key is itself a parameter (the ``_compiled(key, ops, ...)``
+   factoring), repeats the check at every **call site**, mapping
+   arguments to parameters — the caller's key slice must cover each
+   argument feeding an uncovered parameter.
+
+Deliberate invariants are declared with a comment on the ``jax.jit`` line
+or the traced callable's ``def`` line::
+
+    fn = jax.jit(run)  # audit: invariant(cost_model) fixed per engine
+
+Module-level ``jax.jit(module_fn)`` of an attribute/global with no
+closure is sound by construction and skipped.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import re
+import symtable
+from pathlib import Path
+
+from .findings import Finding
+
+_ANALYZER = "jitkey"
+
+_CACHE_ATTRS = frozenset({"_jitted", "_cache", "_programs"})
+_CACHE_PUTS = frozenset({"_cache_put"})
+_MUTATORS = frozenset({"append", "extend", "add", "update", "insert"})
+_INVARIANT_RE = re.compile(r"#\s*audit:\s*invariant\(([A-Za-z0-9_,\s]+)\)")
+_BUILTINS = frozenset(dir(builtins))
+
+_DEFAULT_TARGETS = ("analytics/engine.py", "stream/temporal.py")
+
+
+# ---------------------------------------------------------------------------
+# small ast utilities
+# ---------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> str | None:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _free_names(node: ast.AST) -> set[str]:
+    """Names an expression reads, minus names it binds itself
+    (comprehension targets, lambda params, walrus targets)."""
+    loads: set[str] = set()
+    bound: set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            (loads if isinstance(n.ctx, ast.Load) else bound).add(n.id)
+        elif isinstance(n, ast.comprehension):
+            for t in ast.walk(n.target):
+                if isinstance(t, ast.Name):
+                    bound.add(t.id)
+        elif isinstance(n, ast.Lambda):
+            a = n.args
+            for arg in a.posonlyargs + a.args + a.kwonlyargs:
+                bound.add(arg.arg)
+    return loads - bound
+
+
+def _bound_targets(t: ast.AST):
+    """Names an assignment target *binds* — Subscript/Attribute targets
+    mutate containers, they do not bind the names inside them."""
+    if isinstance(t, ast.Name):
+        yield t.id
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for e in t.elts:
+            yield from _bound_targets(e)
+    elif isinstance(t, ast.Starred):
+        yield from _bound_targets(t.value)
+
+
+def _param_names(node: ast.AST) -> list[str]:
+    a = node.args
+    names = [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _default_frees(node: ast.AST) -> set[str]:
+    """Free names of default-arg expressions — evaluated in the *enclosing*
+    scope at definition time (the ``_ops=ops`` static-binding idiom)."""
+    a = node.args
+    out: set[str] = set()
+    for d in list(a.defaults) + [d for d in a.kw_defaults if d is not None]:
+        out |= _free_names(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-module index
+# ---------------------------------------------------------------------------
+
+class _Module:
+    def __init__(self, source: str, path: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source)
+        self.lines = source.splitlines()
+        # symtable: (name, lineno) -> function block (CPython closure info)
+        self.blocks: dict[tuple, symtable.SymbolTable] = {}
+
+        def walk(tb):
+            for child in tb.get_children():
+                if child.get_type() == "function":
+                    self.blocks[(child.get_name(), child.get_lineno())] = child
+                walk(child)
+
+        walk(symtable.symtable(source, path, "exec"))
+        # names bound at module level, plus every import anywhere (imports
+        # bind invariant module objects regardless of scope)
+        self.module_bound: set[str] = set()
+        for stmt in self.tree.body:
+            self.module_bound |= _stmt_bindings(stmt)
+        self.import_bound: set[str] = set()
+        for n in ast.walk(self.tree):
+            if isinstance(n, (ast.Import, ast.ImportFrom)):
+                for alias in n.names:
+                    self.import_bound.add(
+                        (alias.asname or alias.name).split(".", 1)[0])
+
+    def exempt(self, name: str) -> bool:
+        return (name in _BUILTINS or name in self.module_bound
+                or name in self.import_bound)
+
+    def waived(self, lineno: int) -> set[str]:
+        out: set[str] = set()
+        for ln in (lineno, lineno - 1):
+            if 1 <= ln <= len(self.lines):
+                m = _INVARIANT_RE.search(self.lines[ln - 1])
+                if m:
+                    out |= {w.strip() for w in m.group(1).split(",")
+                            if w.strip()}
+        return out
+
+    def frees_of(self, fnode: ast.AST) -> set[str]:
+        """Closure frees (symtable) + default-expr frees of one def/lambda."""
+        name = getattr(fnode, "name", "lambda")
+        block = self.blocks.get((name, fnode.lineno))
+        frees = set(block.get_frees()) if block is not None else set()
+        return frees | _default_frees(fnode)
+
+
+def _stmt_bindings(stmt: ast.stmt) -> set[str]:
+    out: set[str] = set()
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        out.add(stmt.name)
+    elif isinstance(stmt, (ast.Import, ast.ImportFrom)):
+        for alias in stmt.names:
+            out.add((alias.asname or alias.name).split(".", 1)[0])
+    elif isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        for t in targets:
+            out.update(_bound_targets(t))
+    elif isinstance(stmt, (ast.If, ast.Try, ast.For, ast.While, ast.With)):
+        for sub in ast.iter_child_nodes(stmt):
+            if isinstance(sub, ast.stmt):
+                out |= _stmt_bindings(sub)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dataflow inside one function
+# ---------------------------------------------------------------------------
+
+class _Flow:
+    """Assignment dataflow of one function body: ``edges[target] = frees``
+    per binding (append/extend mutations included), supporting the backward
+    slice (what flows *into* an expression) and the forward closure (what
+    is fully *derived from* a seed set)."""
+
+    def __init__(self, fnode: ast.AST, mod: _Module):
+        self.mod = mod
+        self.edges: list[tuple[str, set[str]]] = []
+        self.local_defs: dict[str, ast.AST] = {}
+        for stmt in ast.walk(fnode):
+            if stmt is fnode:
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.local_defs[stmt.name] = stmt
+            elif isinstance(stmt, ast.Assign):
+                frees = _free_names(stmt.value)
+                for t in stmt.targets:
+                    for name in _bound_targets(t):
+                        self.edges.append((name, frees))
+            elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                if stmt.value is not None and isinstance(stmt.target, ast.Name):
+                    self.edges.append((stmt.target.id,
+                                       _free_names(stmt.value)))
+            elif isinstance(stmt, ast.For):
+                frees = _free_names(stmt.iter)
+                for name in _bound_targets(stmt.target):
+                    self.edges.append((name, frees))
+            elif isinstance(stmt, ast.NamedExpr):
+                if isinstance(stmt.target, ast.Name):
+                    self.edges.append((stmt.target.id,
+                                       _free_names(stmt.value)))
+            elif (isinstance(stmt, ast.Call)
+                  and isinstance(stmt.func, ast.Attribute)
+                  and stmt.func.attr in _MUTATORS
+                  and isinstance(stmt.func.value, ast.Name)):
+                frees: set[str] = set()
+                for a in stmt.args:
+                    frees |= _free_names(a)
+                self.edges.append((stmt.func.value.id, frees))
+
+    def _expand(self, names: set[str]) -> set[str]:
+        """Substitute local helper functions by their own free variables."""
+        out: set[str] = set()
+        seen: set[str] = set()
+        work = list(names)
+        while work:
+            n = work.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            if n in self.local_defs:
+                work.extend(self.mod.frees_of(self.local_defs[n]))
+            else:
+                out.add(n)
+        return out
+
+    def backward(self, roots: set[str]) -> set[str]:
+        covered = set(roots)
+        changed = True
+        while changed:
+            changed = False
+            for target, frees in self.edges:
+                if target in covered:
+                    new = self._expand(frees) - covered
+                    if new:
+                        covered |= new
+                        changed = True
+        return covered
+
+    def forward(self, seeds: set[str]) -> set[str]:
+        covered = set(seeds)
+        changed = True
+        while changed:
+            changed = False
+            for target, frees in self.edges:
+                if target not in covered and all(
+                        f in covered or self.mod.exempt(f)
+                        for f in self._expand(frees)):
+                    covered.add(target)
+                    changed = True
+        return covered
+
+    def covered(self, key_frees: set[str]) -> set[str]:
+        roots = self._expand(key_frees)
+        return self.backward(roots) | self.forward(roots)
+
+
+# ---------------------------------------------------------------------------
+# jit sites
+# ---------------------------------------------------------------------------
+
+def _is_jit_call(node: ast.Call) -> bool:
+    name = _dotted(node.func) or ""
+    return name.rsplit(".", 1)[-1] in {"jit", "pmap"}
+
+
+def _key_expr(fnode: ast.AST) -> ast.AST | None:
+    """The cache-key expression governing jit sites in ``fnode``: first arg
+    of ``<cache>.get(...)`` / ``<cache>[...]`` / ``self._cache_put(...)``."""
+    for n in ast.walk(fnode):
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute):
+            base = n.func
+            if (base.attr == "get" and n.args
+                    and isinstance(base.value, ast.Attribute)
+                    and base.value.attr in _CACHE_ATTRS):
+                return n.args[0]
+            if base.attr in _CACHE_PUTS and n.args:
+                return n.args[0]
+        if (isinstance(n, ast.Subscript)
+                and isinstance(n.value, ast.Attribute)
+                and n.value.attr in _CACHE_ATTRS):
+            return n.slice
+    return None
+
+
+def _lru_cached(fnode: ast.AST) -> bool:
+    for dec in getattr(fnode, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target) or ""
+        if name.rsplit(".", 1)[-1] == "lru_cache" or name == "cache":
+            return True
+    return False
+
+
+def _bind_call(call: ast.Call, fnode: ast.AST,
+               skip_self: bool) -> dict[str, ast.AST]:
+    """Map a call's argument expressions onto ``fnode``'s parameter names
+    (best-effort; *args/**kwargs splat args are left unmapped)."""
+    a = fnode.args
+    params = [x.arg for x in a.posonlyargs + a.args]
+    if skip_self and params and params[0] in {"self", "cls"}:
+        params = params[1:]
+    bound: dict[str, ast.AST] = {}
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            break
+        if i < len(params):
+            bound[params[i]] = arg
+    for kw in call.keywords:
+        if kw.arg is not None:
+            bound[kw.arg] = kw.value
+    return bound
+
+
+def _analyze_module(mod: _Module) -> list[Finding]:
+    findings: list[Finding] = []
+    # enclosing-function map for every node
+    parents: dict[ast.AST, ast.AST | None] = {}
+    stack: list[ast.AST] = []
+
+    def assign_parents(node, fn):
+        parents[node] = fn
+        for child in ast.iter_child_nodes(node):
+            assign_parents(
+                child,
+                node if isinstance(node, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)) else fn)
+
+    assign_parents(mod.tree, None)
+
+    # all function defs by name (for resolving call sites / jit args)
+    defs_by_name: dict[str, list[ast.AST]] = {}
+    for n in ast.walk(mod.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(n.name, []).append(n)
+
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and _is_jit_call(node)
+                and node.args):
+            continue
+        target = node.args[0]
+        if isinstance(target, (ast.Attribute,)):
+            continue  # jax.jit(module.fn): no closure, sound
+        if isinstance(target, ast.Name):
+            cands = [d for d in defs_by_name.get(target.id, [])
+                     if parents.get(d) is parents.get(node)]
+            if not cands:
+                if not mod.exempt(target.id):
+                    findings.append(Finding(
+                        _ANALYZER, "unkeyed-closure",
+                        f"jax.jit({target.id}) traces a callable this pass "
+                        "cannot resolve; its closure cannot be verified "
+                        "against the cache key",
+                        subject=target.id, file=mod.path, line=node.lineno,
+                        suggestion="jit a local def/lambda or a module "
+                                   "function"))
+                continue
+            traced = cands[-1]
+        elif isinstance(target, ast.Lambda):
+            traced = target
+        else:
+            continue
+
+        enclosing = parents.get(node)
+        waived = mod.waived(node.lineno) | mod.waived(traced.lineno)
+        frees = mod.frees_of(traced)
+        if enclosing is None:
+            # module-level jit: only module globals can be captured
+            leftover = {f for f in frees
+                        if not mod.exempt(f) and f not in waived}
+            for name in sorted(leftover):
+                findings.append(Finding(
+                    _ANALYZER, "unkeyed-closure",
+                    f"module-level jax.jit callable captures {name!r} which "
+                    "is not a module global",
+                    subject=name, file=mod.path, line=node.lineno))
+            continue
+
+        flow = _Flow(enclosing, mod)
+        if _lru_cached(enclosing):
+            key_frees: set[str] | None = set(_param_names(enclosing))
+        else:
+            kx = _key_expr(enclosing)
+            key_frees = None if kx is None else _free_names(kx)
+        if key_frees is None:
+            interesting = {f for f in frees if not mod.exempt(f)
+                           and f not in waived
+                           and f not in flow.local_defs}
+            if interesting:
+                findings.append(Finding(
+                    _ANALYZER, "missing-cache-key",
+                    f"jit site captures {sorted(interesting)} but no cache-"
+                    "key expression was found in the enclosing function "
+                    f"{enclosing.name!r}",
+                    subject=enclosing.name, file=mod.path, line=node.lineno,
+                    suggestion="store the program in a key-addressed cache "
+                               "whose key covers every captured static"))
+            continue
+
+        covered = flow.covered(key_frees)
+        uncovered = {f for f in flow._expand(frees)
+                     if f not in covered and not mod.exempt(f)
+                     and f not in waived}
+        enc_params = set(_param_names(enclosing))
+        via_params = uncovered & enc_params if key_frees & enc_params else set()
+        direct = uncovered - via_params
+        for name in sorted(direct):
+            findings.append(Finding(
+                _ANALYZER, "unkeyed-closure",
+                f"traced callable {getattr(traced, 'name', '<lambda>')!r} "
+                f"closes over {name!r}, which the cache key of "
+                f"{enclosing.name!r} does not cover — two calls differing "
+                f"only in {name!r} would share one compiled program",
+                subject=name, file=mod.path, line=node.lineno,
+                suggestion=f"include {name!r} (or a signature of it) in the "
+                           "cache key, or declare it with "
+                           f"# audit: invariant({name})"))
+
+        if via_params:
+            # the key is (partly) a parameter: verify every call site keys
+            # the uncovered parameters through its own key argument
+            key_params = key_frees & enc_params
+            sites = [c for c in ast.walk(mod.tree)
+                     if isinstance(c, ast.Call) and c is not node
+                     and (_dotted(c.func) or "").rsplit(".", 1)[-1]
+                     == enclosing.name]
+            if not sites:
+                for name in sorted(via_params):
+                    findings.append(Finding(
+                        _ANALYZER, "unkeyed-closure",
+                        f"compiled-program factory {enclosing.name!r} binds "
+                        f"parameter {name!r} into the trace with no call "
+                        "site to verify it is covered by the key argument",
+                        subject=name, file=mod.path, line=node.lineno))
+                continue
+            for call in sites:
+                caller = parents.get(call)
+                if caller is None:
+                    continue
+                cflow = _Flow(caller, mod)
+                bound = _bind_call(call, enclosing,
+                                   skip_self=isinstance(call.func,
+                                                        ast.Attribute))
+                kf: set[str] = set()
+                for p in key_params:
+                    if p in bound:
+                        kf |= _free_names(bound[p])
+                ccov = cflow.covered(kf) | set(_param_names(caller)) & set()
+                for name in sorted(via_params):
+                    arg = bound.get(name)
+                    if arg is None:
+                        continue  # default value: static at def time
+                    bad = {f for f in cflow._expand(_free_names(arg))
+                           if f not in ccov and not mod.exempt(f)
+                           and f not in mod.waived(call.lineno)}
+                    for f in sorted(bad):
+                        findings.append(Finding(
+                            _ANALYZER, "unkeyed-closure",
+                            f"call to {enclosing.name!r} at "
+                            f"{mod.path}:{call.lineno} feeds {f!r} into "
+                            f"traced parameter {name!r}, but the key "
+                            "argument's dataflow does not cover it",
+                            subject=f, file=mod.path, line=call.lineno,
+                            suggestion=f"fold {f!r} (or a signature of it) "
+                                       "into the cache key built at this "
+                                       "call site"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def analyze_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Analyze one module's source text (used by the fixture tests)."""
+    return _analyze_module(_Module(source, path))
+
+
+def analyze_jit_keys(src_root: str | Path | None = None,
+                     targets: tuple = _DEFAULT_TARGETS) -> list[Finding]:
+    """Analyze the compiled-program modules (engine + streaming jit
+    caches) for under-keyed traced closures."""
+    if src_root is None:
+        src_root = Path(__file__).resolve().parent.parent
+    src_root = Path(src_root)
+    findings: list[Finding] = []
+    for rel in targets:
+        py = src_root / rel
+        if not py.exists():
+            findings.append(Finding(
+                _ANALYZER, "missing-target",
+                f"expected compiled-program module {rel} is absent",
+                subject=rel))
+            continue
+        path = str(py.relative_to(src_root.parent.parent))
+        findings.extend(analyze_source(py.read_text(), path))
+    return findings

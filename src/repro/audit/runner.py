@@ -1,0 +1,86 @@
+"""Audit runner + CLI: ``python -m repro.audit [--json AUDIT.json]``.
+
+Runs the four analyzers (registry completeness, int-width bounds,
+trace-safety lint, jit-cache-key soundness), prints findings, writes the
+machine-readable report (findings + per-scheme safe-size table) when asked,
+and exits non-zero iff there is at least one finding — the contract the CI
+``audit`` job gates on.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .findings import AuditReport
+from .intwidth import DEFAULT_ENVELOPE, Envelope, analyze_int_width, safe_size_table
+from .jitkeys import analyze_jit_keys
+from .registry import analyze_registry
+from .tracesafety import analyze_trace_safety
+
+
+def run_audit(env: Envelope = DEFAULT_ENVELOPE, *,
+              analyzers: tuple = ("registry", "intwidth", "trace",
+                                  "jitkey")) -> AuditReport:
+    """Run the selected analyzers against the live repo; returns the full
+    report (the safe-size table is attached even when intwidth is clean)."""
+    report = AuditReport()
+    if "registry" in analyzers:
+        report.extend(analyze_registry())
+    if "intwidth" in analyzers:
+        report.extend(analyze_int_width(env))
+        report.safe_sizes = safe_size_table(env)
+    if "trace" in analyzers:
+        report.extend(analyze_trace_safety())
+    if "jitkey" in analyzers:
+        report.extend(analyze_jit_keys())
+    return report
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.audit",
+        description="Static invariant audit for the homomorphic pipeline "
+                    "(DESIGN.md §11).")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="write the full machine-readable report "
+                             "(findings + per-scheme safe-size table)")
+    parser.add_argument("--analyzer", action="append", default=None,
+                        choices=["registry", "intwidth", "trace", "jitkey"],
+                        help="run only the named analyzer(s); default: all")
+    parser.add_argument("--q-bits", type=int,
+                        default=DEFAULT_ENVELOPE.q_bits,
+                        help="envelope: quantization index magnitude bits")
+    parser.add_argument("--max-field-elems", type=int,
+                        default=DEFAULT_ENVELOPE.max_field_elems,
+                        help="envelope: largest spatial field (elements)")
+    parser.add_argument("--max-slab-steps", type=int,
+                        default=DEFAULT_ENVELOPE.max_slab_steps,
+                        help="envelope: most timesteps in one stream")
+    args = parser.parse_args(argv)
+
+    env = Envelope(q_bits=args.q_bits,
+                   max_field_elems=args.max_field_elems,
+                   max_slab_steps=args.max_slab_steps)
+    analyzers = tuple(args.analyzer) if args.analyzer else (
+        "registry", "intwidth", "trace", "jitkey")
+    report = run_audit(env, analyzers=analyzers)
+
+    for f in report.findings:
+        print(f.render())
+    counts = report.to_dict()["findings_by_analyzer"]
+    ran = ", ".join(analyzers)
+    if report.ok:
+        print(f"audit clean: 0 findings ({ran})")
+    else:
+        per = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+        print(f"audit FAILED: {len(report.findings)} finding(s) [{per}]")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report.to_dict(), fh, indent=2, sort_keys=False)
+        print(f"report written to {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,372 @@
+"""Analyzer (3): trace-safety lint (DESIGN.md §11).
+
+An AST pass over ``core/``, ``analytics/``, ``stream/``, ``store/`` that
+finds *host syncs* and *Python branches on traced values* inside code that
+runs under a jax trace — the two mistakes that either crash at trace time
+(``TracerBoolConversionError``, far from the cause) or silently destroy
+the engine's compile-once guarantee by forcing a device round-trip per
+call.
+
+What counts as trace scope
+--------------------------
+* functions decorated with / passed to ``jax.jit`` / ``jax.vmap`` (also
+  ``lax.cond``/``scan``/``while_loop``/``fori_loop`` branches), including
+  lambdas and nested ``def``\\ s inside such functions — the engine's
+  compiled-program pattern;
+* operator lowering rules: functions whose first parameter is ``ctx`` /
+  ``ctxs`` (the :class:`~repro.core.oplib.OpSpec` rule convention) — they
+  execute inside the engine's jitted programs.
+
+What is flagged
+---------------
+* ``host-sync`` — ``.item()`` / ``.tolist()`` anywhere in trace scope;
+  ``float()`` / ``int()`` / ``bool()`` whose argument is not provably
+  static (shapes, ``len``, dtypes, constants are exempt); ``np.asarray`` /
+  ``np.array`` on non-static values.
+* ``tracer-branch`` — ``if`` / ``while`` / ternary tests that reference a
+  value the local dataflow marks *array-derived*: produced by a
+  ``jnp.*`` / ``jax.*`` call or an array-annotated parameter.  Branches on
+  static structure (``ctx.plan is None``, ``scheme.is_nd``,
+  ``n_components == 2``) are legal and not flagged.
+
+Waivers
+-------
+The documented host-sync lifts (PR 1: ``max_bits``, padding probes) are
+eager-ingest code, outside trace scope, and need no waiver.  A deliberate
+exception *inside* trace scope is waived with a comment on the same line
+or the line above::
+
+    x = arr.item()  # audit: waive(host-sync) <why this is safe>
+
+The waiver names the invariant it suppresses; unwaivable findings are a
+design smell, not a lint inconvenience.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from .findings import Finding
+
+_ANALYZER = "trace"
+
+#: attribute names that read static structure, never traced data.
+_STATIC_ATTRS = frozenset({
+    "shape", "ndim", "size", "itemsize", "nbytes", "dtype", "name",
+})
+_CAST_CALLS = frozenset({"float", "int", "bool"})
+_SYNC_METHODS = frozenset({"item", "tolist"})
+_NUMPY_NAMES = frozenset({"np", "numpy", "onp"})
+_ARRAY_ANNOTATIONS = re.compile(
+    r"\b(jax\s*\.\s*Array|jnp\s*\.\s*ndarray|Array|ArrayLike)\b")
+_TRACED_MODULES = frozenset({"jnp", "jax", "lax"})
+_WAIVE_RE = re.compile(r"#\s*audit:\s*waive\(([a-z\-,\s]+)\)")
+
+_DEFAULT_ROOTS = ("core", "analytics", "stream", "store")
+
+
+def _waivers(source: str) -> dict[int, set[str]]:
+    """Line → waived invariant names; a waiver covers its own line and the
+    one below (comment-above style)."""
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVE_RE.search(line)
+        if m:
+            names = {w.strip() for w in m.group(1).split(",") if w.strip()}
+            out.setdefault(i, set()).update(names)
+            out.setdefault(i + 1, set()).update(names)
+    return out
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for a pure attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_static_expr(node: ast.AST) -> bool:
+    """Provably static under a trace: constants, shapes/dtypes, len(),
+    and arithmetic/subscripts thereof."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Attribute):
+        # any chain that *passes through* a static attribute is static
+        # (x.shape, x.shape[0] handled via Subscript, x.dtype.itemsize)
+        n = node
+        while isinstance(n, ast.Attribute):
+            if n.attr in _STATIC_ATTRS:
+                return True
+            n = n.value
+        return False
+    if isinstance(node, ast.Subscript):
+        return _is_static_expr(node.value)
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id == "len":
+            return True
+        if isinstance(node.func, ast.Name) and node.func.id in _CAST_CALLS:
+            return all(_is_static_expr(a) for a in node.args)
+        return False
+    if isinstance(node, ast.BinOp):
+        return _is_static_expr(node.left) and _is_static_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static_expr(node.operand)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_static_expr(e) for e in node.elts)
+    return False
+
+
+def _array_annotated(arg: ast.arg) -> bool:
+    if arg.annotation is None:
+        return False
+    try:
+        text = ast.unparse(arg.annotation)
+    except Exception:  # pragma: no cover - unparse is total on 3.9+
+        return False
+    return bool(_ARRAY_ANNOTATIONS.search(text))
+
+
+class _ScopeIndex(ast.NodeVisitor):
+    """First pass: find the trace-scope root functions of a module."""
+
+    def __init__(self):
+        self.roots: set[ast.AST] = set()
+        self._defs: list[dict[str, ast.AST]] = [{}]
+        self._stack: list[ast.AST] = []
+
+    # -- helpers ------------------------------------------------------------
+    def _jitlike(self, func: ast.AST) -> bool:
+        name = _dotted(func) or ""
+        leaf = name.rsplit(".", 1)[-1]
+        return (leaf in {"jit", "vmap", "pmap"}
+                or name in {"lax.cond", "jax.lax.cond", "lax.scan",
+                            "jax.lax.scan", "lax.while_loop",
+                            "jax.lax.while_loop", "lax.fori_loop",
+                            "jax.lax.fori_loop", "lax.switch",
+                            "jax.lax.switch", "lax.map", "jax.lax.map"})
+
+    def _mark(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            self.roots.add(node)
+        elif isinstance(node, ast.Name):
+            for scope in reversed(self._defs):
+                if node.id in scope:
+                    self.roots.add(scope[node.id])
+                    return
+
+    # -- visitors -----------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        if self._jitlike(node.func):
+            for arg in node.args:
+                self._mark(arg)
+        self.generic_visit(node)
+
+    def _visit_def(self, node):
+        self._defs[-1][node.name] = node
+        args = node.args.posonlyargs + node.args.args
+        first = args[0].arg if args else ""
+        if first in {"ctx", "ctxs"}:
+            self.roots.add(node)  # lowering-rule convention
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if self._jitlike(target) or any(
+                    self._jitlike(a) for a in getattr(dec, "args", [])):
+                self.roots.add(node)
+        self._defs.append({})
+        self._stack.append(node)
+        self.generic_visit(node)
+        self._stack.pop()
+        self._defs.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+
+class _TraceLint(ast.NodeVisitor):
+    """Second pass: within one trace-scope root, track array-derived names
+    and flag host syncs / tracer branches."""
+
+    def __init__(self, path: str, root_name: str, waivers: dict[int, set[str]]):
+        self.path = path
+        self.root_name = root_name
+        self.waivers = waivers
+        self.derived: set[str] = set()
+        self.findings: list[Finding] = []
+
+    # -- array-derivation dataflow ------------------------------------------
+    def _is_array_expr(self, node: ast.AST) -> bool:
+        if _is_static_expr(node):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.derived
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func) or ""
+            head = name.split(".", 1)[0]
+            if head in _TRACED_MODULES:
+                return True
+            return any(self._is_array_expr(a) for a in node.args)
+        if isinstance(node, ast.BinOp):
+            return (self._is_array_expr(node.left)
+                    or self._is_array_expr(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self._is_array_expr(node.operand)
+        if isinstance(node, ast.Compare):
+            # identity tests (`is None`) are static dispatch, not data
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self._is_array_expr(node.left)
+                    or any(self._is_array_expr(c) for c in node.comparators))
+        if isinstance(node, ast.BoolOp):
+            return any(self._is_array_expr(v) for v in node.values)
+        if isinstance(node, ast.Subscript):
+            return self._is_array_expr(node.value)
+        if isinstance(node, ast.Attribute):
+            if _is_static_expr(node):
+                return False
+            return self._is_array_expr(node.value)
+        if isinstance(node, ast.IfExp):
+            return (self._is_array_expr(node.body)
+                    or self._is_array_expr(node.orelse))
+        return False
+
+    def visit_Assign(self, node: ast.Assign):
+        self.generic_visit(node)
+        if self._is_array_expr(node.value):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        self.derived.add(n.id)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self.generic_visit(node)
+        if self._is_array_expr(node.value) and isinstance(node.target, ast.Name):
+            self.derived.add(node.target.id)
+
+    # -- findings -----------------------------------------------------------
+    def _waived(self, line: int, invariant: str) -> bool:
+        return invariant in self.waivers.get(line, ())
+
+    def _flag(self, node: ast.AST, invariant: str, message: str,
+              suggestion: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if self._waived(line, invariant):
+            return
+        self.findings.append(Finding(
+            _ANALYZER, invariant, message,
+            subject=self.root_name, file=self.path, line=line,
+            suggestion=suggestion))
+
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func) or ""
+        leaf = name.rsplit(".", 1)[-1]
+        if isinstance(node.func, ast.Attribute) and leaf in _SYNC_METHODS:
+            self._flag(node, "host-sync",
+                       f".{leaf}() forces a device->host sync under trace",
+                       "return the array and reduce on device, or lift the "
+                       "sync out of the traced region "
+                       "(# audit: waive(host-sync) if deliberate)")
+        elif (isinstance(node.func, ast.Name)
+              and node.func.id in _CAST_CALLS and node.args
+              and not all(_is_static_expr(a) for a in node.args)):
+            self._flag(node, "host-sync",
+                       f"{node.func.id}() on a possibly-traced value "
+                       "concretizes it (host sync / TracerConversionError)",
+                       "cast with .astype()/jnp on device; shapes, len() "
+                       "and dtypes are exempt "
+                       "(# audit: waive(host-sync) if deliberate)")
+        elif (name.split(".", 1)[0] in _NUMPY_NAMES
+              and leaf in {"asarray", "array"} and node.args
+              and not all(_is_static_expr(a) for a in node.args)):
+            self._flag(node, "host-sync",
+                       f"{name}() pulls a traced value to host numpy",
+                       "use jnp inside traced code; numpy belongs to eager "
+                       "ingest/metadata paths "
+                       "(# audit: waive(host-sync) if deliberate)")
+        self.generic_visit(node)
+
+    def _check_branch(self, node: ast.AST, test: ast.AST, kind: str):
+        if self._is_array_expr(test):
+            self._flag(node, "tracer-branch",
+                       f"{kind} on an array-derived value inside a traced "
+                       "region (TracerBoolConversionError at trace time)",
+                       "use jnp.where / lax.cond / lax.select; branch only "
+                       "on static structure "
+                       "(# audit: waive(tracer-branch) if deliberate)")
+
+    def visit_If(self, node: ast.If):
+        self._check_branch(node, node.test, "`if` branch")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While):
+        self._check_branch(node, node.test, "`while` loop")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp):
+        self._check_branch(node, node.test, "conditional expression")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert):
+        self._check_branch(node, node.test, "`assert`")
+        self.generic_visit(node)
+
+
+def _lint_root(path: str, root: ast.AST,
+               waivers: dict[int, set[str]]) -> list[Finding]:
+    name = getattr(root, "name", "<lambda>")
+    lint = _TraceLint(path, name, waivers)
+    args = getattr(root, "args", None)
+    if args is not None:
+        # ctx/ctxs themselves are mixed containers (static structure +
+        # traced data): branching on their structure is legal, so only
+        # array-annotated params seed the derived set; traced data inside
+        # ctx surfaces through jnp.* calls in the dataflow.
+        for arg in args.posonlyargs + args.args + args.kwonlyargs:
+            if _array_annotated(arg):
+                lint.derived.add(arg.arg)
+        if isinstance(root, ast.Lambda):
+            # a jitted lambda's positional params are traced by definition
+            for arg in args.args:
+                lint.derived.add(arg.arg)
+    body = root.body if isinstance(root.body, list) else [root.body]
+    for stmt in body:
+        lint.visit(stmt)
+    return lint.findings
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Lint one module's source text; returns findings (used directly by
+    the fixture tests)."""
+    tree = ast.parse(source)
+    index = _ScopeIndex()
+    index.visit(tree)
+    waivers = _waivers(source)
+    findings: list[Finding] = []
+    seen: set[tuple] = set()
+    for root in sorted(index.roots, key=lambda r: r.lineno):
+        for f in _lint_root(path, root, waivers):
+            key = (f.file, f.line, f.invariant, f.message)
+            if key not in seen:
+                seen.add(key)
+                findings.append(f)
+    return findings
+
+
+def analyze_trace_safety(src_root: str | Path | None = None,
+                         packages: tuple = _DEFAULT_ROOTS) -> list[Finding]:
+    """Lint every module under ``src/repro/{core,analytics,stream,store}``."""
+    if src_root is None:
+        src_root = Path(__file__).resolve().parent.parent
+    src_root = Path(src_root)
+    findings: list[Finding] = []
+    for pkg in packages:
+        for py in sorted((src_root / pkg).rglob("*.py")):
+            rel = str(py.relative_to(src_root.parent.parent))
+            findings.extend(lint_source(py.read_text(), rel))
+    return findings

@@ -23,7 +23,7 @@ gradients — O(n_blocks) work, no decompression.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -105,7 +105,7 @@ def packed_allgather(x: jax.Array, axis: str, bits: int) -> jax.Array:
 # stage-① telemetry (paper §V-A.1 applied to gradients)
 # ---------------------------------------------------------------------------
 
-def stage1_stats(grads, block: int = 4096) -> Dict[str, jax.Array]:
+def stage1_stats(grads, block: int = 4096) -> dict[str, jax.Array]:
     """Metadata-only gradient statistics: global mean and 2nd moment derived
     from per-block sums (the paper's D_m), never touching full precision."""
     total, total_sq, count = 0.0, 0.0, 0

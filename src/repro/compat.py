@@ -7,14 +7,13 @@ releases (>= 0.4.3x) where the same functionality lives under
 """
 from __future__ import annotations
 
-from typing import Optional, Set
 
 import jax
 
 
 def shard_map(f, *, mesh, in_specs, out_specs,
-              axis_names: Optional[Set[str]] = None,
-              check: Optional[bool] = None):
+              axis_names: set[str] | None = None,
+              check: bool | None = None):
     """``jax.shard_map`` with manual axes ``axis_names`` (all axes if None).
 
     ``check=None`` keeps the upstream default (replication checking ON) —

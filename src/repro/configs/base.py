@@ -9,7 +9,6 @@ small dims) — full configs are only ever lowered via the dry-run
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -24,7 +23,7 @@ class ArchConfig:
     n_kv: int
     d_ff: int
     vocab: int
-    head_dim: Optional[int] = None
+    head_dim: int | None = None
     qk_norm: bool = False
     act: str = "silu"
     rope_theta: float = 10000.0
@@ -50,7 +49,7 @@ class ArchConfig:
     d_conv: int = 4
     expand: int = 2
     # --- hybrid (recurrentgemma) ---
-    window: Optional[int] = None
+    window: int | None = None
     lru_width: int = 0
     # --- enc-dec (whisper) ---
     enc_layers: int = 0
@@ -131,7 +130,7 @@ SHAPES = {
 }
 
 
-def cell_supported(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+def cell_supported(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """Whether an (arch × shape) cell is defined (DESIGN.md §4)."""
     if shape.name == "long_500k" and not arch.subquadratic:
         return False, "pure full-attention arch: O(S^2) at 524288 has no sub-quadratic path"

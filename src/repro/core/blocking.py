@@ -6,15 +6,15 @@ viewed either *spatially* (padded n-D layout — natural for stencils) or
 Both views are cheap reshape/transpose; XLA fuses them away.
 """
 from __future__ import annotations
+from collections.abc import Sequence
 
-from typing import Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 
-def padded_shape(shape: Sequence[int], block: Sequence[int]) -> Tuple[int, ...]:
+def padded_shape(shape: Sequence[int], block: Sequence[int]) -> tuple[int, ...]:
     return tuple(-(-s // b) * b for s, b in zip(shape, block))
 
 
@@ -66,7 +66,7 @@ def from_blocked(x: jax.Array, block: Sequence[int]) -> jax.Array:
     return x.reshape(tuple(g * b for g, b in zip(grid, block)))
 
 
-def block_grid(shape: Sequence[int], block: Sequence[int]) -> Tuple[int, ...]:
+def block_grid(shape: Sequence[int], block: Sequence[int]) -> tuple[int, ...]:
     return tuple(p // b for p, b in zip(padded_shape(shape, block), block))
 
 

@@ -18,8 +18,7 @@ homomorphic algorithms of §V possible — and what makes compressed-domain
 gradient accumulation valid (``repro.comm``).
 """
 from __future__ import annotations
-
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp

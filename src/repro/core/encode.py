@@ -20,7 +20,6 @@ Two packers are provided:
 from __future__ import annotations
 
 import struct
-from typing import Tuple
 
 import numpy as np
 import jax
@@ -52,7 +51,7 @@ def unzigzag(u: jax.Array) -> jax.Array:
 # per-block exact bitwidths (size accounting / serialization)
 # ---------------------------------------------------------------------------
 
-def bitwidth_per_block(residuals: jax.Array, block: Tuple[int, ...]) -> jax.Array:
+def bitwidth_per_block(residuals: jax.Array, block: tuple[int, ...]) -> jax.Array:
     """Exact fixed-rate width (bits/value, sign incl.) per block, grid order."""
     u = zigzag(residuals)
     blocked = blocking.to_blocked(u, block)

@@ -35,16 +35,17 @@ float tails — so every root is bit-identical to composing the single-op
 results at the same stage.
 """
 from __future__ import annotations
+from collections.abc import Callable, Sequence
 
 import hashlib
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any
 
 from . import oplib
 from . import region as R
 from .stages import Compressed, Encoded, Scheme, Stage
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
 
 __all__ = [
     "Expr", "Leaf", "Op", "Add", "Sub", "Scale", "ExprProgram",
@@ -94,7 +95,7 @@ class Expr:
         return Scale(self, -1.0)
 
 
-def _source_key(src) -> Tuple:
+def _source_key(src) -> tuple:
     return ("id", src) if isinstance(src, str) else ("obj", id(src))
 
 
@@ -150,7 +151,7 @@ class Leaf(Expr):
         return "field"
 
     @property
-    def key(self) -> Tuple:
+    def key(self) -> tuple:
         """Binding key: equal keys share one slot (one prelude) in a
         program.  Ids compare by name; raw containers by object identity."""
         if self.kind == "vector":
@@ -349,7 +350,7 @@ def tstd(x) -> Op:
 # traversal / canonicalization
 # ===========================================================================
 
-def _children(node: Expr) -> Tuple[Expr, ...]:
+def _children(node: Expr) -> tuple[Expr, ...]:
     if isinstance(node, Op):
         return (node.operand,)
     if isinstance(node, (Add, Sub)):
@@ -360,15 +361,15 @@ def _children(node: Expr) -> Tuple[Expr, ...]:
 
 
 def _postorder(roots: Sequence[Expr],
-               child_order: Optional[Callable] = None) -> List[Expr]:
+               child_order: Callable | None = None) -> list[Expr]:
     """Iterative post-order over the DAG (each node once), with cycle
     detection.  Nodes are immutable, so a cycle cannot normally be built —
     the check guards against ``object.__setattr__`` surgery and keeps the
     failure mode a clear error instead of an infinite trace."""
     order = child_order or _children
-    state: Dict[int, int] = {}  # id -> 0 visiting, 1 done
-    out: List[Expr] = []
-    stack: List[Tuple[Expr, bool]] = [(r, False) for r in reversed(roots)]
+    state: dict[int, int] = {}  # id -> 0 visiting, 1 done
+    out: list[Expr] = []
+    stack: list[tuple[Expr, bool]] = [(r, False) for r in reversed(roots)]
     while stack:
         node, processed = stack.pop()
         st = state.get(id(node))
@@ -391,16 +392,16 @@ def _postorder(roots: Sequence[Expr],
     return out
 
 
-def _content_sigs(roots: Sequence[Expr]) -> Dict[int, Tuple]:
+def _content_sigs(roots: Sequence[Expr]) -> dict[int, tuple]:
     """Binding-aware structural signature per node — used only to pick the
     canonical ``add`` child order, so ``x + y`` and ``y + x`` canonicalize
     to one slot assignment (and hence one structural hash)."""
-    sigs: Dict[int, Tuple] = {}
+    sigs: dict[int, tuple] = {}
     for node in _postorder(roots):
         if id(node) in sigs:
             continue
         if isinstance(node, Leaf):
-            s: Tuple = ("L",) + node.key
+            s: tuple = ("L",) + node.key
         elif isinstance(node, Op):
             s = ("O", node.name, node.axis, sigs[id(node.operand)])
         elif isinstance(node, Add):
@@ -427,15 +428,15 @@ class ExprProgram:
     stage-compatible plan, while independent roots plan independently.
     """
 
-    roots: Tuple[Expr, ...]
-    leaves: Tuple[Leaf, ...]
-    leaf_keys: Tuple[Tuple, ...]
+    roots: tuple[Expr, ...]
+    leaves: tuple[Leaf, ...]
+    leaf_keys: tuple[tuple, ...]
     key: str
-    serials: Dict[int, str]            # id(node) -> canonical serialization
-    op_nodes: Tuple[Op, ...]           # unique op nodes, canonical order
-    op_slots: Tuple[int, ...]          # operand slot per op node
-    leaf_component: Tuple[int, ...]
-    root_component: Tuple[int, ...]
+    serials: dict[int, str]            # id(node) -> canonical serialization
+    op_nodes: tuple[Op, ...]           # unique op nodes, canonical order
+    op_slots: tuple[int, ...]          # operand slot per op node
+    leaf_component: tuple[int, ...]
+    root_component: tuple[int, ...]
     n_components: int
 
     def slot_of(self, lf: Leaf) -> int:
@@ -444,14 +445,14 @@ class ExprProgram:
     def serial(self, node: Expr) -> str:
         return self.serials[id(node)]
 
-    def component_ops(self, comp: int) -> Tuple[Tuple[str, int, int], ...]:
+    def component_ops(self, comp: int) -> tuple[tuple[str, int, int], ...]:
         """Unique ``(op name, axis, leaf slot)`` applications inside one
         connected component — the planner's feasibility/cost unit."""
         return tuple((n.name, n.axis, s)
                      for n, s in zip(self.op_nodes, self.op_slots)
                      if self.leaf_component[s] == comp)
 
-    def leaf_consumers(self, slot: int) -> Tuple[Tuple[str, int], ...]:
+    def leaf_consumers(self, slot: int) -> tuple[tuple[str, int], ...]:
         """Unique ``(op name, axis)`` pairs consuming one leaf slot — the
         closure-join input."""
         return tuple((n.name, n.axis)
@@ -459,7 +460,7 @@ class ExprProgram:
                      if s == slot)
 
     @property
-    def temporal_nodes(self) -> Tuple[Op, ...]:
+    def temporal_nodes(self) -> tuple[Op, ...]:
         return tuple(n for n in self.op_nodes if n.spec.arity == "temporal")
 
     def leaf_is_temporal(self, slot: int) -> bool:
@@ -487,7 +488,7 @@ def analyze(roots: Sequence[Expr]) -> ExprProgram:
                 "(e.g. expr.mean(leaf))")
     sigs = _content_sigs(roots)  # also the cycle check
 
-    def canonical_children(node: Expr) -> Tuple[Expr, ...]:
+    def canonical_children(node: Expr) -> tuple[Expr, ...]:
         if isinstance(node, Add):
             return tuple(sorted((node.a, node.b),
                                 key=lambda n: repr(sigs[id(n)])))
@@ -495,12 +496,12 @@ def analyze(roots: Sequence[Expr]) -> ExprProgram:
 
     order = _postorder(roots, canonical_children)
 
-    slot_by_key: Dict[Tuple, int] = {}
-    leaves: List[Leaf] = []
-    serials: Dict[int, str] = {}
-    op_nodes: List[Op] = []
-    op_slots: List[int] = []
-    seen_ops: Dict[str, int] = {}
+    slot_by_key: dict[tuple, int] = {}
+    leaves: list[Leaf] = []
+    serials: dict[int, str] = {}
+    op_nodes: list[Op] = []
+    op_slots: list[int] = []
+    seen_ops: dict[str, int] = {}
     for node in order:
         if isinstance(node, Leaf):
             k = node.key
@@ -545,7 +546,7 @@ def analyze(roots: Sequence[Expr]) -> ExprProgram:
             i = parent[i]
         return i
 
-    root_slots: List[List[int]] = []
+    root_slots: list[list[int]] = []
     for r in roots:
         slots = sorted({slot_by_key[n.key] for n in _postorder([r])
                         if isinstance(n, Leaf)})
@@ -553,7 +554,7 @@ def analyze(roots: Sequence[Expr]) -> ExprProgram:
         for s in slots[1:]:
             parent[find(slots[0])] = find(s)
 
-    comp_ids: Dict[int, int] = {}
+    comp_ids: dict[int, int] = {}
     leaf_component = []
     for slot in range(len(leaves)):
         rep = find(slot)
@@ -589,7 +590,7 @@ def leaf_closure(program: ExprProgram, slot: int, scheme: Scheme,
 
 def vector_closures(program: ExprProgram, slot: int,
                     schemes: Sequence[Scheme],
-                    stage: Stage) -> Tuple[R.Closure, ...]:
+                    stage: Stage) -> tuple[R.Closure, ...]:
     """Per-component joined closures of a bundle leaf across every vector
     op consuming it (mirrors :func:`repro.core.oplib.component_closures`,
     but joined over the *expression's* consumer set)."""
@@ -609,7 +610,7 @@ def vector_closures(program: ExprProgram, slot: int,
 # bound validation (shape compatibility) and evaluation
 # ===========================================================================
 
-def _window_shape(shape: Tuple[int, ...], region) -> Tuple[int, ...]:
+def _window_shape(shape: tuple[int, ...], region) -> tuple[int, ...]:
     if region is None:
         return tuple(shape)
     norm = R.normalize_region(region, shape)
@@ -622,9 +623,9 @@ def validate_bound(program: ExprProgram, bindings: Sequence,
     agree in result shape (statistics are scalars and broadcast; stencil and
     temporal results must match elementwise).  Catches e.g. vorticity from
     differently-shaped u and v before any device work."""
-    shapes: Dict[str, Optional[Tuple[int, ...]]] = {}
+    shapes: dict[str, tuple[int, ...] | None] = {}
 
-    def op_shape(node: Op) -> Optional[Tuple[int, ...]]:
+    def op_shape(node: Op) -> tuple[int, ...] | None:
         slot = program.slot_of(node.operand)
         b = bindings[slot]
         if node.spec.category == "statistic":
@@ -658,8 +659,8 @@ def validate_bound(program: ExprProgram, bindings: Sequence,
 
 def lower(program: ExprProgram, bindings: Sequence,
           stages: Sequence[Stage], *, region=None,
-          seeds: Optional[Sequence] = None,
-          precomputed: Optional[Dict[str, Any]] = None) -> Tuple:
+          seeds: Sequence | None = None,
+          precomputed: dict[str, Any] | None = None) -> tuple:
     """Evaluate a bound program: one shared prelude per leaf slot.
 
     ``bindings[slot]`` is the resolved field (or component tuple) for each
@@ -673,7 +674,7 @@ def lower(program: ExprProgram, bindings: Sequence,
     """
     seeds = list(seeds) if seeds is not None else [None] * len(bindings)
     precomputed = precomputed or {}
-    ctxs: Dict[int, Any] = {}
+    ctxs: dict[int, Any] = {}
 
     def ctx_for(slot: int):
         if slot not in ctxs:
@@ -718,7 +719,7 @@ def lower(program: ExprProgram, bindings: Sequence,
         rule = spec.lower.get((stage, family)) or spec.lower[(stage, "any")]
         return rule(ctx, node.axis)
 
-    memo: Dict[str, Any] = dict(precomputed)
+    memo: dict[str, Any] = dict(precomputed)
     for node in _postorder(program.roots):
         s = program.serial(node)
         if s in memo or isinstance(node, Leaf):

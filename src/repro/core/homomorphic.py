@@ -35,8 +35,7 @@ window interior.  The full-field path *is* the region path with
 ``region=None``; there are no duplicate implementations.
 """
 from __future__ import annotations
-
-from typing import Optional, Sequence, Union
+from collections.abc import Sequence
 
 import jax
 
@@ -44,52 +43,52 @@ from . import oplib
 from . import region as R
 from .stages import Compressed, Encoded, Stage
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
 
 #: fused lowering entry point (see :func:`repro.core.oplib.compute`).
 compute = oplib.compute
 
 
 def mean(c: Field, stage: Stage,
-         *, region: Optional[R.RegionSpec] = None) -> jax.Array:
+         *, region: R.RegionSpec | None = None) -> jax.Array:
     """Field mean at a given decompression stage (optionally over a region)."""
     return oplib.compute(c, "mean", stage, region=region)["mean"]
 
 
 def std(c: Field, stage: Stage,
-        *, region: Optional[R.RegionSpec] = None) -> jax.Array:
+        *, region: R.RegionSpec | None = None) -> jax.Array:
     """Sample standard deviation at a given stage (paper §V-A.2)."""
     return oplib.compute(c, "std", stage, region=region)["std"]
 
 
 def derivative(c: Field, stage: Stage, axis: int,
-               *, region: Optional[R.RegionSpec] = None) -> jax.Array:
+               *, region: R.RegionSpec | None = None) -> jax.Array:
     """Central difference along ``axis`` on the common interior (III-B.2)."""
     return oplib.compute(c, "derivative", stage, axis=axis,
                          region=region)["derivative"]
 
 
 def gradient(c: Field, stage: Stage,
-             *, region: Optional[R.RegionSpec] = None) -> tuple:
+             *, region: R.RegionSpec | None = None) -> tuple:
     """All-axis central differences sharing one stage reconstruction."""
     return oplib.compute(c, "gradient", stage, region=region)["gradient"]
 
 
 def laplacian(c: Field, stage: Stage,
-              *, region: Optional[R.RegionSpec] = None) -> jax.Array:
+              *, region: R.RegionSpec | None = None) -> jax.Array:
     """2nd-order Laplacian stencil on the common interior (III-B.3)."""
     return oplib.compute(c, "laplacian", stage, region=region)["laplacian"]
 
 
 def divergence(components: Sequence[Field], stage: Stage,
-               *, region: Optional[R.RegionSpec] = None) -> jax.Array:
+               *, region: R.RegionSpec | None = None) -> jax.Array:
     """div F = sum_a  d(F_a)/d(x_a)  on the common interior (V-C.1/2)."""
     return oplib.compute(list(components), "divergence", stage,
                          region=region)["divergence"]
 
 
 def curl(components: Sequence[Field], stage: Stage,
-         *, region: Optional[R.RegionSpec] = None):
+         *, region: R.RegionSpec | None = None):
     """2-D: scalar dv/dx - du/dy (paper V-C.3 with (x,y)=(axis0,axis1));
     3-D: the full vector curl.  Pinned by the rigid-rotation oracle
     (u=-y, v=x has curl exactly +2) in ``tests/test_oracle_fields.py``."""

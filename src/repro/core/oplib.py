@@ -36,10 +36,10 @@ of an appended stream (``tdelta``, running ``tmean``/``tmin``/``tmax``/
 merged homomorphically (:func:`merge_summaries`).
 """
 from __future__ import annotations
+from collections.abc import Callable, Mapping, Sequence
 
 from dataclasses import dataclass, field as dc_field
 from functools import cached_property, partial
-from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 import jax
@@ -51,7 +51,7 @@ from . import region as R
 from .pipeline import HSZCompressor, UnsupportedStageError, by_name
 from .stages import (Compressed, Encoded, Scheme, Stage, _dataclass_pytree)
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
 
 
 # ===========================================================================
@@ -76,7 +76,7 @@ def join_closures(closures: Sequence[R.Closure]) -> R.Closure:
     return "hull"
 
 
-def set_closure(ops: Union[str, Sequence[str]], scheme: Scheme, stage: Stage,
+def set_closure(ops: str | Sequence[str], scheme: Scheme, stage: Stage,
                 axis: int = 0) -> R.Closure:
     """Joined region dependency closure of a *field-arity* op set — the
     closure :func:`compute` reconstructs, hence the materialization key a
@@ -94,9 +94,9 @@ def set_closure(ops: Union[str, Sequence[str]], scheme: Scheme, stage: Stage,
         [OPS[n].closure(Scheme(scheme), Stage(stage), axis) for n in names])
 
 
-def component_closures(ops: Union[str, Sequence[str]],
+def component_closures(ops: str | Sequence[str],
                        schemes: Sequence[Scheme],
-                       stage: Stage) -> Tuple[R.Closure, ...]:
+                       stage: Stage) -> tuple[R.Closure, ...]:
     """Per-component joined closures of a *vector-arity* op set: each
     component's closure joins the derivative bands of every axis any op in
     the set differentiates it along."""
@@ -142,7 +142,7 @@ class StageContext:
         self.stage = Stage(stage)
         self.region = region
         self.closure = closure
-        self._axis_diffs: Dict[int, jax.Array] = {}
+        self._axis_diffs: dict[int, jax.Array] = {}
         if seed is not None:
             norm = (R.normalize_region(region, c.shape)
                     if region is not None else None)
@@ -169,7 +169,7 @@ class StageContext:
         return self.field.eps
 
     @cached_property
-    def plan(self) -> Optional[R.RegionPlan]:
+    def plan(self) -> R.RegionPlan | None:
         if self.region is None:
             return None
         return R.plan_region(self.field, self.region, self.closure)
@@ -216,7 +216,7 @@ class StageContext:
 
     # -- windowing / masking helpers ----------------------------------------
     @cached_property
-    def valid_weight(self) -> Optional[jax.Array]:
+    def valid_weight(self) -> jax.Array | None:
         """Full-field only: spatial 0/1 mask of valid elements, or None when
         there is no padding (static decision — no mask inside traced code
         unless padding actually exists)."""
@@ -304,7 +304,7 @@ class StageContext:
                                    self.field.orig_dtype)
 
     @cached_property
-    def lorenzo_mean_weights(self) -> Tuple[np.ndarray, ...]:
+    def lorenzo_mean_weights(self) -> tuple[np.ndarray, ...]:
         """Window-sum weights: ``sum_{i in extent} q_i = <weights, residuals>``
         — per-axis separable (nd) or one flat vector (1-D schemes)."""
         if self.plan is not None:
@@ -325,7 +325,7 @@ def _interior(x: jax.Array) -> jax.Array:
     return x[tuple(slice(1, -1) for _ in range(x.ndim))]
 
 
-def _shift_pair(x: jax.Array, axis: int) -> Tuple[jax.Array, jax.Array]:
+def _shift_pair(x: jax.Array, axis: int) -> tuple[jax.Array, jax.Array]:
     """(x_{+1}, x_{-1}) views cropped to the common interior."""
     nd = x.ndim
     idx_p = [slice(1, -1)] * nd
@@ -543,25 +543,25 @@ class OpSpec:
     name: str
     arity: str                    # "field" | "vector"
     category: str                 # "statistic" | "differentiation" | "multivariate"
-    feasible: Callable[[Scheme], Tuple[Stage, ...]]
+    feasible: Callable[[Scheme], tuple[Stage, ...]]
     needs_axis: bool = False
-    closure: Optional[Callable[[Scheme, Stage, int], R.Closure]] = None
-    component_axes: Optional[Callable[[int], Tuple[Tuple[int, ...], ...]]] = None
-    lower: Mapping[Tuple[Stage, str], Rule] = dc_field(default_factory=dict)
-    lower_vector: Optional[Callable] = None
-    lower_temporal: Optional[Callable] = None  # (TemporalSummary, eps) -> result
+    closure: Callable[[Scheme, Stage, int], R.Closure] | None = None
+    component_axes: Callable[[int], tuple[tuple[int, ...], ...]] | None = None
+    lower: Mapping[tuple[Stage, str], Rule] = dc_field(default_factory=dict)
+    lower_vector: Callable | None = None
+    lower_temporal: Callable | None = None  # (TemporalSummary, eps) -> result
 
 
-def _mean_stages(scheme: Scheme) -> Tuple[Stage, ...]:
+def _mean_stages(scheme: Scheme) -> tuple[Stage, ...]:
     return tuple(([Stage.M] if scheme.is_blockmean else [])
                  + [Stage.P, Stage.Q, Stage.F])
 
 
-def _std_stages(scheme: Scheme) -> Tuple[Stage, ...]:
+def _std_stages(scheme: Scheme) -> tuple[Stage, ...]:
     return (Stage.P, Stage.Q, Stage.F)
 
 
-def _stencil_stages(scheme: Scheme) -> Tuple[Stage, ...]:
+def _stencil_stages(scheme: Scheme) -> tuple[Stage, ...]:
     return tuple(([Stage.P] if scheme.is_nd else []) + [Stage.Q, Stage.F])
 
 
@@ -578,7 +578,7 @@ def _gradient_closure(scheme: Scheme, stage: Stage, axis: int) -> R.Closure:
     return R.op_closure(scheme, "gradient", stage, axis)
 
 
-_DERIV_RULES: Dict[Tuple[Stage, str], Rule] = {
+_DERIV_RULES: dict[tuple[Stage, str], Rule] = {
     (Stage.P, "lorenzo"): _deriv_p_lorenzo,
     (Stage.P, "blockmean"): _deriv_p_blockmean,
     (Stage.Q, "any"): _deriv_q,
@@ -589,12 +589,12 @@ _DERIV_RULES: Dict[Tuple[Stage, str], Rule] = {
 def _derivative_at(ctx: StageContext, axis: int) -> jax.Array:
     """Dispatch the derivative rule for ``ctx`` — the shared postlude every
     multivariate/gradient lowering is assembled from."""
-    family = "lorenzo" if ctx.scheme.is_lorenzo else "blockmean"
+    family = family_of(ctx.scheme)
     rule = _DERIV_RULES.get((ctx.stage, family)) or _DERIV_RULES[(ctx.stage, "any")]
     return rule(ctx, axis)
 
 
-def _gradient_rule(ctx: StageContext, axis: int) -> Tuple[jax.Array, ...]:
+def _gradient_rule(ctx: StageContext, axis: int) -> tuple[jax.Array, ...]:
     nd = len(ctx.field.shape)
     return tuple(_derivative_at(ctx, a) for a in range(nd))
 
@@ -622,11 +622,11 @@ def _curl_vector(ctxs: Sequence[StageContext], axis: int):
     )
 
 
-def _div_axes(n_components: int) -> Tuple[Tuple[int, ...], ...]:
+def _div_axes(n_components: int) -> tuple[tuple[int, ...], ...]:
     return tuple((i,) for i in range(n_components))
 
 
-def _curl_axes(n_components: int) -> Tuple[Tuple[int, ...], ...]:
+def _curl_axes(n_components: int) -> tuple[tuple[int, ...], ...]:
     if n_components == 2:
         return ((1,), (0,))
     if n_components == 3:
@@ -636,7 +636,7 @@ def _curl_axes(n_components: int) -> Tuple[Tuple[int, ...], ...]:
 
 #: the registry: declaration order is the canonical op-set order (used for
 #: order-insensitive fused cache keys).
-OPS: Dict[str, OpSpec] = {
+OPS: dict[str, OpSpec] = {
     spec.name: spec for spec in (
         OpSpec("mean", "field", "statistic", _mean_stages,
                closure=_stat_closure,
@@ -718,7 +718,7 @@ class TemporalSummary:
                   self.q_max, self.last2)
         return int(sum(x.size * x.dtype.itemsize for x in leaves))
 
-    def sig(self) -> Tuple:
+    def sig(self) -> tuple:
         """Hashable static signature (jit-cache key component)."""
         return tuple((tuple(x.shape), str(x.dtype))
                      for x in (self.count, self.q_sum, self.q_sumsq,
@@ -781,7 +781,7 @@ def _slab_q_view(ctx: StageContext) -> jax.Array:
     return ctx.spatial_window(ctx.lorenzo_q)
 
 
-def temporal_region(c: Field, region) -> Optional[Tuple]:
+def temporal_region(c: Field, region) -> tuple | None:
     """Lift a *spatial* region to the slab layout (time axis 0 kept whole)."""
     if region is None:
         return None
@@ -842,7 +842,7 @@ def _tdelta_rule(s: TemporalSummary, eps) -> jax.Array:
     return (s.last2[1] - s.last2[0]).astype(jnp.float32) * (2.0 * eps)
 
 
-def _temporal_stages(scheme: Scheme) -> Tuple[Stage, ...]:
+def _temporal_stages(scheme: Scheme) -> tuple[Stage, ...]:
     # stage ② needs the (time, *spatial) layout; 1-D partitioning flattens
     # it away, exactly like the spatial stencils (paper §V-B)
     return tuple(([Stage.P] if scheme.is_nd else []) + [Stage.Q, Stage.F])
@@ -850,7 +850,7 @@ def _temporal_stages(scheme: Scheme) -> Tuple[Stage, ...]:
 
 #: temporal op registry: reductions over the time axis of an appended
 #: stream, each a postlude on one merged :class:`TemporalSummary`.
-TEMPORAL_OPS: Dict[str, OpSpec] = {
+TEMPORAL_OPS: dict[str, OpSpec] = {
     spec.name: spec for spec in (
         OpSpec("tdelta", "temporal", "temporal", _temporal_stages,
                lower_temporal=_tdelta_rule),
@@ -866,8 +866,8 @@ TEMPORAL_OPS: Dict[str, OpSpec] = {
 }
 
 
-def temporal_postlude(ops: Union[str, Sequence[str]], summary: TemporalSummary,
-                      eps) -> Dict[str, jax.Array]:
+def temporal_postlude(ops: str | Sequence[str], summary: TemporalSummary,
+                      eps) -> dict[str, jax.Array]:
     """Lower a temporal op set onto one merged summary: ``{op: result}``.
 
     The summary already paid every reconstruction; postludes are tiny
@@ -880,12 +880,153 @@ def temporal_postlude(ops: Union[str, Sequence[str]], summary: TemporalSummary,
     return {n: TEMPORAL_OPS[n].lower_temporal(summary, eps) for n in names}
 
 
-def _merge_registries(*registries: Mapping[str, OpSpec]) -> Dict[str, OpSpec]:
+def family_of(scheme: Scheme) -> str:
+    """The lowering-rule family key of a scheme (``compute`` dispatches on
+    this): ``"lorenzo"`` for the HSZp pair, ``"blockmean"`` for HSZx."""
+    return "lorenzo" if Scheme(scheme).is_lorenzo else "blockmean"
+
+
+def resolve_rules(spec: OpSpec, scheme: Scheme, stage: Stage) -> tuple[Rule, ...]:
+    """Every lowering rule of ``spec`` matching the ``(stage, scheme)`` cell.
+
+    The well-formed registry has exactly one match per feasible cell —
+    either the scheme-family rule or the ``"any"`` rule, never both (a
+    family rule next to an ``"any"`` rule at the same stage would silently
+    shadow it in :func:`compute`) and never neither.  :func:`spec_violations`
+    and the ``repro.audit`` registry analyzer enforce this.
+    """
+    stage = Stage(stage)
+    rules = []
+    fam = spec.lower.get((stage, family_of(scheme)))
+    if fam is not None:
+        rules.append(fam)
+    any_rule = spec.lower.get((stage, "any"))
+    if any_rule is not None:
+        rules.append(any_rule)
+    return tuple(rules)
+
+
+#: valid string closures (tuple closures are ``("band", axis)``).
+_CLOSURE_STRS = frozenset({"cover", "hull"})
+
+
+def _closure_ok(value) -> bool:
+    if isinstance(value, str):
+        return value in _CLOSURE_STRS
+    return (isinstance(value, tuple) and len(value) == 2
+            and value[0] == "band" and isinstance(value[1], int))
+
+
+def spec_violations(spec: OpSpec) -> list:
+    """Enumerate structural violations of one :class:`OpSpec`.
+
+    Returns ``(invariant, message)`` pairs — the single source of truth
+    shared by registration-time validation (:func:`register_op`, which
+    raises on the rejecting subset) and the ``repro.audit`` registry
+    analyzer (which reports every violation as a structured finding).
+    """
+    out: list = []
+    if spec.arity not in ("field", "vector", "temporal"):
+        out.append(("invalid-arity",
+                    f"op {spec.name!r} has arity {spec.arity!r}; expected "
+                    "'field', 'vector', or 'temporal'"))
+        return out
+
+    if spec.arity == "temporal":
+        if spec.lower_temporal is None:
+            out.append(("missing-lowering-rule",
+                        f"temporal op {spec.name!r} has no lower_temporal "
+                        "rule"))
+        return out
+
+    if spec.arity == "vector":
+        if spec.lower_vector is None:
+            out.append(("missing-lowering-rule",
+                        f"vector op {spec.name!r} has no lower_vector rule"))
+        if spec.component_axes is None:
+            out.append(("missing-closure",
+                        f"vector op {spec.name!r} has no component_axes "
+                        "(per-component region closures derive from it)"))
+        else:
+            for nc in (2, 3):
+                try:
+                    axes = spec.component_axes(nc)
+                except ValueError:
+                    continue  # op legitimately rejects this component count
+                if len(axes) != nc or any(
+                        a not in range(nc) for t in axes for a in t):
+                    out.append(("invalid-closure",
+                                f"vector op {spec.name!r}: component_axes"
+                                f"({nc}) = {axes!r} is not {nc} in-range "
+                                "axis tuples"))
+        return out
+
+    # field arity: every feasible (stage, scheme-family) cell needs exactly
+    # one lowering rule, and a region closure must exist for each cell
+    if spec.closure is None:
+        out.append(("missing-closure",
+                    f"op {spec.name!r}: field op has no closure callable "
+                    "(region-capable cells need one)"))
+    seen_cells: set = set()  # one report per (invariant, stage, family) cell
+    for scheme in Scheme:
+        fam = family_of(scheme)
+        feasible = tuple(Stage(s) for s in spec.feasible(scheme))
+        for stage in feasible:
+            n_rules = len(resolve_rules(spec, scheme, stage))
+            if n_rules == 0 and ("miss", stage, fam) not in seen_cells:
+                seen_cells.add(("miss", stage, fam))
+                out.append(("missing-lowering-rule",
+                            f"op {spec.name!r}: feasible cell (stage "
+                            f"{stage.name}, {fam}) has no lowering rule"))
+            elif n_rules > 1 and ("ambig", stage, fam) not in seen_cells:
+                seen_cells.add(("ambig", stage, fam))
+                out.append(("ambiguous-lowering-rule",
+                            f"op {spec.name!r}: cell (stage {stage.name}, "
+                            f"{fam}) matches both a family rule and an "
+                            "'any' rule — the family rule silently shadows"))
+            if spec.closure is None:
+                continue
+            try:
+                value = spec.closure(scheme, stage, 0)
+            except Exception as e:  # noqa: BLE001 - report, don't crash
+                out.append(("invalid-closure",
+                            f"op {spec.name!r}: closure({scheme.value}, "
+                            f"{stage.name}) raised {e!r}"))
+                continue
+            if not _closure_ok(value):
+                out.append(("invalid-closure",
+                            f"op {spec.name!r}: closure({scheme.value}, "
+                            f"{stage.name}) = {value!r} is not a valid "
+                            "region closure"))
+    # a declared rule no feasible cell can ever reach is dead weight — and
+    # usually a sign the feasibility row and the rule table disagree
+    for (stage, fam), _rule in spec.lower.items():
+        reachable = any(
+            Stage(stage) in spec.feasible(scheme)
+            and fam in ("any", family_of(scheme))
+            for scheme in Scheme)
+        if not reachable:
+            out.append(("unreachable-lowering-rule",
+                        f"op {spec.name!r}: rule for cell (stage "
+                        f"{Stage(stage).name}, {fam}) is unreachable from "
+                        "every scheme's feasibility row"))
+    return out
+
+
+#: violations that reject an OpSpec at registration time (the audit-only
+#: extras — unreachable rules — merely warn the static pass).
+_REJECTING = frozenset({
+    "invalid-arity", "missing-lowering-rule", "ambiguous-lowering-rule",
+    "missing-closure", "invalid-closure",
+})
+
+
+def _merge_registries(*registries: Mapping[str, OpSpec]) -> dict[str, OpSpec]:
     """Combine op registries into the single lookup, rejecting name
     collisions: a name silently shadowed across registries would make
     ``canonical_ops`` / planning disagree about an op's arity and
     feasibility, so the merge fails loudly instead."""
-    out: Dict[str, OpSpec] = {}
+    out: dict[str, OpSpec] = {}
     for reg in registries:
         for name, spec in reg.items():
             if name in out:
@@ -899,7 +1040,7 @@ def _merge_registries(*registries: Mapping[str, OpSpec]) -> Dict[str, OpSpec]:
 
 
 #: single lookup across both registries (spatial + temporal).
-_ALL_OPS: Dict[str, OpSpec] = _merge_registries(OPS, TEMPORAL_OPS)
+_ALL_OPS: dict[str, OpSpec] = _merge_registries(OPS, TEMPORAL_OPS)
 
 _ORDER = {name: i for i, name in enumerate(_ALL_OPS)}
 
@@ -914,6 +1055,14 @@ def register_op(spec: OpSpec) -> OpSpec:
     if spec.name in _ALL_OPS:
         raise ValueError(
             f"op name collision: {spec.name!r} is already registered")
+    bad = [(inv, msg) for inv, msg in spec_violations(spec)
+           if inv in _REJECTING]
+    if bad:
+        detail = "; ".join(msg for _, msg in bad)
+        raise ValueError(
+            f"malformed OpSpec {spec.name!r}: {detail} "
+            "(every feasible (stage, scheme-family) cell needs exactly one "
+            "lowering rule and a region closure — see repro.audit)")
     registry = TEMPORAL_OPS if spec.arity == "temporal" else OPS
     registry[spec.name] = spec
     _ALL_OPS[spec.name] = spec
@@ -925,7 +1074,7 @@ def register_op(spec: OpSpec) -> OpSpec:
 # op-set canonicalization / validation
 # ===========================================================================
 
-def canonical_ops(ops: Union[str, Sequence[str]]) -> Tuple[str, ...]:
+def canonical_ops(ops: str | Sequence[str]) -> tuple[str, ...]:
     """Validate and canonicalize an op set: known names, de-duplicated,
     registry order (so ``["std", "mean"]`` and ``["mean", "std"]`` share one
     compiled program), single arity (field ops and vector ops cannot share a
@@ -985,9 +1134,9 @@ def _check_feasible(spec: OpSpec, scheme: Scheme, stage: Stage) -> None:
 # the lowering pipeline
 # ===========================================================================
 
-def compute(target, ops: Union[str, Sequence[str]], stage: Stage, *,
-            axis: int = 0, region: Optional[R.RegionSpec] = None,
-            seed=None) -> Dict[str, jax.Array]:
+def compute(target, ops: str | Sequence[str], stage: Stage, *,
+            axis: int = 0, region: R.RegionSpec | None = None,
+            seed=None) -> dict[str, jax.Array]:
     """Lower an op set onto one shared stage reconstruction.
 
     ``target`` is a single :class:`Compressed`/:class:`Encoded` field for
@@ -1028,7 +1177,7 @@ def compute(target, ops: Union[str, Sequence[str]], stage: Stage, *,
         _check_feasible(spec, c.scheme, stage)
     closure = set_closure(names, c.scheme, stage, axis)
     ctx = StageContext(c, stage, region, closure, seed=seed)
-    family = "lorenzo" if c.scheme.is_lorenzo else "blockmean"
+    family = family_of(c.scheme)
     out = {}
     for spec in specs:
         rule = spec.lower.get((stage, family)) or spec.lower[(stage, "any")]
@@ -1037,7 +1186,7 @@ def compute(target, ops: Union[str, Sequence[str]], stage: Stage, *,
 
 
 def compute_exprs(exprs, stage: Stage, *,
-                  region: Optional[R.RegionSpec] = None, seeds=None):
+                  region: R.RegionSpec | None = None, seeds=None):
     """Lower expression DAGs (``repro.core.expr``) at one explicit stage.
 
     The core-level, storeless entry: every leaf must carry its data
@@ -1062,7 +1211,7 @@ def compute_exprs(exprs, stage: Stage, *,
     stage = Stage(stage)
 
     bindings = []
-    for slot, lf in enumerate(program.leaves):
+    for lf in program.leaves:
         src = lf.source
         flat = src if isinstance(src, tuple) else (src,)
         if any(isinstance(c, str) for c in flat):

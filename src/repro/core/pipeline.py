@@ -12,7 +12,6 @@ decorrelate are linear maps), which the homomorphic collectives in
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,10 +34,10 @@ class HSZCompressor:
     """One of the paper's four compressors (Table II)."""
 
     scheme: Scheme
-    block: Optional[Tuple[int, ...]] = None  # None -> per-rank default
+    block: tuple[int, ...] | None = None  # None -> per-rank default
 
     # -- helpers -----------------------------------------------------------
-    def _layout(self, shape: Tuple[int, ...]) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    def _layout(self, shape: tuple[int, ...]) -> tuple[tuple[int, ...], tuple[int, ...]]:
         """(logical working shape, block shape) for this scheme."""
         if self.scheme.is_nd:
             nd = len(shape)
@@ -162,6 +161,6 @@ hszx_nd = HSZCompressor(Scheme.HSZX_ND)
 _BY_NAME = {"hszp": hszp, "hszp_nd": hszp_nd, "hszx": hszx, "hszx_nd": hszx_nd}
 
 
-def by_name(name: str, block: Optional[Tuple[int, ...]] = None) -> HSZCompressor:
+def by_name(name: str, block: tuple[int, ...] | None = None) -> HSZCompressor:
     base = _BY_NAME[name]
     return HSZCompressor(base.scheme, block) if block is not None else base

@@ -26,9 +26,9 @@ shapes, memoized, and enters traced code only as constants — region ops stay
 ``jit``/``vmap``-composable exactly like their full-field counterparts.
 """
 from __future__ import annotations
+from collections.abc import Sequence
 
 from collections import OrderedDict
-from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 import jax
@@ -38,16 +38,16 @@ from . import encode
 from .stages import Compressed, Encoded, Scheme, Stage
 
 #: one axis of a region: ``None`` (full axis), a ``slice``, or ``(start, stop)``.
-AxisSpec = Union[None, slice, Tuple[int, int], Sequence[int]]
+AxisSpec = None | slice | tuple[int, int] | Sequence[int]
 RegionSpec = Sequence[AxisSpec]
 
 #: closure kinds: ``"cover"`` (geometric covering blocks), ``"hull"``
 #: (origin-anchored prefix rectangle), ``("band", axis)`` (cover on ``axis``,
 #: hull on the others — Lorenzo stage-② derivatives).
-Closure = Union[str, Tuple[str, int]]
+Closure = str | tuple[str, int]
 
 
-def normalize_region(region: RegionSpec, shape: Sequence[int]) -> Tuple[Tuple[int, int], ...]:
+def normalize_region(region: RegionSpec, shape: Sequence[int]) -> tuple[tuple[int, int], ...]:
     """Canonicalize a region to per-axis ``(start, stop)`` over ``shape``.
 
     Accepts ``None`` / ``slice(start, stop)`` / ``(start, stop)`` per axis;
@@ -103,17 +103,17 @@ class RegionPlan:
     lazily-built payload word-gather / statistic-weight arrays.
     """
 
-    def __init__(self, scheme: Scheme, shape: Tuple[int, ...],
-                 padded_shape: Tuple[int, ...], block: Tuple[int, ...],
-                 region: Tuple[Tuple[int, int], ...], closure: Closure):
+    def __init__(self, scheme: Scheme, shape: tuple[int, ...],
+                 padded_shape: tuple[int, ...], block: tuple[int, ...],
+                 region: tuple[tuple[int, int], ...], closure: Closure):
         self.scheme = scheme
         self.shape = shape              # original (logical) data shape
         self.padded_shape = padded_shape
         self.block = block
         self.region = region            # normalized, original-shape coords
         self.closure = closure
-        self._gather_cache: Dict[int, GatherIndex] = {}
-        self._weights: Optional[Tuple[np.ndarray, ...]] = None
+        self._gather_cache: dict[int, GatherIndex] = {}
+        self._weights: tuple[np.ndarray, ...] | None = None
 
         grid = tuple(p // b for p, b in zip(padded_shape, block))
         self.grid = grid
@@ -127,14 +127,14 @@ class RegionPlan:
         self.gathered_elems = int(np.prod(self.sub_padded_shape))
 
     # -- construction -------------------------------------------------------
-    def _axis_block_range(self, axis: int, s: int, e: int) -> Tuple[int, int]:
+    def _axis_block_range(self, axis: int, s: int, e: int) -> tuple[int, int]:
         b = self.block[axis]
         if self.closure == "hull" or (
                 isinstance(self.closure, tuple) and self.closure[1] != axis):
             return 0, -(-e // b)
         return s // b, -(-e // b)
 
-    def _build_nd(self, grid: Tuple[int, ...]) -> None:
+    def _build_nd(self, grid: tuple[int, ...]) -> None:
         block = self.block
         ranges = tuple(self._axis_block_range(a, s, e)
                        for a, (s, e) in enumerate(self.region))
@@ -164,7 +164,7 @@ class RegionPlan:
         self.aligned = all(s % b == 0 and (e % b == 0 or e == dim)
                            for (s, e), b, dim in zip(self.region, block, self.shape))
 
-    def _build_flat(self, grid: Tuple[int, ...]) -> None:
+    def _build_flat(self, grid: tuple[int, ...]) -> None:
         """1-D schemes flatten the data; a spatial region becomes a union of
         row-major flat runs whose covering block *set* (not range) is gathered."""
         b = self.block[0]
@@ -237,7 +237,7 @@ class RegionPlan:
         return gi
 
     # -- sub-field assembly --------------------------------------------------
-    def gather_metadata(self, c: Union[Compressed, Encoded]) -> jax.Array:
+    def gather_metadata(self, c: Compressed | Encoded) -> jax.Array:
         """Metadata restricted to the gathered blocks (no payload decode)."""
         if not c.scheme.is_blockmean:
             return c.metadata  # Lorenzo: global anchor lives in the residuals
@@ -245,7 +245,7 @@ class RegionPlan:
             return c.metadata[self.grid_slices]
         return c.metadata.reshape(-1)[jnp.asarray(self.block_ids.astype(np.int32))]
 
-    def assemble(self, residuals: jax.Array, src: Union[Compressed, Encoded]) -> Compressed:
+    def assemble(self, residuals: jax.Array, src: Compressed | Encoded) -> Compressed:
         """Build the honest sub-field around gathered residuals."""
         ids = jnp.asarray(self.block_ids.astype(np.int32))
         return Compressed(
@@ -266,7 +266,7 @@ class RegionPlan:
             return arr[self.window]
         return arr.reshape(-1)[jnp.asarray(self.win_pos)].reshape(self.win_shape)
 
-    def lorenzo_mean_weights(self) -> Tuple[np.ndarray, ...]:
+    def lorenzo_mean_weights(self) -> tuple[np.ndarray, ...]:
         """Window-sum weights: ``sum_{i in window} q_i = <weights, residuals>``.
 
         Generalizes the full-field rank-1 Lorenzo mean: per-axis weights
@@ -297,7 +297,7 @@ _PLAN_CACHE_LIMIT = 256
 
 
 def canonical_closure(scheme: Scheme, closure: Closure,
-                      region: Optional[object] = None) -> Closure:
+                      region: object | None = None) -> Closure:
     """Canonical cache/plan-key form of a closure.
 
     1-D layouts have no per-axis bands (``("band", a)`` degrades to the
@@ -312,7 +312,7 @@ def canonical_closure(scheme: Scheme, closure: Closure,
     return closure
 
 
-def plan_region(c: Union[Compressed, Encoded], region: RegionSpec,
+def plan_region(c: Compressed | Encoded, region: RegionSpec,
                 closure: Closure = "cover") -> RegionPlan:
     """Plan (and memoize) a region query over ``c``'s layout."""
     norm = normalize_region(region, c.shape)
@@ -338,7 +338,7 @@ def op_closure(scheme: Scheme, op: str, stage: Stage, axis: int = 0) -> Closure:
     return "hull"
 
 
-def extract(c: Union[Compressed, Encoded], plan: RegionPlan) -> Compressed:
+def extract(c: Compressed | Encoded, plan: RegionPlan) -> Compressed:
     """The gathered sub-field; from :class:`Encoded` this unpacks only the
     payload words covering the plan's blocks (:func:`repro.core.encode.decode_region`)."""
     if isinstance(c, Encoded):
@@ -352,12 +352,12 @@ def extract(c: Union[Compressed, Encoded], plan: RegionPlan) -> Compressed:
     return plan.assemble(residuals, c)
 
 
-def region_aligned(c: Union[Compressed, Encoded], region: RegionSpec) -> bool:
+def region_aligned(c: Compressed | Encoded, region: RegionSpec) -> bool:
     """Is the window block-aligned (so stage-① statistics stay eps-exact)?"""
     return plan_region(c, region, "cover").aligned
 
 
-def closure_fraction(c: Union[Compressed, Encoded], op: str, stage: Stage,
+def closure_fraction(c: Compressed | Encoded, op: str, stage: Stage,
                      region: RegionSpec, axis: int = 0) -> float:
     """Fraction of the field a region query must touch at ``stage``.
 

@@ -15,11 +15,12 @@ variable-rate byte streams are produced only at the host serialization
 boundary (``repro.core.encode.serialize``).  See DESIGN.md §3.
 """
 from __future__ import annotations
+from collections.abc import Sequence
 
 import enum
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, List, Sequence, Tuple, Union
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +56,7 @@ class Scheme(str, enum.Enum):
         return self in (Scheme.HSZX, Scheme.HSZX_ND)
 
 
-def _dataclass_pytree(cls=None, *, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
+def _dataclass_pytree(cls=None, *, data_fields: tuple[str, ...], meta_fields: tuple[str, ...]):
     """Register a dataclass as a pytree with explicit data/meta split."""
 
     def wrap(c):
@@ -89,9 +90,9 @@ class Compressed:
     valid_counts: jax.Array   # int32 (n_blocks,): valid elements per block (padding-aware)
 
     scheme: Scheme
-    shape: Tuple[int, ...]         # original (unpadded) data shape
-    padded_shape: Tuple[int, ...]  # residuals.shape
-    block: Tuple[int, ...]         # block shape (same rank as padded_shape)
+    shape: tuple[int, ...]         # original (unpadded) data shape
+    padded_shape: tuple[int, ...]  # residuals.shape
+    block: tuple[int, ...]         # block shape (same rank as padded_shape)
     orig_dtype: Any
 
     @property
@@ -103,7 +104,7 @@ class Compressed:
         return size
 
     @property
-    def grid(self) -> Tuple[int, ...]:
+    def grid(self) -> tuple[int, ...]:
         return tuple(p // b for p, b in zip(self.padded_shape, self.block))
 
     @property
@@ -151,9 +152,9 @@ class Encoded:
     valid_counts: jax.Array  # int32 (n_blocks,)
 
     scheme: Scheme
-    shape: Tuple[int, ...]
-    padded_shape: Tuple[int, ...]
-    block: Tuple[int, ...]
+    shape: tuple[int, ...]
+    padded_shape: tuple[int, ...]
+    block: tuple[int, ...]
     orig_dtype: Any
     bits: int                # uniform packed width (zigzag bits per value)
 
@@ -165,7 +166,7 @@ class Encoded:
         return size
 
     @property
-    def grid(self) -> Tuple[int, ...]:
+    def grid(self) -> tuple[int, ...]:
         return tuple(p // b for p, b in zip(self.padded_shape, self.block))
 
     @property
@@ -194,14 +195,14 @@ class Encoded:
 # batch-stackable view (substrate for `repro.analytics`)
 # ===========================================================================
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
 
 #: static (pytree-meta) layout signature two fields must share to be stacked.
-def layout_key(c: Field) -> Tuple:
+def layout_key(c: Field) -> tuple:
     """Hashable static layout of a field: every pytree-meta field, i.e.
     everything that must agree across batch items for the treedefs to match
     and `jax.vmap` to apply (the data leaves may differ freely)."""
-    key: Tuple = (type(c).__name__, c.scheme, c.shape, c.padded_shape, c.block,
+    key: tuple = (type(c).__name__, c.scheme, c.shape, c.padded_shape, c.block,
                   jnp.dtype(c.orig_dtype))
     if isinstance(c, Encoded):
         key = key + (c.bits,)
@@ -237,7 +238,7 @@ def batch_size(c: Field) -> int:
     return int(lead.shape[0])
 
 
-def batch_unstack(c: Field) -> List[Field]:
+def batch_unstack(c: Field) -> list[Field]:
     """Inverse of :func:`batch_stack`: split the leading axis back into fields."""
     b = batch_size(c)
     return [jax.tree.map(lambda x: x[i], c) for i in range(b)]

@@ -8,10 +8,10 @@ from stage-① metadata, derivative/divergence feature channels from stage-③
 integers — full decompression only when a consumer asks for raw floats.
 """
 from __future__ import annotations
+from collections.abc import Iterator
 
 import dataclasses
 import os
-from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -29,7 +29,7 @@ DATASETS = {
 }
 
 
-def synth_field(name: str, field: int, dims: Tuple[int, ...], seed: int = 0) -> np.ndarray:
+def synth_field(name: str, field: int, dims: tuple[int, ...], seed: int = 0) -> np.ndarray:
     """Multi-scale smooth field + noise (compression behaviour like real data)."""
     rng = np.random.default_rng(hash((name, field, seed)) % (2 ** 32))
     grids = np.meshgrid(*[np.linspace(0, 1, d, dtype=np.float32) for d in dims],
@@ -46,7 +46,7 @@ def synth_field(name: str, field: int, dims: Tuple[int, ...], seed: int = 0) -> 
     return out
 
 
-def dataset_dims(name: str, scale: int = 1) -> Tuple[int, ...]:
+def dataset_dims(name: str, scale: int = 1) -> tuple[int, ...]:
     _, dims = DATASETS[name]
     return tuple(max(8, d // scale) for d in dims)
 
@@ -65,13 +65,13 @@ class ScientificStore:
     """In-memory/on-disk store of HSZ-compressed field shards."""
 
     def __init__(self, compressor_name: str = "hszp_nd", rel_eb: float = 1e-3,
-                 scale: int = 8, seed: int = 0, root: Optional[str] = None):
+                 scale: int = 8, seed: int = 0, root: str | None = None):
         self.comp_name = compressor_name
         self.rel_eb = rel_eb
         self.scale = scale
         self.seed = seed
         self.root = root
-        self._cache: Dict[Tuple[str, int], CompressedShard] = {}
+        self._cache: dict[tuple[str, int], CompressedShard] = {}
 
     def _compressor(self, ndim: int):
         name = self.comp_name
@@ -79,7 +79,7 @@ class ScientificStore:
             return by_name(name)
         return by_name(name)
 
-    def put_all(self, datasets: Optional[List[str]] = None):
+    def put_all(self, datasets: list[str] | None = None):
         for name in datasets or DATASETS:
             fields, _ = DATASETS[name]
             for f in range(fields):
@@ -110,7 +110,7 @@ class ScientificStore:
         return shard
 
     # -- homomorphic accessors (never decompress further than needed) -------
-    def stats(self, dataset: str, field: int) -> Dict[str, float]:
+    def stats(self, dataset: str, field: int) -> dict[str, float]:
         c = self.get(dataset, field).open()
         stage = Stage.M if c.scheme.is_blockmean else Stage.P
         return {"mean": float(homomorphic.mean(c, stage)),
@@ -126,7 +126,7 @@ class ScientificStore:
         return comp.decompress(c, Stage.F)
 
     def normalized_batches(self, dataset: str, field: int, batch: int,
-                           patch: Tuple[int, ...] = (64, 64)) -> Iterator[np.ndarray]:
+                           patch: tuple[int, ...] = (64, 64)) -> Iterator[np.ndarray]:
         """Training-style consumer: patches normalized by homomorphic stats."""
         st = self.stats(dataset, field)
         arr = np.asarray(self.raw(dataset, field))

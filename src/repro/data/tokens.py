@@ -9,9 +9,9 @@ meaningfully during the example runs (pure-uniform tokens give constant
 loss and hide optimizer bugs).
 """
 from __future__ import annotations
+from collections.abc import Iterator
 
 import dataclasses
-from typing import Dict, Iterator
 
 import numpy as np
 
@@ -36,7 +36,7 @@ class TokenPipeline:
             raise ValueError("global_batch must divide by n_shards")
 
     # -- stateless batch function ------------------------------------------
-    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
         cfg = self.cfg
         per_shard = cfg.global_batch // cfg.n_shards
         rng = np.random.default_rng(
@@ -51,17 +51,17 @@ class TokenPipeline:
             tokens[:, j] = np.where(copy[:, j], tokens[:, j - 1], tokens[:, j])
         return {"tokens": tokens.astype(np.int32)}
 
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         return self
 
-    def __next__(self) -> Dict[str, np.ndarray]:
+    def __next__(self) -> dict[str, np.ndarray]:
         b = self.batch_at(self.step)
         self.step += 1
         return b
 
     # -- checkpointable state ----------------------------------------------
-    def state_dict(self) -> Dict[str, int]:
+    def state_dict(self) -> dict[str, int]:
         return {"step": self.step}
 
-    def load_state_dict(self, state: Dict[str, int]):
+    def load_state_dict(self, state: dict[str, int]):
         self.step = int(state["step"])

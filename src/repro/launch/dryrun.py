@@ -23,7 +23,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any
 
 import numpy as np
 import jax
@@ -51,9 +51,9 @@ MICROBATCH = {
 
 
 def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
-               hom_grads: bool = False, remat: Optional[str] = None,
-               seq_shard: bool = False, microbatch: Optional[int] = None,
-               kv_quant: bool = False, fsdp_bf16: bool = False) -> Dict[str, Any]:
+               hom_grads: bool = False, remat: str | None = None,
+               seq_shard: bool = False, microbatch: int | None = None,
+               kv_quant: bool = False, fsdp_bf16: bool = False) -> dict[str, Any]:
     """Lower + compile one cell; returns the result record."""
     import dataclasses as dc
 
@@ -65,7 +65,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if fsdp_bf16:
         cfg = dc.replace(cfg, fsdp_bf16_gather=True)
     shape = SHAPES[shape_name]
-    rec: Dict[str, Any] = {
+    rec: dict[str, Any] = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "mode": shape.kind, "hom_grads": hom_grads,

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -50,7 +49,7 @@ _TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*(\(?[a-z0-9]+\[[^)]*?\]?\)?)(?:,|$)")
 
 
-def _type_bytes_and_shapes(type_str: str) -> Tuple[float, List[Tuple[str, List[int]]]]:
+def _type_bytes_and_shapes(type_str: str) -> tuple[float, list[tuple[str, list[int]]]]:
     shapes = []
     total = 0.0
     for dt, dims in _TYPE_RE.findall(type_str):
@@ -68,18 +67,18 @@ def _type_bytes_and_shapes(type_str: str) -> Tuple[float, List[Tuple[str, List[i
 class Block:
     def __init__(self, name: str):
         self.name = name
-        self.lines: List[str] = []
-        self.defs: Dict[str, str] = {}      # ssa name -> type string
-        self.whiles: List[Tuple[str, str]] = []  # (body, cond)
-        self.calls: List[str] = []          # fusion/call targets
+        self.lines: list[str] = []
+        self.defs: dict[str, str] = {}      # ssa name -> type string
+        self.whiles: list[tuple[str, str]] = []  # (body, cond)
+        self.calls: list[str] = []          # fusion/call targets
         self.dot_flops = 0.0
         self.bytes = 0.0
-        self.collectives: Dict[str, Tuple[int, float]] = defaultdict(lambda: (0, 0.0))
+        self.collectives: dict[str, tuple[int, float]] = defaultdict(lambda: (0, 0.0))
 
 
-def _parse_blocks(text: str) -> Dict[str, Block]:
-    blocks: Dict[str, Block] = {}
-    cur: Optional[Block] = None
+def _parse_blocks(text: str) -> dict[str, Block]:
+    blocks: dict[str, Block] = {}
+    cur: Block | None = None
     for line in text.splitlines():
         if cur is None:
             m = _BLOCK_START.match(line)
@@ -186,7 +185,7 @@ def _trip_count(cond: Block) -> int:
     return best
 
 
-def analyze(text: str, entry_hint: str = "main") -> Dict:
+def analyze(text: str, entry_hint: str = "main") -> dict:
     blocks = _parse_blocks(text)
     for b in blocks.values():
         _analyze_block(b)
@@ -200,7 +199,7 @@ def analyze(text: str, entry_hint: str = "main") -> Dict:
 
     # execution multiplier = sum over call paths of the product of loop trip
     # counts along the path (the call graph is a DAG; memoized recursion)
-    parents: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    parents: dict[str, list[tuple[str, float]]] = defaultdict(list)
     for name, b in blocks.items():
         for body, cond, known in b.whiles:
             trips = known if known is not None else (
@@ -210,7 +209,7 @@ def analyze(text: str, entry_hint: str = "main") -> Dict:
         for callee in b.calls:
             parents[callee].append((name, 1.0))
 
-    memo: Dict[str, float] = {}
+    memo: dict[str, float] = {}
 
     def mult_of(name: str, _depth=0) -> float:
         if name == entry_name:

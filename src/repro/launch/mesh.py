@@ -8,7 +8,6 @@ exactly the collective the homomorphic compressed all-reduce targets).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import numpy as np
 import jax
@@ -17,7 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import common as model_common
 
 
-def auto_axis_types(n_axes: int) -> Dict[str, Tuple]:
+def auto_axis_types(n_axes: int) -> dict[str, tuple]:
     """``axis_types`` kwargs for ``jax.make_mesh``, portable across jax
     versions (older releases predate ``jax.sharding.AxisType``; their meshes
     are implicitly Auto)."""
@@ -33,14 +32,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
-def make_host_mesh(shape: Tuple[int, ...] = (1, 1), axes=("data", "model")):
+def make_host_mesh(shape: tuple[int, ...] = (1, 1), axes=("data", "model")):
     """Tiny mesh over however many (CPU) devices exist — smoke tests."""
     n = len(jax.devices())
     shape = (n, 1)
     return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
-def logical_rules(mesh, *, seq_shard: bool = False) -> Dict[str, Optional[str]]:
+def logical_rules(mesh, *, seq_shard: bool = False) -> dict[str, str | None]:
     """Logical axis -> mesh axis mapping for the current mesh.
 
     ``seq_shard`` additionally maps kv_seq -> model (sequence parallelism
@@ -73,8 +72,8 @@ def deactivate():
     model_common.CTX.deactivate()
 
 
-def spec_to_sharding(mesh, logical_spec: Tuple[Optional[str], ...],
-                     shape: Tuple[int, ...], rules: Dict[str, Optional[str]]
+def spec_to_sharding(mesh, logical_spec: tuple[str | None, ...],
+                     shape: tuple[int, ...], rules: dict[str, str | None]
                      ) -> NamedSharding:
     """One logical spec -> NamedSharding with divisibility fallback."""
     axes = []

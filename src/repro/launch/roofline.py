@@ -20,7 +20,6 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
 
 from repro.configs import ARCHS, SHAPES
 
@@ -44,7 +43,7 @@ def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
     return 2.0 * n * tokens / devices
 
 
-def analyze_record(rec: Dict) -> Dict:
+def analyze_record(rec: dict) -> dict:
     hlo = rec["hlo"]
     flops = hlo["dot_flops"]
     t_compute = flops / PEAK_FLOPS
@@ -64,7 +63,7 @@ def analyze_record(rec: Dict) -> Dict:
     }
 
 
-def load_all(dir_: str) -> List[Dict]:
+def load_all(dir_: str) -> list[dict]:
     out = []
     for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
         rec = json.load(open(f))

@@ -11,7 +11,7 @@ D_q instead of D_f".
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ class AttnCfg:
     head_dim: int
     qk_norm: bool = False
     rope_theta: float = 10000.0
-    window: Optional[int] = None      # sliding-window (local) attention
+    window: int | None = None      # sliding-window (local) attention
     use_rope: bool = True
     causal: bool = True
     # MLA (deepseek-v3)
@@ -74,7 +74,7 @@ def init(b: Builder, cfg: AttnCfg):
 # core scaled-dot-product with GQA head grouping
 # ---------------------------------------------------------------------------
 
-def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array],
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None,
          scale: float) -> jax.Array:
     """q: (B,S,H,hd)  k/v: (B,T,Kh,hd or vd)  -> (B,S,H,vd).
 
@@ -123,7 +123,7 @@ def _project_qkv(p, x, cfg: AttnCfg, positions):
 
 
 def forward(p, x: jax.Array, cfg: AttnCfg, positions: jax.Array,
-            mask: Optional[jax.Array] = None) -> jax.Array:
+            mask: jax.Array | None = None) -> jax.Array:
     """Self-attention over a full sequence (training / prefill)."""
     if cfg.mla:
         return _mla_forward(p, x, cfg, positions, mask)
@@ -231,7 +231,7 @@ def project_kv(p, x: jax.Array, cfg: AttnCfg, positions: jax.Array):
 # KV cache (decode)
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: AttnCfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+def init_cache(cfg: AttnCfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict[str, Any]:
     """Preallocated cache; int8 payload + f32 scale when kv_quant is set."""
     if cfg.mla:
         width = cfg.kv_lora + cfg.qk_rope
@@ -272,8 +272,8 @@ def _cache_read(cache, name):
     return buf
 
 
-def decode_step(p, x: jax.Array, cfg: AttnCfg, cache: Dict[str, Any],
-                pos: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+def decode_step(p, x: jax.Array, cfg: AttnCfg, cache: dict[str, Any],
+                pos: jax.Array) -> tuple[jax.Array, dict[str, Any]]:
     """One-token self-attention against the cache.  x: (B, 1, D)."""
     if cfg.mla:
         return _mla_decode(p, x, cfg, cache, pos)

@@ -14,24 +14,25 @@ Design goals (MaxText-style, no external NN library):
   ``repro.launch.mesh.logical_rules``.
 """
 from __future__ import annotations
+from collections.abc import Sequence
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-Params = Dict[str, Any]
-Specs = Dict[str, Any]
+Params = dict[str, Any]
+Specs = dict[str, Any]
 
 # ---------------------------------------------------------------------------
 # logical sharding
 # ---------------------------------------------------------------------------
 
 # resolved by launch.mesh: logical name -> mesh axis (or None)
-DEFAULT_RULES: Dict[str, Optional[str]] = {
+DEFAULT_RULES: dict[str, str | None] = {
     "batch": ("pod", "data"),
     "seq": None,
     "seq_tp": "model",      # sequence-parallel fallback (heads % tp != 0)
@@ -57,10 +58,10 @@ class ShardingCtx:
 
     def __init__(self):
         self.mesh = None
-        self.rules: Dict[str, Optional[str]] = dict(DEFAULT_RULES)
+        self.rules: dict[str, str | None] = dict(DEFAULT_RULES)
         self.manual_dp = False  # True inside a shard_map manual-DP body
 
-    def activate(self, mesh, rules: Dict[str, Optional[str]]):
+    def activate(self, mesh, rules: dict[str, str | None]):
         self.mesh = mesh
         self.rules = rules
 
@@ -68,7 +69,7 @@ class ShardingCtx:
         self.mesh = None
         self.rules = dict(DEFAULT_RULES)
 
-    def resolve(self, logical: Sequence[Optional[str]], shape: Tuple[int, ...]) -> P:
+    def resolve(self, logical: Sequence[str | None], shape: tuple[int, ...]) -> P:
         """Logical axes -> PartitionSpec, dropping non-divisible axes and
         duplicate mesh-axis uses (first dim wins)."""
         axes = []
@@ -109,7 +110,7 @@ def axis_size(logical: str) -> int:
     return size
 
 
-def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
     """Activation sharding constraint by logical axes (no-op without mesh).
 
     Inside a partial-manual shard_map body (``CTX.manual_dp``) constraints
@@ -137,14 +138,14 @@ class Builder:
     ShapeDtypeStruct stand-ins (no allocation, no RNG) — the dry-run path.
     """
 
-    key: Optional[jax.Array]
+    key: jax.Array | None
     dtype: Any = jnp.float32
 
     def _next(self) -> jax.Array:
         self.key, sub = jax.random.split(self.key)
         return sub
 
-    def param(self, shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+    def param(self, shape: tuple[int, ...], logical: tuple[str | None, ...],
               *, scale: float | None = None, init: str = "normal"):
         if len(shape) != len(logical):
             raise ValueError(f"shape {shape} vs logical {logical}")

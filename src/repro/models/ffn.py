@@ -10,7 +10,6 @@ top-8 with sigmoid routing + bias-free norm-topk).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,7 @@ def _glu(act: str):
 # dense MLP
 # ---------------------------------------------------------------------------
 
-def init_dense(b: Builder, cfg: FfnCfg, d_ff: Optional[int] = None):
+def init_dense(b: Builder, cfg: FfnCfg, d_ff: int | None = None):
     d, f = cfg.d_model, d_ff or cfg.d_ff
     return {
         "gate": b.param((d, f), ("embed_w", "mlp")),

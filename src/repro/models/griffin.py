@@ -9,7 +9,6 @@ O(1) state this is what makes the 500k-context decode cell runnable.
 """
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -85,7 +84,7 @@ def _mix_forward(cfg, kind: str, lp, x, positions, long_seq: bool):
     return x + ffn.dense(lp["mlp"], h, ffn.FfnCfg(cfg.d_model, cfg.d_ff, act="gelu"))
 
 
-def hidden_states(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def hidden_states(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     x = params["embed"].astype(cfg.compute_dtype)[batch["tokens"]]
     x = shard(x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype),
               "batch", "seq", "embed")
@@ -107,12 +106,12 @@ def hidden_states(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
     return rms_norm(x, params["ln_f"], cfg.norm_eps)
 
 
-def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def full_logits(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     x = hidden_states(cfg, params, batch)
     return (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
 
 
-def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def loss_fn(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     x = hidden_states(cfg, params, batch)
     logits = (x[:, :-1, :] @ params["lm_head"].astype(cfg.compute_dtype)
               ).astype(jnp.float32)
@@ -195,7 +194,7 @@ def cache_specs(cfg, batch: int, max_len: int):
     return jax.tree.map(spec_of, cache)
 
 
-def prefill(cfg, params, batch: Dict[str, jax.Array], max_len: int):
+def prefill(cfg, params, batch: dict[str, jax.Array], max_len: int):
     """Full-sequence forward that also builds the decode state: RG-LRU final
     states + ring KV buffers holding the last ``window`` positions."""
     x = params["embed"].astype(cfg.compute_dtype)[batch["tokens"]]

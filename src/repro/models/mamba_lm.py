@@ -6,7 +6,6 @@ the 500k-context decode cell is runnable (DESIGN.md §4).
 """
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +48,7 @@ def _embed(cfg, params, tokens):
     return shard(x, "batch", "seq", "embed")
 
 
-def hidden_states(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def hidden_states(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     x = _embed(cfg, params, batch["tokens"])
     mcfg = _mcfg(cfg)
 
@@ -64,12 +63,12 @@ def hidden_states(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
     return rms_norm(x, params["ln_f"], cfg.norm_eps)
 
 
-def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def full_logits(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     x = hidden_states(cfg, params, batch)
     return (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
 
 
-def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def loss_fn(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     x = hidden_states(cfg, params, batch)
     logits = (x[:, :-1, :] @ params["lm_head"].astype(cfg.compute_dtype)
               ).astype(jnp.float32)
@@ -113,7 +112,7 @@ def decode_step(cfg, params, tokens: jax.Array, cache):
     return logits, {"layers": new_layers, "pos": cache["pos"] + 1}
 
 
-def prefill(cfg, params, batch: Dict[str, jax.Array], max_len: int):
+def prefill(cfg, params, batch: dict[str, jax.Array], max_len: int):
     """Run the sequence through, carrying final states into the cache."""
     x = _embed(cfg, params, batch["tokens"])
     mcfg = _mcfg(cfg)

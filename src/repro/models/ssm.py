@@ -13,7 +13,7 @@ is what makes the 500k-context decode shape runnable for these families.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +58,7 @@ def _assoc_combine(e1, e2):
 
 
 def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
-                        chunk: int = CHUNK) -> Tuple[jax.Array, jax.Array]:
+                        chunk: int = CHUNK) -> tuple[jax.Array, jax.Array]:
     """Scan h_t = a_t h_{t-1} + b_t along axis 1 (seq).  Returns (h_all, h_last).
 
     a, b: (B, S, ...); h0: (B, ...).  S must be a chunk multiple (callers pad).
@@ -170,14 +170,14 @@ def mamba(p, x: jax.Array, cfg: MambaCfg) -> jax.Array:
     return shard(y, "batch", "seq", "embed")
 
 
-def mamba_decode(p, x: jax.Array, cfg: MambaCfg, state: Dict[str, Any]):
+def mamba_decode(p, x: jax.Array, cfg: MambaCfg, state: dict[str, Any]):
     """One-token step.  x: (B, 1, D); state: {'conv': (B,K-1,di), 'ssm': (B,di,st)}."""
     xz = x @ p["in_proj"]
     y, new_conv, new_ssm = _mamba_core(p, xz, cfg, state["conv"], state["ssm"])
     return y, {"conv": new_conv, "ssm": new_ssm}
 
 
-def mamba_state(cfg: MambaCfg, batch: int) -> Dict[str, Any]:
+def mamba_state(cfg: MambaCfg, batch: int) -> dict[str, Any]:
     return {
         "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.bfloat16),
         "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
@@ -225,12 +225,12 @@ def rglru(p, x: jax.Array, cfg: RGLRUCfg) -> jax.Array:
     return shard(y, "batch", "seq", "embed")
 
 
-def rglru_decode(p, x: jax.Array, cfg: RGLRUCfg, state: Dict[str, Any]):
+def rglru_decode(p, x: jax.Array, cfg: RGLRUCfg, state: dict[str, Any]):
     y, new_conv, new_rnn = _rglru_core(p, x, cfg, state["conv"], state["rnn"])
     return y, {"conv": new_conv, "rnn": new_rnn}
 
 
-def rglru_state(cfg: RGLRUCfg, batch: int) -> Dict[str, Any]:
+def rglru_state(cfg: RGLRUCfg, batch: int) -> dict[str, Any]:
     return {
         "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.lru_width), jnp.bfloat16),
         "rnn": jnp.zeros((batch, cfg.lru_width), jnp.float32),

@@ -10,7 +10,6 @@ O(groups), not O(layers)), with configurable remat.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +42,7 @@ def _ffn_cfg(cfg, kind: str) -> ffn.FfnCfg:
     return ffn.FfnCfg(d_model=cfg.d_model, d_ff=cfg.d_ff, act=cfg.act)
 
 
-def layer_groups(cfg) -> List[Tuple[int, str]]:
+def layer_groups(cfg) -> list[tuple[int, str]]:
     """[(n_layers, 'dense'|'moe')] — deepseek-style first-k-dense supported."""
     if cfg.moe:
         k = cfg.first_k_dense
@@ -136,7 +135,7 @@ def embed_tokens(cfg, params, tokens: jax.Array) -> jax.Array:
     return shard(x, "batch", "seq", "embed")
 
 
-def hidden_states(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def hidden_states(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     """Token (+ optional prefix) embedding -> final hidden states."""
     tokens = batch["tokens"]
     x = embed_tokens(cfg, params, tokens)
@@ -155,7 +154,7 @@ def logits_fn(cfg, params, x: jax.Array) -> jax.Array:
     return shard(logits, "batch", "seq", "vocab")
 
 
-def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def full_logits(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     """Logits at every (text) position — decode-parity tests/serving."""
     x = hidden_states(cfg, params, batch)
     if cfg.prefix_tokens:
@@ -163,7 +162,7 @@ def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
     return logits_fn(cfg, params, x).astype(jnp.float32)
 
 
-def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def loss_fn(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     """Next-token cross entropy (mean over tokens)."""
     x = hidden_states(cfg, params, batch)
     if cfg.prefix_tokens:
@@ -186,7 +185,7 @@ def init_cache(cfg, batch: int, max_len: int):
     for count, _ in layer_groups(cfg):
         one = attention.init_cache(acfg, batch, max_len, dtype=cfg.compute_dtype)
         caches.append(jax.tree.map(
-            lambda l: jnp.tile(l[None], (count,) + (1,) * l.ndim), one))
+            lambda l, _c=count: jnp.tile(l[None], (_c,) + (1,) * l.ndim), one))
     return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
 
 
@@ -208,16 +207,16 @@ def decode_step(cfg, params, tokens: jax.Array, cache):
     x = embed_tokens(cfg, params, tokens)
     pos = cache["pos"]
     new_layers = []
-    for (count, kind), gp, gc in zip(layer_groups(cfg), params["groups"], cache["layers"]):
+    for (_count, kind), gp, gc in zip(layer_groups(cfg), params["groups"], cache["layers"]):
 
-        def step(carry, scanned):
+        def step(carry, scanned, _kind=kind):
             lp, lc = scanned
             lp = cast_tree(lp, cfg.compute_dtype)
             h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
             h, lc = attention.decode_step(lp["attn"], h, acfg, lc, pos)
             carry = carry + h
             h = rms_norm(carry, lp["ln2"], cfg.norm_eps)
-            carry = carry + ffn.forward(lp["ffn"], h, _ffn_cfg(cfg, kind))
+            carry = carry + ffn.forward(lp["ffn"], h, _ffn_cfg(cfg, _kind))
             return carry, lc
 
         x, new_gc = jax.lax.scan(step, x, (gp, gc))
@@ -227,7 +226,7 @@ def decode_step(cfg, params, tokens: jax.Array, cache):
     return logits, {"layers": new_layers, "pos": pos + 1}
 
 
-def prefill(cfg, params, batch: Dict[str, jax.Array], max_len: int):
+def prefill(cfg, params, batch: dict[str, jax.Array], max_len: int):
     """Full-sequence forward that also builds the decode cache.
 
     Returns (last-position logits, cache).  KV entries are produced by a
@@ -245,13 +244,13 @@ def prefill(cfg, params, batch: Dict[str, jax.Array], max_len: int):
     long_seq = S > LONG_PREFILL
 
     caches = []
-    for (count, kind), gp in zip(layer_groups(cfg), params["groups"]):
+    for (_count, kind), gp in zip(layer_groups(cfg), params["groups"]):
 
-        def step(carry, lp):
+        def step(carry, lp, _kind=kind):
             lp = cast_tree(lp, cfg.compute_dtype)
             kv_in = rms_norm(carry, lp["ln1"], cfg.norm_eps)
             kv = attention.project_kv(lp["attn"], kv_in, acfg, positions)
-            out = _layer_forward(cfg, kind, lp, carry, positions, long_seq)
+            out = _layer_forward(cfg, _kind, lp, carry, positions, long_seq)
             return out, kv
 
         if cfg.remat != "none":

@@ -8,7 +8,6 @@ absolute positions, not RoPE).
 """
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -113,13 +112,13 @@ def decode_train(cfg, params, tokens: jax.Array, enc_out: jax.Array) -> jax.Arra
     return rms_norm(x, params["ln_f"], cfg.norm_eps)
 
 
-def full_logits(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def full_logits(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     enc_out = encode(cfg, params, batch["frames"])
     x = decode_train(cfg, params, batch["tokens"], enc_out)
     return (x @ params["lm_head"].astype(cfg.compute_dtype)).astype(jnp.float32)
 
 
-def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+def loss_fn(cfg, params, batch: dict[str, jax.Array]) -> jax.Array:
     enc_out = encode(cfg, params, batch["frames"])
     x = decode_train(cfg, params, batch["tokens"], enc_out)
     logits = (x[:, :-1, :] @ params["lm_head"].astype(cfg.compute_dtype)

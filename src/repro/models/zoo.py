@@ -13,10 +13,11 @@ dry-run, trainer and server are architecture-agnostic:
 an (arch × shape) cell — the dry-run lowers against these (no allocation).
 """
 from __future__ import annotations
+from collections.abc import Callable
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -29,10 +30,10 @@ from . import griffin, mamba_lm, transformer, whisper
 class Model:
     cfg: ArchConfig
     init: Callable[[jax.Array], Any]
-    loss_fn: Callable[[Any, Dict[str, jax.Array]], jax.Array]
-    full_logits: Callable[[Any, Dict[str, jax.Array]], jax.Array]
+    loss_fn: Callable[[Any, dict[str, jax.Array]], jax.Array]
+    full_logits: Callable[[Any, dict[str, jax.Array]], jax.Array]
     decode_step: Callable[[Any, jax.Array, Any], Any]
-    prefill: Callable[[Any, Dict[str, jax.Array], int], Any]
+    prefill: Callable[[Any, dict[str, jax.Array], int], Any]
     init_cache: Callable[[int, int], Any]
     cache_specs: Callable[[int, int], Any]
 
@@ -87,7 +88,7 @@ def _whisper_prefill(cfg, params, batch, max_len):
 # input specs (dry-run stand-ins)
 # ---------------------------------------------------------------------------
 
-def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
     B = shape.global_batch
     if shape.kind == "decode":
@@ -104,7 +105,7 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtype
     return specs
 
 
-def make_batch(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array) -> Dict[str, jax.Array]:
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array) -> dict[str, jax.Array]:
     """Concrete random batch matching input_specs (smoke tests / examples)."""
     specs = input_specs(cfg, shape)
     out = {}

@@ -30,10 +30,11 @@ request (unknown id, empty op set, out-of-bounds region, duplicate vector
 component ids) never poisons another request's group or the jit cache.
 """
 from __future__ import annotations
+from collections.abc import Sequence
 
 import dataclasses
 import warnings
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any
 
 from repro.analytics import CostModel, query
 from repro.analytics.engine import BatchedAnalytics
@@ -42,7 +43,7 @@ from repro.core import Compressed, Encoded, Stage, oplib
 from repro.core import expr as expr_mod
 from repro.core import region as region_mod
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
 
 
 def _region_signature(req: "AnalyticsRequest", resolved=None):
@@ -82,15 +83,15 @@ class AnalyticsRequest:
     """
 
     uid: int
-    fields: Union[Field, str, Sequence[Union[Field, str]], None] = None
-    op: Union[str, Sequence[str]] = "mean"  # one op, or a fused op set
-    stage: Union[Stage, str, int] = "auto"
+    fields: Field | str | Sequence[Field | str] | None = None
+    op: str | Sequence[str] = "mean"  # one op, or a fused op set
+    stage: Stage | str | int = "auto"
     axis: int = 0                          # derivative only
     region: Any = None                     # per-axis window, or None for full
     exprs: Any = None                      # Expr or sequence of Expr roots
     result: Any = None                     # array, or {op: array} for op sets
     result_stage: Any = None               # Stage, or {op: Stage} for op sets
-    error: Optional[str] = None            # set instead of result on rejection
+    error: str | None = None            # set instead of result on rejection
     done: bool = False
 
 
@@ -110,8 +111,8 @@ class AppendRequest:
     uid: int
     field_id: str
     data: Any                              # (timesteps, *spatial) raw values
-    slab_index: Optional[int] = None       # set on success
-    error: Optional[str] = None            # set instead on rejection
+    slab_index: int | None = None       # set on success
+    error: str | None = None            # set instead on rejection
     done: bool = False
 
 
@@ -120,12 +121,12 @@ class AnalyticsFrontend:
     batch axis is formed per step from whatever is queued).  ``store``
     enables id-addressed requests and materialized-stage reuse."""
 
-    def __init__(self, cost_model: Optional[CostModel] = None,
+    def __init__(self, cost_model: CostModel | None = None,
                  max_batch: int = 256, store=None):
         self.engine = BatchedAnalytics(cost_model)
         self.max_batch = max_batch
         self.store = store
-        self._queue: List[AnalyticsRequest] = []
+        self._queue: list[AnalyticsRequest] = []
 
     def _resolve_fields(self, req: AnalyticsRequest, vector: bool):
         """Id-free view of a request's fields (for grouping signatures);
@@ -134,7 +135,7 @@ class AnalyticsFrontend:
         resolved, _ = _resolve_item(req.fields, self.store, vector)
         return resolved
 
-    def add_request(self, req: Union[AnalyticsRequest, "AppendRequest"]) -> None:
+    def add_request(self, req: AnalyticsRequest | "AppendRequest") -> None:
         self._queue.append(req)
 
     # -- one serving step --------------------------------------------------
@@ -158,7 +159,7 @@ class AnalyticsFrontend:
         req.done = True
         return req
 
-    def step(self) -> List[Union[AnalyticsRequest, AppendRequest]]:
+    def step(self) -> list[AnalyticsRequest | AppendRequest]:
         """Serve up to ``max_batch`` queued requests; returns those finished.
 
         Appends are applied first (in arrival order — ingest precedes the
@@ -171,16 +172,16 @@ class AnalyticsFrontend:
         failing programs are evicted by the engine itself).
         """
         batch, self._queue = self._queue[:self.max_batch], self._queue[self.max_batch:]
-        finished: List[Union[AnalyticsRequest, AppendRequest]] = []
-        analytics_batch: List[AnalyticsRequest] = []
+        finished: list[AnalyticsRequest | AppendRequest] = []
+        analytics_batch: list[AnalyticsRequest] = []
         for req in batch:
             if isinstance(req, AppendRequest):
                 finished.append(self._apply_append(req))
             else:
                 analytics_batch.append(req)
-        groups: Dict[Tuple, List[AnalyticsRequest]] = {}
+        groups: dict[tuple, list[AnalyticsRequest]] = {}
         # expression requests: group value is [(request, its roots), ...]
-        expr_groups: Dict[Tuple, List[Tuple[AnalyticsRequest, list]]] = {}
+        expr_groups: dict[tuple, list[tuple[AnalyticsRequest, list]]] = {}
         for req in analytics_batch:
             if req.exprs is not None:
                 try:
@@ -271,8 +272,8 @@ class AnalyticsFrontend:
                 finished.append(req)
         return finished
 
-    def run_until_drained(self) -> List[AnalyticsRequest]:
-        finished: List[AnalyticsRequest] = []
+    def run_until_drained(self) -> list[AnalyticsRequest]:
+        finished: list[AnalyticsRequest] = []
         while self._queue:
             finished.extend(self.step())
         return finished

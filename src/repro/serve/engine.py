@@ -9,7 +9,6 @@ HSZ stage-③ int8 residency (``kv_quant`` in the arch config).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
 
 import numpy as np
 import jax
@@ -23,23 +22,23 @@ class Request:
     uid: int
     prompt: np.ndarray            # (prompt_len,) int32
     max_new_tokens: int = 16
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class Engine:
     def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512,
-                 eos_id: Optional[int] = None):
+                 eos_id: int | None = None):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.cache = model.init_cache(slots, max_len)
-        self.active: List[Optional[Request]] = [None] * slots
+        self.active: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
         self._decode = jax.jit(model.decode_step)
-        self._queue: List[Request] = []
+        self._queue: list[Request] = []
 
     # -- request lifecycle ---------------------------------------------------
     def add_request(self, req: Request):
@@ -69,7 +68,7 @@ class Engine:
         logits, self.cache = self._decode(self.params, jnp.asarray(toks), self.cache)
 
     # -- decode loop -----------------------------------------------------------
-    def step(self) -> Dict[int, int]:
+    def step(self) -> dict[int, int]:
         """One decode step for all active slots; returns {uid: token}."""
         self._admit()
         toks = np.zeros((self.slots, 1), np.int32)
@@ -92,12 +91,12 @@ class Engine:
                 self.active[s] = None
         return emitted
 
-    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        seen: Dict[int, Request] = {}
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        seen: dict[int, Request] = {}
         steps = 0
         while (self._queue or any(self.active)) and steps < max_steps:
-            for s, r in enumerate(self.active):
+            for r in self.active:
                 if r is not None:
                     seen[r.uid] = r
             self.step()

@@ -21,10 +21,10 @@ otherwise (fields are, too — compression is content-addressed by the
 caller's id discipline).
 """
 from __future__ import annotations
+from collections.abc import Iterable, Sequence
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, FrozenSet, Iterable, Optional, Sequence, Tuple, Union
 
 from repro.core import Compressed, Encoded, Stage, oplib
 from repro.core import region as region_mod
@@ -33,7 +33,7 @@ from repro.core.region import Closure
 from .materialized import (MaterializedStage, materialize,
                            materialized_nbytes, storage_stage)
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
 
 #: stages a materialization serves (① is always resident in the container;
 #: ④ is served by the stage-③ integer intermediate — see ``storage_stage``)
@@ -73,7 +73,7 @@ class FieldStore:
         if cache_bytes < 0:
             raise ValueError("cache_bytes must be >= 0")
         self.cache_bytes = cache_bytes
-        self._fields: Dict[str, Field] = {}
+        self._fields: dict[str, Field] = {}
         self._cache: "OrderedDict[Tuple, MaterializedStage]" = OrderedDict()
         self._bytes = 0
         self.stats = StoreStats()
@@ -119,12 +119,12 @@ class FieldStore:
     def __len__(self) -> int:
         return len(self._fields)
 
-    def ids(self) -> Tuple[str, ...]:
+    def ids(self) -> tuple[str, ...]:
         return tuple(self._fields)
 
     # -- materialization cache ---------------------------------------------
     @staticmethod
-    def _key(field_id: str, stage: Stage, region, closure: Closure) -> Tuple:
+    def _key(field_id: str, stage: Stage, region, closure: Closure) -> tuple:
         return (field_id, storage_stage(stage), region, closure)
 
     def _canonical(self, field: Field, stage: Stage, region, closure: Closure):
@@ -140,7 +140,7 @@ class FieldStore:
     def cache_entries(self) -> int:
         return len(self._cache)
 
-    def _peek_hit(self, key: Tuple) -> Optional[MaterializedStage]:
+    def _peek_hit(self, key: tuple) -> MaterializedStage | None:
         """Resident entry for ``key`` (bumping LRU order and the hit
         counter), or ``None`` without counting anything."""
         m = self._cache.get(key)
@@ -150,7 +150,7 @@ class FieldStore:
         return m
 
     def lookup(self, field_id: str, stage: Stage, *, region=None,
-               closure: Closure = "cover") -> Optional[MaterializedStage]:
+               closure: Closure = "cover") -> MaterializedStage | None:
         """Cache lookup (counts a hit or a miss; hits refresh LRU order)."""
         field = self.get(field_id)
         norm, closure = self._canonical(field, stage, region, closure)
@@ -174,7 +174,7 @@ class FieldStore:
         return m
 
     def seed(self, field_id: str, stage: Stage, *, region=None,
-             closure: Closure = "cover") -> Optional[MaterializedStage]:
+             closure: Closure = "cover") -> MaterializedStage | None:
         """:meth:`ensure`, but declining cells that could never be retained.
 
         A materialization larger than the whole budget would be rebuilt on
@@ -198,7 +198,7 @@ class FieldStore:
         self._insert(key, m)
         return m
 
-    def _insert(self, key: Tuple, m) -> None:
+    def _insert(self, key: tuple, m) -> None:
         """Insert (or replace) one cache entry, keeping ``_bytes`` equal to
         the sum of resident ``nbytes`` through every path.
 
@@ -253,9 +253,9 @@ class FieldStore:
         norm, closure = self._canonical(field, stage, region, closure)
         return self._key(field_id, stage, norm, closure) in self._cache
 
-    def cached_stages(self, field_ids: Union[str, Sequence[str]],
-                      ops: Union[str, Iterable[str]], *, region=None,
-                      axis: int = 0) -> FrozenSet[Stage]:
+    def cached_stages(self, field_ids: str | Sequence[str],
+                      ops: str | Iterable[str], *, region=None,
+                      axis: int = 0) -> frozenset[Stage]:
         """Stages at which ``ops`` over ``field_ids`` would be served from
         resident materializations.
 

@@ -35,7 +35,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Optional, Tuple, Union
 
 import jax
 
@@ -44,7 +43,7 @@ from repro.core import region as region_mod
 from repro.core.region import Closure
 from repro.core.stages import _dataclass_pytree
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
 
 
 def serves(seed_stage: Stage, ctx_stage: Stage) -> bool:
@@ -80,12 +79,12 @@ class MaterializedStage:
     normalized region (``None`` for full-field).
     """
 
-    sub: Optional[Compressed]        # stage ②: decoded sub-field
-    q_spatial: Optional[jax.Array]   # stage ③ (and ④): recorrelated integers
+    sub: Compressed | None        # stage ②: decoded sub-field
+    q_spatial: jax.Array | None   # stage ③ (and ④): recorrelated integers
 
     stage: Stage
     closure: Closure
-    region: Optional[Tuple[Tuple[int, int], ...]]
+    region: tuple[tuple[int, int], ...] | None
 
     @property
     def nbytes(self) -> int:
@@ -102,7 +101,7 @@ class MaterializedStage:
         never needs a store dependency."""
         return serves(self.stage, ctx_stage)
 
-    def sig(self) -> Tuple:
+    def sig(self) -> tuple:
         """Hashable static signature: part of the engine's jit-cache key, and
         the stacking-compatibility check across a batch of seeds."""
         q = self.q_spatial

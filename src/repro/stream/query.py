@@ -10,9 +10,9 @@ summary signature but never on how many slabs the stream holds — so a
 stream queried after its K-th append compiles nothing new.
 """
 from __future__ import annotations
+from collections.abc import Sequence
 
 from functools import reduce
-from typing import Optional, Sequence, Union
 
 import jax
 
@@ -42,8 +42,8 @@ def _cold_summary(tf: TemporalField, stage: Stage, region, engine):
             len(groups) + max(0, len(parts) - 1))
 
 
-def query_temporal(fields: Sequence, op: Union[str, Sequence[str]],
-                   stage: Union[Stage, str, int] = "auto", *,
+def query_temporal(fields: Sequence, op: str | Sequence[str],
+                   stage: Stage | str | int = "auto", *,
                    axis: int = 0, region=None, cost_model=None,
                    engine=None, store=None):
     """Run a temporal op set over one or more temporal fields (or store ids).
@@ -74,7 +74,7 @@ def query_temporal(fields: Sequence, op: Union[str, Sequence[str]],
     n_dispatches = 0
     group_sigs = set()  # layout batches, mirroring the spatial n_batches
     for item in fields:
-        fid: Optional[str] = None
+        fid: str | None = None
         if isinstance(item, str):
             if store is None:
                 raise ValueError(

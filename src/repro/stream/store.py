@@ -24,7 +24,6 @@ the same byte-budgeted LRU.  The streaming contract (DESIGN.md §9):
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 
@@ -102,7 +101,7 @@ class StreamFieldStore(FieldStore):
         return tf
 
     def _temporal_key(self, field_id: str, tf: TemporalField,
-                      region) -> Tuple:
+                      region) -> tuple:
         norm = (region_mod.normalize_region(region, tf.shape)
                 if region is not None else None)
         return (field_id, TEMPORAL_TAG, norm)

@@ -20,9 +20,9 @@ the same static layout, so the engine's per-slab summarizer program
 append — streaming ingest never retraces as the stream grows.
 """
 from __future__ import annotations
+from collections.abc import Sequence
 
 from functools import lru_cache
-from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,47 @@ import jax.numpy as jnp
 from repro.core import Compressed, Encoded, HSZCompressor, Stage, by_name, oplib
 from repro.core import quantize
 
-Field = Union[Compressed, Encoded]
+Field = Compressed | Encoded
+
+_INT32_MAX = 2**31 - 1
+
+
+class SummaryCapacityError(RuntimeError):
+    """Appending this slab would overflow an int32 TemporalSummary leaf.
+
+    The temporal merges are exact *because* every summary leaf is int32 and
+    modular sums stay in range; past the capacity the Σq² (then Σq) leaf
+    wraps silently and every downstream ``tstd``/``tmean`` is corrupt.
+    Raised *before* the stream is mutated, so the caller can re-shard the
+    stream, loosen the error bound (smaller ``|q|``), or open a new
+    :class:`TemporalField`.
+    """
+
+
+def summary_capacity(q_abs: int) -> int:
+    """Maximum total timesteps an int32 summary holds exactly when every
+    quantization index in the stream satisfies ``|q| <= q_abs``.
+
+    The binding leaf is ``Σq²`` (``T * q_abs**2 <= 2**31 - 1``), then
+    ``Σq``, then ``count``.  This formula is cross-checked against the
+    static int-width analysis (``repro.audit.intwidth.summary_capacity``)
+    by the audit, so the runtime guard and the audited bound cannot drift.
+    """
+    q_abs = int(q_abs)
+    if q_abs < 0:
+        raise ValueError(f"negative |q| bound: {q_abs}")
+    if q_abs == 0:
+        return _INT32_MAX  # all-zero stream: only the count leaf can wrap
+    return min(_INT32_MAX // (q_abs * q_abs), _INT32_MAX // q_abs, _INT32_MAX)
+
+
+@lru_cache(maxsize=64)
+def _jit_qabs(scheme, block):
+    """One compiled |q| reducer per (scheme, block): max |stage-③ integer|
+    of a slab — the measured bound the capacity guard runs against."""
+    comp = HSZCompressor(scheme, block)
+    return jax.jit(
+        lambda c: jnp.max(jnp.abs(comp.decompress(c, Stage.Q))))
 
 
 @lru_cache(maxsize=64)
@@ -71,10 +111,10 @@ class TemporalField:
         layout guarantee narrows to the conforming slabs.
     """
 
-    def __init__(self, compressor: Union[HSZCompressor, str], *,
-                 rel_eb: Optional[float] = None,
-                 abs_eb: Optional[float] = None,
-                 eps=None, bits: Union[str, int, None] = "auto",
+    def __init__(self, compressor: HSZCompressor | str, *,
+                 rel_eb: float | None = None,
+                 abs_eb: float | None = None,
+                 eps=None, bits: str | int | None = "auto",
                  headroom: int = 2):
         self.compressor = (by_name(compressor)
                            if isinstance(compressor, str) else compressor)
@@ -85,9 +125,10 @@ class TemporalField:
             raise ValueError(f"bits must be 'auto', an int, or None; got {bits!r}")
         self._bits = bits
         self._headroom = int(headroom)
-        self.slabs: List[Field] = []
-        self._spatial_shape: Optional[Tuple[int, ...]] = None
+        self.slabs: list[Field] = []
+        self._spatial_shape: tuple[int, ...] | None = None
         self._dtype = None
+        self._q_abs_max = 0
 
     # -- static identity ----------------------------------------------------
     @property
@@ -102,7 +143,7 @@ class TemporalField:
         return self._eps
 
     @property
-    def shape(self) -> Tuple[int, ...]:
+    def shape(self) -> tuple[int, ...]:
         """The *spatial* shape (regions and results live here; time grows)."""
         if self._spatial_shape is None:
             raise ValueError("no slab has been appended yet")
@@ -117,7 +158,7 @@ class TemporalField:
         """Total appended timesteps across all slabs."""
         return sum(s.shape[0] for s in self.slabs)
 
-    def layout_sig(self) -> Tuple:
+    def layout_sig(self) -> tuple:
         """Hashable grouping signature (the serve frontend batches requests
         whose temporal fields share compression identity)."""
         eps = None if self._eps is None else float(self._eps)
@@ -150,6 +191,20 @@ class TemporalField:
             self._eps = jnp.asarray(self._eps, jnp.float32)
         comp = self.compressor
         c = _jit_compress(comp.scheme, comp.block)(data, self._eps)
+        # capacity guard: the merged summary's Σq² leaf is int32; refuse an
+        # append that could wrap it, *before* any state is mutated.  The
+        # host sync here is eager ingest code (like max_bits below), not a
+        # traced region.
+        q_abs = max(self._q_abs_max, int(_jit_qabs(comp.scheme, comp.block)(c)))
+        steps = self.n_steps + int(data.shape[0])
+        capacity = summary_capacity(q_abs)
+        if steps > capacity:
+            raise SummaryCapacityError(
+                f"appending {int(data.shape[0])} timesteps would take the "
+                f"stream to {steps} total steps, past the exact int32 "
+                f"summary capacity of {capacity} for |q| <= {q_abs}; "
+                "re-shard the stream, loosen the error bound, or open a "
+                "new TemporalField")
         slab: Field = c
         if self._bits is not None:
             width = comp.max_bits(c)
@@ -162,6 +217,7 @@ class TemporalField:
                 slab = _jit_encode(comp.scheme, comp.block,
                                    max(self._bits, width))(c)
         self.slabs.append(slab)
+        self._q_abs_max = q_abs
         return len(self.slabs) - 1
 
     # -- reference path (full decompression of the concatenated field) ------
@@ -188,8 +244,8 @@ class TemporalField:
         return jnp.concatenate(
             [self.compressor.decompress(s, stage) for s in self.slabs], axis=0)
 
-    def reference(self, ops: Union[str, Sequence[str]],
-                  region=None) -> Dict[str, jax.Array]:
+    def reference(self, ops: str | Sequence[str],
+                  region=None) -> dict[str, jax.Array]:
         """Temporal ops evaluated on the full decompression of the
         concatenated field: one direct reduction over the stage-③ integers
         of the whole stream, then the shared op postludes.

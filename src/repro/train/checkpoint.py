@@ -31,7 +31,7 @@ import shutil
 import threading
 import time
 import zlib
-from typing import Any, Dict, Optional
+from typing import Any
 
 import numpy as np
 
@@ -74,7 +74,7 @@ def _flatten_with_paths(tree):
 
 def save(ckpt_dir: str, step: int, tree: Any, *, mode: str = "lossless",
          rel_eb: float = 1e-4, keep: int = 3, blocking: bool = True,
-         extra_meta: Optional[Dict] = None) -> threading.Thread | None:
+         extra_meta: dict | None = None) -> threading.Thread | None:
     """Serialize ``tree`` to ``ckpt_dir/step_{step:08d}`` atomically."""
     paths, leaves, _ = _flatten_with_paths(tree)
     # pull to host before handing to the writer thread
@@ -131,7 +131,7 @@ def _prune(ckpt_dir: str, keep: int):
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)

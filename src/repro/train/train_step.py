@@ -16,7 +16,7 @@ Two gradient-synchronization modes:
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,7 @@ def init_state(params, *, hom_mode: bool = False) -> TrainState:
 
 def make_train_step(model, opt_cfg: opt_lib.AdamWConfig, *,
                     mode: str = "gspmd", mesh=None,
-                    dp_axes: tuple = ("data",), microbatch: Optional[int] = None):
+                    dp_axes: tuple = ("data",), microbatch: int | None = None):
     """Returns train_step(state, batch) -> (state, metrics)."""
 
     def loss_of(params, batch):

@@ -1,0 +1,393 @@
+"""Static invariant audit (ISSUE 7): analyzers, fixtures, runtime guards.
+
+The contract under test:
+
+* each analyzer produces **exactly one** structured finding on its
+  known-bad fixture — a missing lowering cell, an overflowing accumulator,
+  a hidden host sync, an under-keyed jit cache — and none on a corrected
+  twin;
+* the self-audit is clean: ``python -m repro.audit`` exits 0 on this repo
+  (the acceptance gate CI enforces with the ``AUDIT.json`` artifact);
+* ``oplib.register_op`` rejects malformed OpSpecs at registration time
+  with an error naming the offending (stage, scheme-family) cell, without
+  mutating the registries;
+* the streaming capacity guard: appends past the audited int32
+  ``TemporalSummary`` bound raise :class:`SummaryCapacityError` *before*
+  mutating the stream, and the runtime formula agrees with the audit's.
+"""
+import numpy as np
+import pytest
+
+from repro import audit
+from repro.audit import intwidth, jitkeys, registry, runner, tracesafety
+from repro.audit.findings import AuditReport, Finding
+from repro.core import oplib
+from repro.core.oplib import OpSpec
+from repro.core.stages import Scheme, Stage
+from repro.stream.temporal import (SummaryCapacityError, TemporalField,
+                                   summary_capacity)
+
+INT32_MAX = 2**31 - 1
+
+
+def _field_spec(name, *, feasible, lower, closure="default"):
+    if closure == "default":
+        closure = lambda s, st, a: "cover"  # noqa: E731
+    return OpSpec(name=name, arity="field", category="statistic",
+                  feasible=feasible, closure=closure, lower=lower)
+
+
+def _only_hszp_at_f(scheme):
+    s = Scheme(scheme)
+    return (Stage.F,) if (s.is_lorenzo and not s.is_nd) else ()
+
+
+# ===========================================================================
+# analyzer (1): registry completeness
+# ===========================================================================
+
+class TestRegistryAnalyzer:
+    def test_missing_lowering_cell_one_finding(self):
+        bad = _field_spec("badop", feasible=_only_hszp_at_f, lower={})
+        fs = registry.analyze_registry({"badop": bad}, {},
+                                       check_matrix=False)
+        assert len(fs) == 1
+        (f,) = fs
+        assert f.invariant == "missing-lowering-rule"
+        assert "(stage F, lorenzo)" in f.message
+
+    def test_shadowed_any_rule_one_finding(self):
+        rule = lambda ctx, axis: None  # noqa: E731
+        bad = _field_spec("shadow", feasible=_only_hszp_at_f,
+                          lower={(Stage.F, "lorenzo"): rule,
+                                 (Stage.F, "any"): rule})
+        fs = registry.analyze_registry({"shadow": bad}, {},
+                                       check_matrix=False)
+        assert [f.invariant for f in fs] == ["ambiguous-lowering-rule"]
+
+    def test_missing_closure_one_finding(self):
+        rule = lambda ctx, axis: None  # noqa: E731
+        bad = _field_spec("noclose", feasible=_only_hszp_at_f,
+                          lower={(Stage.F, "any"): rule}, closure=None)
+        fs = registry.analyze_registry({"noclose": bad}, {},
+                                       check_matrix=False)
+        assert [f.invariant for f in fs] == ["missing-closure"]
+
+    def test_registry_collision_detected(self):
+        rule = lambda ctx, axis: None  # noqa: E731
+        ok = _field_spec("dup", feasible=_only_hszp_at_f,
+                         lower={(Stage.F, "any"): rule})
+        tok = OpSpec(name="dup", arity="temporal", category="statistic",
+                     feasible=lambda s: (Stage.Q,),
+                     lower_temporal=lambda s, e: None)
+        fs = registry.analyze_registry({"dup": ok}, {"dup": tok},
+                                       check_matrix=False)
+        assert [f.invariant for f in fs] == ["registry-collision"]
+
+    def test_live_registries_clean(self):
+        assert registry.analyze_registry() == []
+
+
+# ===========================================================================
+# analyzer (2): integer-width abstract interpretation
+# ===========================================================================
+
+class TestIntWidthAnalyzer:
+    def test_default_envelope_clean(self):
+        assert intwidth.analyze_int_width(probe_runtime=False) == []
+
+    def test_overflowing_sumsq_one_finding_per_scheme(self):
+        env = intwidth.Envelope(max_slab_steps=129)  # 129 * 4095**2 > 2^31
+        fs = intwidth.analyze_int_width(env, probe_runtime=False)
+        assert len(fs) == len(list(Scheme))
+        assert {f.invariant for f in fs} == {"sumsq-overflow"}
+        assert {f.subject for f in fs} == {"temporal.q_sumsq"}
+
+    def test_field_sum_overflow_detected(self):
+        # metadata/residual sums over a 2^21-element field at |q|<=4095
+        # exceed int32 only for the blockmean schemes (Lorenzo contracts
+        # its stage-(2) statistics through f32)
+        env = intwidth.Envelope(max_field_elems=2**21, max_slab_steps=1)
+        fs = intwidth.analyze_int_width(env, probe_runtime=False)
+        assert fs, "expected blockmean accumulator overflows"
+        assert {f.invariant for f in fs} == {"sum-overflow"}
+        assert all("hszx" in f.message for f in fs)
+
+    def test_safe_size_table_shape(self):
+        table = intwidth.safe_size_table()
+        for scheme in Scheme:
+            row = table[scheme.value]
+            assert row["max_safe_slab_steps"] >= 128
+            assert row["summary_capacity"] == summary_capacity(4095)
+            assert row["accumulators"]["temporal.q_sumsq"]["dtype"] == "int32"
+        # Lorenzo residuals grow 2^nd-fold; blockmean residuals 2-fold
+        assert table["hszp_nd"]["residual_abs_max"] == 8 * 4095
+        assert table["hszx"]["residual_abs_max"] == 2 * 4095
+
+    def test_runtime_guard_probe_clean(self):
+        assert intwidth.analyze_int_width() == []
+
+    def test_interval_arithmetic(self):
+        iv = intwidth.Interval.sym(10)
+        assert (iv * iv).hi == 100
+        assert iv.square().lo == 0
+        assert iv.sum_n(3).mag == 30
+        assert iv.zigzag() == intwidth.Interval(0, 20)
+        with pytest.raises(ValueError):
+            intwidth.Interval(1, 0)
+
+
+# ===========================================================================
+# analyzer (3): trace-safety lint
+# ===========================================================================
+
+_HOST_SYNC_FIXTURE = '''
+import jax
+
+@jax.jit
+def f(x):
+    return x.item()
+'''
+
+_TRACER_BRANCH_FIXTURE = '''
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x):
+    s = jnp.sum(x)
+    if s > 0:
+        return s
+    return -s
+'''
+
+_WAIVED_FIXTURE = '''
+import jax
+
+@jax.jit
+def f(x):
+    return x.item()  # audit: waive(host-sync) deliberate for this test
+'''
+
+_CLEAN_RULE_FIXTURE = '''
+import jax.numpy as jnp
+
+def _mean_rule(ctx, axis):
+    if ctx.plan is not None and not ctx.plan.aligned:
+        return None
+    if ctx.scheme.is_nd:
+        n = int(ctx.shape[0])
+        return jnp.sum(jnp.ones(n))
+    return jnp.where(jnp.asarray(0) > 0, 1.0, 0.0)
+'''
+
+
+class TestTraceSafetyAnalyzer:
+    def test_hidden_host_sync_one_finding(self):
+        fs = tracesafety.lint_source(_HOST_SYNC_FIXTURE, "fix.py")
+        assert len(fs) == 1
+        assert fs[0].invariant == "host-sync"
+        assert fs[0].file == "fix.py" and fs[0].line is not None
+
+    def test_tracer_branch_one_finding(self):
+        fs = tracesafety.lint_source(_TRACER_BRANCH_FIXTURE, "fix.py")
+        assert [f.invariant for f in fs] == ["tracer-branch"]
+
+    def test_waiver_comment_suppresses(self):
+        assert tracesafety.lint_source(_WAIVED_FIXTURE, "fix.py") == []
+
+    def test_static_branches_not_flagged(self):
+        assert tracesafety.lint_source(_CLEAN_RULE_FIXTURE, "fix.py") == []
+
+    def test_repo_is_trace_safe(self):
+        assert tracesafety.analyze_trace_safety() == []
+
+
+# ===========================================================================
+# analyzer (4): jit-cache-key soundness
+# ===========================================================================
+
+_UNDERKEYED_FIXTURE = '''
+import jax
+
+class Engine:
+    def __init__(self):
+        self._jitted = {}
+
+    def go(self, fields, scale):
+        key = (len(fields),)
+        fn = self._jitted.get(key)
+        if fn is None:
+            def run(*flat, _s=scale):
+                return [x * _s for x in flat]
+            fn = jax.jit(run)
+            self._jitted[key] = fn
+        return fn(*fields)
+'''
+
+
+class TestJitKeyAnalyzer:
+    def test_underkeyed_cache_one_finding(self):
+        fs = jitkeys.analyze_source(_UNDERKEYED_FIXTURE, "fix.py")
+        assert len(fs) == 1
+        assert fs[0].invariant == "unkeyed-closure"
+        assert fs[0].subject == "scale"
+
+    def test_keyed_twin_clean(self):
+        good = _UNDERKEYED_FIXTURE.replace("key = (len(fields),)",
+                                           "key = (len(fields), scale)")
+        assert jitkeys.analyze_source(good, "fix.py") == []
+
+    def test_invariant_comment_waives(self):
+        waived = _UNDERKEYED_FIXTURE.replace(
+            "fn = jax.jit(run)",
+            "fn = jax.jit(run)  # audit: invariant(scale)")
+        assert jitkeys.analyze_source(waived, "fix.py") == []
+
+    def test_sabotaged_engine_key_detected(self):
+        # dropping seed_sig from the key built at the run() call site must
+        # surface `seeds` as an unkeyed traced input (the PR 3/5 bug class)
+        from pathlib import Path
+
+        import repro
+
+        engine = (Path(repro.__file__).parent / "analytics"
+                  / "engine.py").read_text()
+        sabotaged = engine.replace("region, seed_sig)", "region, None)")
+        assert sabotaged != engine
+        fs = jitkeys.analyze_source(sabotaged, "engine.py")
+        assert any(f.subject == "seeds" and f.invariant == "unkeyed-closure"
+                   for f in fs)
+
+    def test_repo_cache_keys_sound(self):
+        assert jitkeys.analyze_jit_keys() == []
+
+
+# ===========================================================================
+# runner / CLI / self-audit
+# ===========================================================================
+
+class TestRunner:
+    def test_self_audit_zero_findings(self):
+        report = audit.run_audit()
+        assert report.ok, "\n".join(f.render() for f in report.findings)
+        assert report.safe_sizes  # table attached even when clean
+
+    def test_cli_clean_exit_and_json(self, tmp_path, capsys):
+        out = tmp_path / "AUDIT.json"
+        rc = runner.main(["--json", str(out)])
+        assert rc == 0
+        import json
+
+        data = json.loads(out.read_text())
+        assert data["ok"] and data["n_findings"] == 0
+        assert set(data["safe_sizes"]) >= {s.value for s in Scheme}
+
+    def test_cli_nonzero_on_findings(self, capsys):
+        # a 129-step envelope genuinely overflows Σq² — the CLI must fail
+        rc = runner.main(["--analyzer", "intwidth",
+                          "--max-slab-steps", "129"])
+        assert rc == 1
+        assert "sumsq-overflow" in capsys.readouterr().out
+
+    def test_report_round_trip(self):
+        f = Finding("registry", "missing-lowering-rule", "msg", subject="op")
+        rep = AuditReport(findings=[f])
+        d = rep.to_dict()
+        assert not d["ok"] and d["findings_by_analyzer"] == {"registry": 1}
+        assert f.render().startswith("[registry/missing-lowering-rule]")
+
+
+# ===========================================================================
+# satellite: registration-time validation
+# ===========================================================================
+
+class TestRegisterOpValidation:
+    def test_rejects_missing_cell_naming_it(self):
+        bad = _field_spec("badreg", feasible=_only_hszp_at_f, lower={})
+        with pytest.raises(ValueError, match=r"\(stage F, lorenzo\)"):
+            oplib.register_op(bad)
+        assert "badreg" not in oplib.OPS
+        assert "badreg" not in oplib._ALL_OPS
+
+    def test_rejects_missing_closure(self):
+        rule = lambda ctx, axis: None  # noqa: E731
+        bad = _field_spec("badreg2", feasible=_only_hszp_at_f,
+                          lower={(Stage.F, "any"): rule}, closure=None)
+        with pytest.raises(ValueError, match="closure"):
+            oplib.register_op(bad)
+        assert "badreg2" not in oplib.OPS
+
+    def test_rejects_temporal_without_rule(self):
+        bad = OpSpec(name="badtemp", arity="temporal", category="statistic",
+                     feasible=lambda s: (Stage.Q,))
+        with pytest.raises(ValueError, match="lower_temporal"):
+            oplib.register_op(bad)
+        assert "badtemp" not in oplib.TEMPORAL_OPS
+
+    def test_accepts_wellformed_spec(self):
+        rule = lambda ctx, axis: None  # noqa: E731
+        ok = _field_spec("okreg_audit", feasible=_only_hszp_at_f,
+                         lower={(Stage.F, "any"): rule})
+        try:
+            oplib.register_op(ok)
+            assert "okreg_audit" in oplib.OPS
+            assert registry.analyze_registry() == []
+        finally:
+            oplib.OPS.pop("okreg_audit", None)
+            oplib._ALL_OPS.pop("okreg_audit", None)
+            oplib._ORDER.pop("okreg_audit", None)
+
+
+# ===========================================================================
+# satellite: TemporalSummary capacity guard
+# ===========================================================================
+
+class TestSummaryCapacityGuard:
+    def test_formula_matches_audit(self):
+        for q_abs in (0, 1, 255, 4095, 4096, 2**15, 2**20):
+            assert summary_capacity(q_abs) == intwidth.summary_capacity(q_abs)
+        assert summary_capacity(4095) == INT32_MAX // 4095**2 == 128
+        assert summary_capacity(0) == INT32_MAX
+        with pytest.raises(ValueError):
+            summary_capacity(-1)
+
+    def test_append_fails_loudly_at_boundary(self):
+        # a tiny eps drives |q| to ~2^15, so capacity is O(1) timesteps:
+        # the guard must reject the append that crosses it, untouched state
+        data = np.linspace(0.5, 1.0, 256, dtype=np.float32).reshape(1, 256)
+        tf = TemporalField("hszx", eps=2**-16)
+        tf.append(data)
+        q_abs = tf._q_abs_max
+        cap = summary_capacity(q_abs)
+        assert 1 <= cap <= 8, f"fixture drifted: capacity {cap}"
+        while tf.n_steps < cap:
+            tf.append(data)
+        steps_before = tf.n_steps
+        n_slabs = tf.n_slabs
+        with pytest.raises(SummaryCapacityError, match="capacity"):
+            tf.append(data)
+        assert tf.n_steps == steps_before  # stream not mutated
+        assert tf.n_slabs == n_slabs
+
+    def test_growing_q_tightens_capacity(self):
+        # a later slab with larger |q| must tighten the bound retroactively
+        small = np.full((1, 256), 0.25, dtype=np.float32)
+        tf = TemporalField("hszx", eps=2**-16)
+        tf.append(small)
+        cap_small = summary_capacity(tf._q_abs_max)
+        big = np.linspace(0.5, 4.0, 256, dtype=np.float32).reshape(1, 256)
+        q_big = int(np.max(np.abs(np.round(big / 2**-16))))
+        if tf.n_steps + 1 > summary_capacity(q_big):
+            with pytest.raises(SummaryCapacityError):
+                tf.append(big)
+        else:
+            tf.append(big)
+            assert summary_capacity(tf._q_abs_max) <= cap_small
+
+    def test_normal_streams_unaffected(self):
+        rng = np.random.default_rng(7)
+        tf = TemporalField("hszp", rel_eb=1e-3)
+        for _ in range(4):
+            tf.append(rng.normal(size=(3, 64)).astype(np.float32))
+        assert tf.n_steps == 12

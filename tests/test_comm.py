@@ -127,7 +127,7 @@ def test_error_feedback_convergence():
     qmax = float(2 ** (bits - 1) - 1)
     resid = jnp.zeros_like(g_true)
     acc = jnp.zeros_like(g_true)
-    for step in range(20):
+    for _step in range(20):
         v = g_true + resid
         eps = jnp.maximum(jnp.max(jnp.abs(v)) / qmax, 1e-30) * 0.5
         q = jnp.clip(jnp.round(v / (2 * eps)), -qmax, qmax)

@@ -63,7 +63,7 @@ def test_decode_matches_train_forward(name):
         acfg = whisper._acfg(cfg)
         ks, vs = [], []
         for l in range(cfg.n_layers):
-            lp = jax.tree.map(lambda x: x[l], params["dec"])
+            lp = jax.tree.map(lambda x, _l=l: x[_l], params["dec"])
             kv = attention.project_kv(
                 lp["xattn"], enc_out,
                 acfg, jnp.zeros(enc_out.shape[:2], jnp.int32))
