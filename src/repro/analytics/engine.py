@@ -57,8 +57,11 @@ def batch_key(first: Field, ops: str | Sequence[str], stage: Stage,
     if region is not None:
         region = region_mod.normalize_region(region, first.shape)
     names = oplib.canonical_ops(ops)
+    # the kernel backend mode is a trace-time input: fused-vs-XLA selection
+    # (and the Encoded payload decode path) happens while tracing, so a
+    # program compiled under one mode must not serve another
     return layout_key(first) + (names, Stage(stage), axis, n_components,
-                                batch, region, seed_sig)
+                                batch, region, seed_sig, oplib.kernel_sig())
 
 
 class BatchedAnalytics:
@@ -162,7 +165,7 @@ class BatchedAnalytics:
         if self.bucket_batches:
             padded += [slabs[-1]] * (self._bucket(b) - b)
         key = layout_key(first) + ("__temporal_summary__", stage, norm,
-                                   len(padded))
+                                   len(padded), oplib.kernel_sig())
         fn = self._jitted.get(key)
         fresh = fn is None
         if fn is None:
@@ -268,7 +271,8 @@ class BatchedAnalytics:
                tuple(slot_layout(b) for b in bindings),
                tuple(Stage(s) for s in stages),
                tuple(slot_region(b) for b in bindings),
-               tuple(slot_seed_sig(s) for s in seeds), pre_sig)
+               tuple(slot_seed_sig(s) for s in seeds), pre_sig,
+               oplib.kernel_sig())
         fn = self._jitted.get(key)
         fresh = fn is None
         if fn is None:

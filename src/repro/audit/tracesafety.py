@@ -63,7 +63,7 @@ _ARRAY_ANNOTATIONS = re.compile(
 _TRACED_MODULES = frozenset({"jnp", "jax", "lax"})
 _WAIVE_RE = re.compile(r"#\s*audit:\s*waive\(([a-z\-,\s]+)\)")
 
-_DEFAULT_ROOTS = ("core", "analytics", "stream", "store")
+_DEFAULT_ROOTS = ("core", "analytics", "stream", "store", "kernels")
 
 
 def _waivers(source: str) -> dict[int, set[str]]:

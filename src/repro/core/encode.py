@@ -25,6 +25,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+
 from . import blocking
 from .stages import Compressed, Encoded, Scheme
 
@@ -153,11 +155,22 @@ def encode_device(c: Compressed, bits: int) -> Encoded:
 
 
 def decode_device(e: Encoded) -> Compressed:
-    """Stage-2 decode: unpack the payload back to residuals (D_p)."""
+    """Stage-2 decode: unpack the payload back to residuals (D_p).
+
+    Runs the Pallas bitplane-unpack kernel when kernels are enabled
+    (``REPRO_KERNELS`` != ``off``), the XLA gather-shift path otherwise —
+    both recover the exact packed integers, so the choice is invisible
+    downstream (pinned in ``tests/test_fused_kernels.py``).  The region
+    path (:func:`decode_region`) stays on the XLA word-gather: its cost
+    scales with the gathered words, which a dense-grid kernel would void.
+    """
     n = 1
     for s in e.padded_shape:
         n *= s
-    u = unpack_uniform(e.payload, n, e.bits)
+    if kernel_ops.kernels_enabled():
+        u = kernel_ops.unpack(e.payload, n, e.bits)
+    else:
+        u = unpack_uniform(e.payload, n, e.bits)
     residuals = unzigzag(u).reshape(e.padded_shape)
     return Compressed(
         residuals=residuals, metadata=e.metadata, bitwidths=e.bitwidths, eps=e.eps,

@@ -1,0 +1,213 @@
+"""Fused Pallas lowering rules: the alternate ``OpSpec`` backend.
+
+This module binds the VMEM-resident decode+op kernels in
+``repro.kernels.fused`` to the lowering-rule registry in
+:mod:`repro.core.oplib`.  Each :class:`FusedRule` pairs a rule callable
+(same ``fn(ctx, axis)`` signature as the XLA rules) with a static
+``covers`` predicate; ``oplib.select_rule`` picks the fused rule for a
+``(stage, family)`` cell only when kernels are enabled
+(``REPRO_KERNELS`` != ``off``) *and* the predicate accepts the concrete
+context — otherwise the cell's XLA rule runs, unchanged.  The registry
+invariant (enforced by ``spec_violations``) is that every fused cell has
+an XLA rule to fall back to, so disabling kernels can never make an op
+infeasible.
+
+Coverage matrix (2-D nd schemes only — 1-D partitioning has no spatial
+stencils, and rank != 2 fields fall back):
+
+=============  ==========================  ==========================
+op             lorenzo (HSZP_ND)           blockmean (HSZX_ND)
+=============  ==========================  ==========================
+derivative     ② ③ ④                       ② ③ ④
+gradient       ② ③ ④                       ② ③ ④
+laplacian      ②                           ② ③ ④
+=============  ==========================  ==========================
+
+The lorenzo ③④ laplacian cell is *deliberately* uncovered: its XLA rule
+reduces over per-axis difference planes without ever forming q, and a
+fused variant would have to materialize stage-③ integers to replicate
+the rule's exact f32 sequence — the fallback is the honest lowering.
+Statistics (mean/std) are likewise uncovered: their flat whole-extent
+f32 reductions cannot be reproduced bitwise by a tile-wise kernel
+accumulation.
+
+Bit-identity contract: every covered cell's fused output equals the XLA
+rule's output *bitwise* (``np.testing.assert_array_equal``), full-field
+and region-windowed, Compressed and Encoded — and the identity must hold
+in every *program shape* (solo jit, engine vmap, expression DAGs).  The
+kernels therefore emit exact-integer stencil planes (or, for the
+block-mean laplacians, the pre-eps f32 accumulation), and the rules here
+apply the float tail — the same ``astype(float32)`` / eps-multiply ops
+the XLA rules end with — on the already-sliced window.  With the multiply
+outside the kernel, the rule's output-producing op is a small plain-HLO
+multiply exactly like the XLA rules', so downstream fusion treats both
+backends identically; a trailing in-kernel multiply, by contrast, gets
+duplicated through the output slice into downstream adds and
+FMA-contracted shape-dependently, which broke divergence bit-identity.
+Stencil-then-slice equals slice-then-stencil on every interior element
+(``tests/test_fused_kernels.py`` pins all cells).
+
+Within a covered cell, each rule picks between the two kernel variants:
+full-field :class:`Encoded` contexts (no region plan, no materialized
+seed, 0 < bits < 32) take the *payload-input* kernels — gathered payload
+words -> in-kernel bitplane unpack -> recorrelation -> stencil, one pass,
+no residual plane in HBM — and everything else (Compressed containers,
+region plans, seeds) takes the residual-plane kernels on ``ctx.sub``.
+The in-kernel unpack is the same word arithmetic as
+``encode.unpack_uniform``, so both variants produce identical integers
+and the bit-identity contract is variant-independent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused as fk
+from repro.kernels import ops as kops
+
+from .stages import Encoded, Stage
+
+
+@dataclass(frozen=True)
+class FusedRule:
+    """A Pallas-backed lowering rule with a static coverage predicate."""
+
+    fn: Callable          # (ctx, axis) -> result, same signature as XLA rules
+    covers: Callable      # (ctx) -> bool: can this rule serve the context?
+
+    def __call__(self, ctx, axis: int):
+        return self.fn(ctx, axis)
+
+
+def _covers_2d(ctx) -> bool:
+    """Rank-2 nd fields only: the kernels are 2-D band kernels, and the
+    1-D schemes have no spatial stencils to fuse.  Judged on the container
+    layout (not ``ctx.sub``) so coverage never forces a decode."""
+    return ctx.scheme.is_nd and len(ctx.field.padded_shape) == 2
+
+
+def _payload2(ctx) -> bool:
+    """Can this context take the single-pass payload kernels?  Full-field
+    :class:`Encoded` queries with a uniformly packed bitstream (0 < bits
+    < 32 — bits==0 is the all-zero fast path, bits==32 stores raw words)
+    and no materialized seed: the kernel unpacks its band's gathered
+    payload words in VMEM and the residual plane never exists in HBM.
+    Region plans keep the gather-then-unpack XLA path (the plan's word
+    gather already reads only the window's payload)."""
+    return (isinstance(ctx.field, Encoded) and ctx.plan is None
+            and ctx._seed is None and 0 < ctx.field.bits < 32)
+
+
+def _window2(ctx) -> tuple[slice, slice]:
+    """The stencil-interior slices into the kernels' full padded-shape
+    outputs: the region window (or the padding crop) shrunk by one at each
+    end, so slicing after the kernel reads exactly the elements the XLA
+    rules' window-then-stencil path reads."""
+    if ctx.plan is not None:
+        w0, w1 = ctx.plan.window
+    else:
+        w0, w1 = (slice(0, s) for s in ctx.field.shape)
+    return slice(w0.start + 1, w0.stop - 1), slice(w1.start + 1, w1.stop - 1)
+
+
+def _interpret() -> bool:
+    return kops._interpret()
+
+
+# -- lorenzo family ---------------------------------------------------------
+
+def _lz(ctx, what: str):
+    if _payload2(ctx):
+        f = ctx.field
+        return fk.lorenzo_enc2d(f.payload, tuple(f.padded_shape), f.bits,
+                                what=what, interpret=_interpret())
+    return fk.lorenzo2d(ctx.sub.residuals, what=what, interpret=_interpret())
+
+
+def _deriv_lorenzo(ctx, axis: int) -> jax.Array:
+    out = _lz(ctx, f"deriv{axis}")
+    return out[_window2(ctx)].astype(jnp.float32) * ctx.eps
+
+
+def _grad_lorenzo(ctx, axis: int) -> tuple[jax.Array, ...]:
+    d0, d1 = _lz(ctx, "grad")
+    w = _window2(ctx)
+    return (d0[w].astype(jnp.float32) * ctx.eps,
+            d1[w].astype(jnp.float32) * ctx.eps)
+
+
+def _lap_lorenzo(ctx, axis: int) -> jax.Array:
+    out = _lz(ctx, "lap")
+    return out[_window2(ctx)].astype(jnp.float32) * (2.0 * ctx.eps)
+
+
+# -- blockmean family -------------------------------------------------------
+
+def _bm(ctx, what: str):
+    if _payload2(ctx):
+        f = ctx.field
+        return fk.blockmean_enc2d(f.payload, f.metadata,
+                                  tuple(f.padded_shape), tuple(f.block),
+                                  f.bits, what=what, interpret=_interpret())
+    sub = ctx.sub
+    return fk.blockmean2d(sub.residuals, sub.metadata, tuple(sub.block),
+                          what=what, interpret=_interpret())
+
+
+def _deriv_blockmean(ctx, axis: int) -> jax.Array:
+    out = _bm(ctx, f"deriv{axis}")
+    return out[_window2(ctx)].astype(jnp.float32) * ctx.eps
+
+
+def _grad_blockmean(ctx, axis: int) -> tuple[jax.Array, ...]:
+    d0, d1 = _bm(ctx, "grad")
+    w = _window2(ctx)
+    return (d0[w].astype(jnp.float32) * ctx.eps,
+            d1[w].astype(jnp.float32) * ctx.eps)
+
+
+def _lap_blockmean_p(ctx, axis: int) -> jax.Array:
+    return _bm(ctx, "lap_p")[_window2(ctx)] * (2.0 * ctx.eps)
+
+
+def _lap_blockmean_q(ctx, axis: int) -> jax.Array:
+    return _bm(ctx, "lap_q")[_window2(ctx)] * (2.0 * ctx.eps)
+
+
+# -- registries wired onto the OpSpecs (oplib imports these) ----------------
+
+def _rule(fn) -> FusedRule:
+    return FusedRule(fn, _covers_2d)
+
+
+#: derivative cells — also dispatched by ``oplib._derivative_at``, which
+#: hands the kernels to gradient/divergence/curl compositions for free.
+DERIVATIVE: dict[tuple[Stage, str], FusedRule] = {
+    (Stage.P, "lorenzo"): _rule(_deriv_lorenzo),
+    (Stage.Q, "lorenzo"): _rule(_deriv_lorenzo),
+    (Stage.F, "lorenzo"): _rule(_deriv_lorenzo),
+    (Stage.P, "blockmean"): _rule(_deriv_blockmean),
+    (Stage.Q, "blockmean"): _rule(_deriv_blockmean),
+    (Stage.F, "blockmean"): _rule(_deriv_blockmean),
+}
+
+#: gradient gets its own cells: one dual-output kernel pass instead of two.
+GRADIENT: dict[tuple[Stage, str], FusedRule] = {
+    (Stage.P, "lorenzo"): _rule(_grad_lorenzo),
+    (Stage.Q, "lorenzo"): _rule(_grad_lorenzo),
+    (Stage.F, "lorenzo"): _rule(_grad_lorenzo),
+    (Stage.P, "blockmean"): _rule(_grad_blockmean),
+    (Stage.Q, "blockmean"): _rule(_grad_blockmean),
+    (Stage.F, "blockmean"): _rule(_grad_blockmean),
+}
+
+#: laplacian: lorenzo ③④ deliberately absent (see module docstring).
+LAPLACIAN: dict[tuple[Stage, str], FusedRule] = {
+    (Stage.P, "lorenzo"): _rule(_lap_lorenzo),
+    (Stage.P, "blockmean"): _rule(_lap_blockmean_p),
+    (Stage.Q, "blockmean"): _rule(_lap_blockmean_q),
+    (Stage.F, "blockmean"): _rule(_lap_blockmean_q),
+}

@@ -45,8 +45,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+
 from . import blocking, quantize
 from . import encode as encode_mod
+from . import fused as fused_mod
 from . import region as R
 from .pipeline import HSZCompressor, UnsupportedStageError, by_name
 from .stages import (Compressed, Encoded, Scheme, Stage, _dataclass_pytree)
@@ -535,6 +538,11 @@ class OpSpec:
     ``lower`` maps ``(stage, family)`` — family one of ``"blockmean"``,
     ``"lorenzo"``, ``"any"`` — to the postlude rule for that cell; cells
     absent from both family and ``"any"`` keys are infeasible (Table I).
+    ``fused`` optionally maps the same cells to Pallas-backed
+    :class:`repro.core.fused.FusedRule` alternates; :func:`select_rule`
+    prefers a fused rule when kernels are enabled and its coverage
+    predicate accepts the context, and every fused cell must have an XLA
+    rule to fall back to (enforced by :func:`spec_violations`).
     ``closure`` gives the region dependency closure of the op's prelude;
     vector ops instead declare ``component_axes`` (which derivative axes
     each component feeds) from which per-component closures derive.
@@ -548,6 +556,8 @@ class OpSpec:
     closure: Callable[[Scheme, Stage, int], R.Closure] | None = None
     component_axes: Callable[[int], tuple[tuple[int, ...], ...]] | None = None
     lower: Mapping[tuple[Stage, str], Rule] = dc_field(default_factory=dict)
+    fused: Mapping[tuple[Stage, str], fused_mod.FusedRule] = dc_field(
+        default_factory=dict)
     lower_vector: Callable | None = None
     lower_temporal: Callable | None = None  # (TemporalSummary, eps) -> result
 
@@ -586,11 +596,39 @@ _DERIV_RULES: dict[tuple[Stage, str], Rule] = {
 }
 
 
+def kernel_sig() -> str:
+    """The resolved kernel backend mode — a *static* lowering input: any
+    cache key over a traced ``compute`` program must include it, since the
+    fused-vs-XLA selection happens at trace time (the engine's keys do)."""
+    return kernel_ops.kernel_mode()
+
+
+def _select(fused: Mapping, lower: Mapping, stage: Stage, family: str,
+            ctx: StageContext) -> Rule:
+    """The one dispatch rule: the cell's fused Pallas rule when kernels are
+    enabled and it covers this concrete context, else the XLA rule."""
+    fr = fused.get((stage, family))
+    if fr is not None and kernel_ops.kernels_enabled() and fr.covers(ctx):
+        return fr
+    rule = lower.get((stage, family)) or lower.get((stage, "any"))
+    if rule is None:
+        raise KeyError((stage, family))
+    return rule
+
+
+def select_rule(spec: OpSpec, stage: Stage, family: str,
+                ctx: StageContext) -> Rule:
+    """Resolve the lowering rule :func:`compute` runs for one op cell."""
+    return _select(spec.fused, spec.lower, Stage(stage), family, ctx)
+
+
 def _derivative_at(ctx: StageContext, axis: int) -> jax.Array:
     """Dispatch the derivative rule for ``ctx`` — the shared postlude every
-    multivariate/gradient lowering is assembled from."""
+    multivariate/gradient lowering is assembled from.  Goes through the
+    fused backend too, so divergence/curl/vector compositions pick up the
+    kernels without their own cells."""
     family = family_of(ctx.scheme)
-    rule = _DERIV_RULES.get((ctx.stage, family)) or _DERIV_RULES[(ctx.stage, "any")]
+    rule = _select(fused_mod.DERIVATIVE, _DERIV_RULES, ctx.stage, family, ctx)
     return rule(ctx, axis)
 
 
@@ -652,18 +690,21 @@ OPS: dict[str, OpSpec] = {
                       (Stage.Q, "any"): _std_q,
                       (Stage.F, "any"): _std_f}),
         OpSpec("derivative", "field", "differentiation", _stencil_stages,
-               needs_axis=True, closure=_deriv_closure, lower=_DERIV_RULES),
+               needs_axis=True, closure=_deriv_closure, lower=_DERIV_RULES,
+               fused=fused_mod.DERIVATIVE),
         OpSpec("gradient", "field", "differentiation", _stencil_stages,
                closure=_gradient_closure,
                lower={(Stage.P, "any"): _gradient_rule,
                       (Stage.Q, "any"): _gradient_rule,
-                      (Stage.F, "any"): _gradient_rule}),
+                      (Stage.F, "any"): _gradient_rule},
+               fused=fused_mod.GRADIENT),
         OpSpec("laplacian", "field", "differentiation", _stencil_stages,
                closure=_stat_closure,  # hull / cover: all axes' diffs
                lower={(Stage.P, "lorenzo"): _lap_p_lorenzo,
                       (Stage.P, "blockmean"): _lap_p_blockmean,
                       (Stage.Q, "any"): _lap_q,
-                      (Stage.F, "any"): _lap_f}),
+                      (Stage.F, "any"): _lap_f},
+               fused=fused_mod.LAPLACIAN),
         OpSpec("divergence", "vector", "multivariate", _stencil_stages,
                component_axes=_div_axes, lower_vector=_divergence_vector),
         OpSpec("curl", "vector", "multivariate", _stencil_stages,
@@ -998,6 +1039,22 @@ def spec_violations(spec: OpSpec) -> list:
                             f"op {spec.name!r}: closure({scheme.value}, "
                             f"{stage.name}) = {value!r} is not a valid "
                             "region closure"))
+    # fused cells are *alternates*: each needs an XLA rule to fall back to
+    # (REPRO_KERNELS=off / an uncovered context must never lose the op),
+    # and must be a well-formed FusedRule (callable with a covers predicate)
+    for (stage, fam), fr in spec.fused.items():
+        stage = Stage(stage)
+        if not (callable(fr) and callable(getattr(fr, "covers", None))):
+            out.append(("invalid-fused-rule",
+                        f"op {spec.name!r}: fused cell (stage {stage.name}, "
+                        f"{fam}) holds {fr!r}, not a FusedRule (callable "
+                        "with a covers predicate)"))
+        if (spec.lower.get((stage, fam)) is None
+                and spec.lower.get((stage, "any")) is None):
+            out.append(("fused-cell-without-fallback",
+                        f"op {spec.name!r}: fused cell (stage {stage.name}, "
+                        f"{fam}) has no XLA lowering rule to fall back to "
+                        "when kernels are off or the context is uncovered"))
     # a declared rule no feasible cell can ever reach is dead weight — and
     # usually a sign the feasibility row and the rule table disagree
     for (stage, fam), _rule in spec.lower.items():
@@ -1018,6 +1075,7 @@ def spec_violations(spec: OpSpec) -> list:
 _REJECTING = frozenset({
     "invalid-arity", "missing-lowering-rule", "ambiguous-lowering-rule",
     "missing-closure", "invalid-closure",
+    "invalid-fused-rule", "fused-cell-without-fallback",
 })
 
 
@@ -1180,8 +1238,7 @@ def compute(target, ops: str | Sequence[str], stage: Stage, *,
     family = family_of(c.scheme)
     out = {}
     for spec in specs:
-        rule = spec.lower.get((stage, family)) or spec.lower[(stage, "any")]
-        out[spec.name] = rule(ctx, axis)
+        out[spec.name] = select_rule(spec, stage, family, ctx)(ctx, axis)
     return out
 
 

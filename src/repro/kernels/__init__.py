@@ -1,6 +1,6 @@
 """Pallas TPU kernels for HSZ compute hot-spots (validated vs ref.py)."""
 
-from . import ops, ref
+from . import fused, ops, ref
 from .ops import (
     block_stats,
     grad2d,

@@ -20,6 +20,11 @@ from jax.experimental import pallas as pl
 VALS = 4096  # values per grid step; V*bits <= 128K int32 = 512 KiB VMEM
 
 
+def _words_for(n: int, bits: int) -> int:
+    """uint32 words holding ``n`` values at ``bits`` (= encode.words_for)."""
+    return -(-(n * bits) // 32) if bits > 0 else 0
+
+
 def _pack_kernel(u_ref, o_ref, *, bits: int):
     u = u_ref[...].astype(jnp.uint32)
     shifts = jnp.arange(bits, dtype=jnp.uint32)
@@ -39,45 +44,59 @@ def _unpack_kernel(w_ref, o_ref, *, bits: int):
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def pack(u: jax.Array, bits: int, *, interpret: bool = False) -> jax.Array:
-    """Pack flat zigzag uint32 values; ``u.size`` must be a VALS multiple.
+    """Pack flat zigzag uint32 values at static width ``bits``.
 
-    Matches ``repro.core.encode.pack_uniform`` bit-exactly.
+    Matches ``repro.core.encode.pack_uniform`` bit-exactly for any length:
+    a non-multiple-of-``VALS`` tail is zero-padded to the next grid step —
+    zero values contribute zero bits, and fixed-rate bit ranges are
+    disjoint, so slicing the word stream back to ``words_for(n, bits)``
+    words is word-identical to packing the unpadded input.
     """
     if bits == 0:
         return jnp.zeros((0,), jnp.uint32)
     if bits == 32:
         return u.astype(jnp.uint32)
     n = u.shape[0]
-    if n % VALS:
-        raise ValueError(f"n={n} must be a multiple of {VALS}")
+    pad = -n % VALS
+    if pad:
+        u = jnp.concatenate(
+            [u.astype(jnp.uint32), jnp.zeros((pad,), jnp.uint32)])
+    n_pad = n + pad
     words_per = VALS * bits // 32
-    grid = (n // VALS,)
-    return pl.pallas_call(
+    grid = (n_pad // VALS,)
+    out = pl.pallas_call(
         functools.partial(_pack_kernel, bits=bits),
         grid=grid,
         in_specs=[pl.BlockSpec((VALS,), lambda i: (i,))],
         out_specs=pl.BlockSpec((words_per,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n * bits // 32,), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((n_pad * bits // 32,), jnp.uint32),
         interpret=interpret,
     )(u.astype(jnp.uint32))
+    return out[:_words_for(n, bits)]
 
 
 @functools.partial(jax.jit, static_argnames=("n", "bits", "interpret"))
 def unpack(words: jax.Array, n: int, bits: int, *, interpret: bool = False) -> jax.Array:
-    """Inverse of :func:`pack`."""
+    """Inverse of :func:`pack` for any ``n`` (tail words zero-padded)."""
     if bits == 0:
         return jnp.zeros((n,), jnp.uint32)
     if bits == 32:
         return words[:n].astype(jnp.uint32)
-    if n % VALS:
-        raise ValueError(f"n={n} must be a multiple of {VALS}")
+    pad = -n % VALS
+    n_pad = n + pad
     words_per = VALS * bits // 32
-    grid = (n // VALS,)
-    return pl.pallas_call(
+    nw_pad = n_pad * bits // 32
+    words = words.astype(jnp.uint32)
+    if words.shape[0] < nw_pad:
+        words = jnp.concatenate(
+            [words, jnp.zeros((nw_pad - words.shape[0],), jnp.uint32)])
+    grid = (n_pad // VALS,)
+    out = pl.pallas_call(
         functools.partial(_unpack_kernel, bits=bits),
         grid=grid,
         in_specs=[pl.BlockSpec((words_per,), lambda i: (i,))],
         out_specs=pl.BlockSpec((VALS,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.uint32),
         interpret=interpret,
-    )(words.astype(jnp.uint32))
+    )(words[:nw_pad])
+    return out[:n]

@@ -1,0 +1,471 @@
+"""Fused recorrelation + op-postlude Pallas kernels (2-D stage hot path).
+
+The paper's multi-stage design exists to avoid paying full decompression per
+analytical operation; these kernels take the argument one level lower: a
+stage reconstruction feeding a stencil never materializes its *integer
+intermediate* (the Lorenzo cumsum planes, the upsampled block means, the
+stage-③ q array) in HBM at all.  One pass reads the residual band into
+VMEM, recorrelates in registers, and writes only the stencil plane.
+
+Each family has two kernel variants sharing one band body: the
+*residual-plane* kernels (``lorenzo2d`` / ``blockmean2d``) read a decoded
+``(r, n1)`` residual band, and the *payload-input* kernels
+(``lorenzo_enc2d`` / ``blockmean_enc2d``) go one step further for
+:class:`~repro.core.stages.Encoded` fields — each grid cell takes its
+band's *gathered payload words*, bitplane-unpacks them in VMEM
+(``_unpack_span``, the same word/shift/mask arithmetic as
+``encode.unpack_uniform``, hence bit-identical integers), recorrelates,
+and writes only the stencil plane: decode + op in a single pass, with the
+residual plane never existing in HBM either.  Cross-band state stays
+tiny: halo rows are unpacked host-side at row cost, and the Lorenzo
+cross-band ``base`` prefix comes from a payload-input column-sum pass
+(int32 modular, so any summation order is exact).
+
+Design constraints (why these kernels look the way they do):
+
+* **Carry-free / vmap-safe.**  The batched analytics engine runs every
+  lowering under ``jax.vmap``; Pallas batching prepends a grid dimension,
+  which silently breaks ``pl.program_id``-keyed sequential carries (see
+  ``prefix_stats.py``, which is why *that* kernel stays unwired).  Here
+  every grid cell is independent: cross-band prefix state enters as a tiny
+  precomputed ``base`` input (exclusive band prefix of per-band column
+  sums, ``n_bands x n1`` — R× smaller than the D-plane it replaces), and
+  ±1-row halos enter as strided ``(n_bands, n1)`` row gathers.
+
+* **Bit-identity via integer outputs.**  Each kernel emits the *exact
+  integer* stencil plane (int32, modular — associative, so any in-kernel
+  regrouping is exact); the float tail (cast + eps multiply) is applied by
+  the lowering rules in ``repro.core.fused`` with the identical operations
+  the XLA rules use.  Keeping the float tail outside the kernel is what
+  makes composition bit-stable: a trailing in-kernel multiply can be
+  duplicated into a downstream consumer and FMA-contracted by XLA's CPU
+  fusion *shape-dependently* (the interpret-mode grid loop unrolls for
+  small fields), which broke batched-vs-per-field bit-identity for
+  divergence.  The block-mean laplacians are the one exception — their
+  contract is a specific f32 accumulation *sequence* — so they emit that
+  f32 sum (final op an add, same producer pattern as the XLA rule) and
+  leave only the eps multiply outside.
+
+* **Full-shape outputs, window slicing outside.**  Stencil-then-slice
+  equals slice-then-stencil for every interior element, so kernels emit
+  full padded-shape planes (boundary rows/columns are don't-care) and the
+  lowering rule applies the same window/interior slices the XLA rules use.
+  That keeps one kernel per (family, op) serving full-field, cropped, and
+  region-windowed queries alike.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAX_BAND = 256  # target rows per grid step (VMEM residency, f32 min-tile ok)
+_WORD_BITS = 32
+
+
+def band_rows(n0: int, mult: int = 1) -> int:
+    """Largest divisor of ``n0`` that is a multiple of ``mult`` and at most
+    ``MAX_BAND`` (falls back to ``mult``, which always divides ``n0``)."""
+    g = n0 // mult
+    best = mult
+    for d in range(1, g + 1):
+        if g % d == 0 and mult * d <= MAX_BAND:
+            best = mult * d
+    return best
+
+
+def _row_halo(x: jax.Array, r: int, side: str) -> jax.Array:
+    """Per-band ±1 halo rows of ``x``: ``prev[b] = x[b*r - 1]`` (zeros for
+    band 0), ``next[b] = x[(b+1)*r]`` (zeros for the last band)."""
+    zero = jnp.zeros((1, x.shape[1]), x.dtype)
+    if side == "prev":
+        return jnp.concatenate([zero, x[r - 1::r][:-1]], axis=0)
+    return jnp.concatenate([x[r::r], zero], axis=0)
+
+
+def _shift_rows(x, prev, nxt):
+    """(x_{i-1}, x_{i+1}) with cross-band halo rows."""
+    up = jnp.concatenate([prev, x[:-1]], axis=0)
+    dn = jnp.concatenate([x[1:], nxt], axis=0)
+    return up, dn
+
+
+def _shift_cols(x):
+    """(x_{j-1}, x_{j+1}); boundary columns are don't-care (sliced off)."""
+    zero = jnp.zeros((x.shape[0], 1), x.dtype)
+    left = jnp.concatenate([zero, x[:, :-1]], axis=1)
+    right = jnp.concatenate([x[:, 1:], zero], axis=1)
+    return left, right
+
+
+# ---------------------------------------------------------------------------
+# in-kernel bitplane unpack (payload-input kernel variants)
+# ---------------------------------------------------------------------------
+
+def _unpack_span(words: jax.Array, bit0: jax.Array, nv: int,
+                 bits: int) -> jax.Array:
+    """Unpack ``nv`` zigzag values starting ``bit0`` bits into ``words``.
+
+    Identical arithmetic to ``encode.unpack_uniform`` with the global bit
+    offset split into a word base (resolved by the caller's band gather)
+    and the residual in-word offset ``bit0`` — same words, same shifts,
+    same masks, so the recovered integers are bit-identical.
+    """
+    mask = jnp.uint32((1 << bits) - 1)
+    offs = (bit0.astype(jnp.uint32)
+            + jnp.arange(nv, dtype=jnp.uint32) * jnp.uint32(bits))
+    widx = (offs >> 5).astype(jnp.int32)
+    shift = offs & jnp.uint32(31)
+    lo = words[widx] >> shift
+    carry = shift > jnp.uint32(_WORD_BITS - bits)
+    hi_shift = jnp.where(carry, jnp.uint32(_WORD_BITS) - shift,
+                         jnp.uint32(31))
+    hi = jnp.where(carry, words[widx + 1] << hi_shift, jnp.uint32(0))
+    return (lo | hi) & mask
+
+
+def _unzigzag(u: jax.Array) -> jax.Array:
+    """signed residuals from zigzag words — ``encode.unzigzag`` verbatim."""
+    ui = u.astype(jnp.int32)
+    return (ui >> 1) ^ -(ui & 1)
+
+
+def band_payload(payload: jax.Array, nv: int, bits: int,
+                 nb: int) -> tuple[jax.Array, jax.Array]:
+    """Per-band payload word windows for in-kernel unpacking.
+
+    Band ``b`` covers values ``[b*nv, (b+1)*nv)`` of the flat packed order;
+    its bits span at most ``nv*bits//32 + 2`` words (+1 for the in-word
+    offset, +1 for the carry word).  Returns the ``(nb, wpb)`` word matrix
+    and the ``(nb, 1)`` in-word bit offsets — the only payload-sized
+    transfer of the fused-decode path.
+    """
+    wpb = (nv * bits) // _WORD_BITS + 2
+    bit0 = jnp.arange(nb, dtype=jnp.int32) * jnp.int32(nv * bits)
+    w0 = bit0 >> 5
+    s0 = bit0 & 31
+    pad = jnp.concatenate([payload, jnp.zeros((wpb,), jnp.uint32)])
+    words = pad[w0[:, None] + jnp.arange(wpb, dtype=jnp.int32)[None, :]]
+    return words, s0.reshape(nb, 1)
+
+
+def unpack_rows(payload: jax.Array, rows: jax.Array, n1: int,
+                bits: int) -> jax.Array:
+    """Unpack whole rows of the padded plane (halo rows for the payload
+    kernels) — ``unpack_uniform``'s gather arithmetic restricted to the
+    requested rows, cost proportional to the rows, not the field."""
+    mask = jnp.uint32((1 << bits) - 1)
+    offs = ((rows[:, None].astype(jnp.uint32) * jnp.uint32(n1)
+             + jnp.arange(n1, dtype=jnp.uint32)[None, :])
+            * jnp.uint32(bits))
+    widx = (offs >> 5).astype(jnp.int32)
+    shift = offs & jnp.uint32(31)
+    pad = jnp.concatenate([payload, jnp.zeros((1,), jnp.uint32)])
+    lo = pad[widx] >> shift
+    carry = shift > jnp.uint32(_WORD_BITS - bits)
+    hi_shift = jnp.where(carry, jnp.uint32(_WORD_BITS) - shift,
+                         jnp.uint32(31))
+    hi = jnp.where(carry, pad[widx + 1] << hi_shift, jnp.uint32(0))
+    return _unzigzag((lo | hi) & mask)
+
+
+# ---------------------------------------------------------------------------
+# Lorenzo family: residual band -> cumsum planes -> stencil, all in VMEM
+# ---------------------------------------------------------------------------
+
+def _lorenzo_core(p, ph_row, base_row, out_refs, what: str):
+    """Shared band body: D0 = cumsum(p, axis=1) (+1-row halo ``ph_row``),
+    D1 = base + cumsum(p, axis=0); emit the requested integer planes.
+
+    Derivative planes are ``D[+1] + D[0]`` — identical integers at stages
+    ②③④ (q[i+1]-q[i-1] telescopes to D[i+1]+D[i]); the laplacian plane is
+    ``sum_a (D_a[+1] - D_a[0])``, Eq. V-B.3.
+    """
+    outs = iter(out_refs)
+    if what in ("deriv0", "grad", "lap"):
+        da = jnp.cumsum(p, axis=1)
+        da_next = jnp.concatenate([da[1:], jnp.cumsum(ph_row, axis=1)],
+                                  axis=0)
+    if what in ("deriv1", "grad", "lap"):
+        db = base_row + jnp.cumsum(p, axis=0)
+        db_next = jnp.concatenate(
+            [db[:, 1:], jnp.zeros((p.shape[0], 1), db.dtype)], axis=1)
+    if what in ("deriv0", "grad"):
+        next(outs)[...] = da_next + da
+    if what in ("deriv1", "grad"):
+        next(outs)[...] = db_next + db
+    if what == "lap":
+        next(outs)[...] = (da_next - da) + (db_next - db)
+
+
+def _lorenzo_kernel(p_ref, ph_ref, base_ref, *out_refs, what: str):
+    _lorenzo_core(p_ref[...], ph_ref[...], base_ref[...], out_refs, what)
+
+
+def _lorenzo_enc_kernel(w_ref, s0_ref, ph_ref, base_ref, *out_refs,
+                        what: str, r: int, n1: int, bits: int):
+    """Payload-input variant: gathered band words -> in-kernel bitplane
+    unpack -> the same Lorenzo band body.  The residual plane exists only
+    in VMEM."""
+    p = _unzigzag(_unpack_span(w_ref[0], s0_ref[0, 0], r * n1,
+                               bits)).reshape(r, n1)
+    _lorenzo_core(p, ph_ref[...], base_ref[...], out_refs, what)
+
+
+def _colsum_enc_kernel(w_ref, s0_ref, o_ref, *, r: int, n1: int, bits: int):
+    """Payload-input band column sums (the cross-band ``base`` prefix
+    input) — int32 modular, so any summation order is exact."""
+    p = _unzigzag(_unpack_span(w_ref[0], s0_ref[0, 0], r * n1,
+                               bits)).reshape(r, n1)
+    o_ref[...] = jnp.sum(p, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("what", "interpret"))
+def lorenzo2d(p: jax.Array, *, what: str, interpret: bool = False):
+    """Fused Lorenzo recorrelation + integer stencil over a 2-D residual
+    plane.
+
+    ``what``: ``deriv0`` / ``deriv1`` (one full-shape int32 plane), ``grad``
+    (both planes from one pass), ``lap`` (V-B.3 int32 plane).  Boundary
+    rows/columns of each output are don't-care; callers slice the same
+    window the XLA lowering rules slice, then apply the float tail.
+    """
+    n0, n1 = p.shape
+    r = band_rows(n0)
+    nb = n0 // r
+    halo = _row_halo(p, r, "next")
+    band_sums = jnp.sum(p.reshape(nb, r, n1), axis=1)
+    base = jnp.concatenate(
+        [jnp.zeros((1, n1), p.dtype), jnp.cumsum(band_sums, axis=0)[:-1]],
+        axis=0)
+    band = pl.BlockSpec((r, n1), lambda b: (b, 0))
+    row = pl.BlockSpec((1, n1), lambda b: (b, 0))
+    n_out = 2 if what == "grad" else 1
+    out_spec = [band] * n_out
+    out_shape = [jax.ShapeDtypeStruct((n0, n1), p.dtype)] * n_out
+    out = pl.pallas_call(
+        functools.partial(_lorenzo_kernel, what=what),
+        grid=(nb,),
+        in_specs=[band, row, row],
+        out_specs=out_spec if n_out > 1 else out_spec[0],
+        out_shape=out_shape if n_out > 1 else out_shape[0],
+        interpret=interpret,
+    )(p, halo, base)
+    return out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shape", "bits", "what", "interpret"))
+def lorenzo_enc2d(payload: jax.Array, shape: tuple, bits: int, *,
+                  what: str, interpret: bool = False):
+    """Single-pass decode + Lorenzo stencil from the packed payload.
+
+    Two payload-input kernel passes, neither of which materializes the
+    residual plane in HBM: a band column-sum pass (for the tiny cross-band
+    ``base`` prefix), then the stencil pass — each unpacks its band's
+    gathered payload words in VMEM.  Halo rows are unpacked host-side at
+    row cost.  The recovered integers are bit-identical to
+    ``decode_device`` + :func:`lorenzo2d` (same unpack arithmetic), so the
+    output planes are too.
+    """
+    n0, n1 = shape
+    r = band_rows(n0)
+    nb = n0 // r
+    words, s0 = band_payload(payload, r * n1, bits, nb)
+    wpb = words.shape[1]
+    halo = jnp.concatenate(
+        [unpack_rows(payload, jnp.arange(1, nb, dtype=jnp.int32) * r,
+                     n1, bits),
+         jnp.zeros((1, n1), jnp.int32)], axis=0)
+    wband = pl.BlockSpec((1, wpb), lambda b: (b, 0))
+    srow = pl.BlockSpec((1, 1), lambda b: (b, 0))
+    row = pl.BlockSpec((1, n1), lambda b: (b, 0))
+    band = pl.BlockSpec((r, n1), lambda b: (b, 0))
+    colsums = pl.pallas_call(
+        functools.partial(_colsum_enc_kernel, r=r, n1=n1, bits=bits),
+        grid=(nb,),
+        in_specs=[wband, srow],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((nb, n1), jnp.int32),
+        interpret=interpret,
+    )(words, s0)
+    base = jnp.concatenate(
+        [jnp.zeros((1, n1), jnp.int32), jnp.cumsum(colsums, axis=0)[:-1]],
+        axis=0)
+    n_out = 2 if what == "grad" else 1
+    out_spec = [band] * n_out
+    out_shape = [jax.ShapeDtypeStruct((n0, n1), jnp.int32)] * n_out
+    out = pl.pallas_call(
+        functools.partial(_lorenzo_enc_kernel, what=what, r=r, n1=n1,
+                          bits=bits),
+        grid=(nb,),
+        in_specs=[wband, srow, row, row],
+        out_specs=out_spec if n_out > 1 else out_spec[0],
+        out_shape=out_shape if n_out > 1 else out_shape[0],
+        interpret=interpret,
+    )(words, s0, halo, base)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# block-mean family: residual band + metadata grid band -> stencil
+# ---------------------------------------------------------------------------
+
+def _blockmean_core(p, pp_row, pn_row, mg, mp_row, mn_row, out_refs,
+                    what: str, block: tuple):
+    """Shared band body: upsample the metadata grid band in VMEM (never in
+    HBM) and emit the requested stencil planes.
+
+    Derivative planes serve stages ②③④ alike: with q = p + m elementwise,
+    q[+1]-q[-1] and (p[+1]-p[-1]) + (m[+1]-m[-1]) are the same int32 value.
+    The two laplacian variants replicate the XLA rules' distinct f32
+    accumulation orders (②: stencil(p) + stencil(m); ③④: stencil(p + m)),
+    minus the trailing eps multiply, which the lowering rule applies.
+    """
+    b0, b1 = block
+    m = jnp.repeat(jnp.repeat(mg, b0, axis=0), b1, axis=1)
+    m_prev = jnp.repeat(mp_row, b1, axis=1)
+    m_next = jnp.repeat(mn_row, b1, axis=1)
+    p_up, p_dn = _shift_rows(p, pp_row, pn_row)
+    m_up, m_dn = _shift_rows(m, m_prev, m_next)
+    outs = iter(out_refs)
+
+    def lap5(c, dn, up, right, left):
+        # exact oplib._laplacian_stencil order: -2*nd*c, +hi, +lo per axis
+        acc = c.astype(jnp.float32) * -4.0
+        acc = acc + dn.astype(jnp.float32)
+        acc = acc + up.astype(jnp.float32)
+        acc = acc + right.astype(jnp.float32)
+        acc = acc + left.astype(jnp.float32)
+        return acc
+
+    if what in ("deriv0", "grad"):
+        next(outs)[...] = (p_dn - p_up) + (m_dn - m_up)
+    if what in ("deriv1", "grad"):
+        p_l, p_r = _shift_cols(p)
+        m_l, m_r = _shift_cols(m)
+        next(outs)[...] = (p_r - p_l) + (m_r - m_l)
+    if what == "lap_p":
+        p_l, p_r = _shift_cols(p)
+        m_l, m_r = _shift_cols(m)
+        lp = lap5(p, p_dn, p_up, p_r, p_l)
+        lm = lap5(m, m_dn, m_up, m_r, m_l)
+        next(outs)[...] = lp + lm
+    if what == "lap_q":
+        p_l, p_r = _shift_cols(p)
+        m_l, m_r = _shift_cols(m)
+        next(outs)[...] = lap5(p + m, p_dn + m_dn, p_up + m_up,
+                               p_r + m_r, p_l + m_l)
+
+
+def _blockmean_kernel(p_ref, pp_ref, pn_ref, mg_ref, mp_ref, mn_ref,
+                      *out_refs, what: str, block: tuple):
+    _blockmean_core(p_ref[...], pp_ref[...], pn_ref[...], mg_ref[...],
+                    mp_ref[...], mn_ref[...], out_refs, what, block)
+
+
+def _blockmean_enc_kernel(w_ref, s0_ref, pp_ref, pn_ref, mg_ref, mp_ref,
+                          mn_ref, *out_refs, what: str, block: tuple,
+                          r: int, n1: int, bits: int):
+    """Payload-input variant: gathered band words -> in-kernel bitplane
+    unpack -> the same block-mean band body.  Only the ±1 halo rows of the
+    residual plane are unpacked host-side; the band itself exists only in
+    VMEM."""
+    p = _unzigzag(_unpack_span(w_ref[0], s0_ref[0, 0], r * n1,
+                               bits)).reshape(r, n1)
+    _blockmean_core(p, pp_ref[...], pn_ref[...], mg_ref[...], mp_ref[...],
+                    mn_ref[...], out_refs, what, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "what", "interpret"))
+def blockmean2d(p: jax.Array, meta: jax.Array, block: tuple, *,
+                what: str, interpret: bool = False):
+    """Fused block-mean upsample + stencil over a 2-D residual plane.
+
+    ``meta`` is the block-grid metadata (``n0//b0 x n1//b1``); ``what``:
+    ``deriv0`` / ``deriv1`` / ``grad`` (int32 planes) / ``lap_p`` (stage-②
+    f32 accumulation) / ``lap_q`` (stage-③④ f32 accumulation).  Boundary
+    rows/columns of each output are don't-care, as in :func:`lorenzo2d`.
+    """
+    n0, n1 = p.shape
+    b0, b1 = block
+    r = band_rows(n0, b0)
+    nb = n0 // r
+    rb = r // b0
+    p_prev = _row_halo(p, r, "prev")
+    p_next = _row_halo(p, r, "next")
+    m_prev = _row_halo(meta, rb, "prev")
+    m_next = _row_halo(meta, rb, "next")
+    ng1 = meta.shape[1]
+    band = pl.BlockSpec((r, n1), lambda b: (b, 0))
+    row = pl.BlockSpec((1, n1), lambda b: (b, 0))
+    gband = pl.BlockSpec((rb, ng1), lambda b: (b, 0))
+    grow = pl.BlockSpec((1, ng1), lambda b: (b, 0))
+    n_out = 2 if what == "grad" else 1
+    dtype = jnp.float32 if what in ("lap_p", "lap_q") else p.dtype
+    out_spec = [band] * n_out
+    out_shape = [jax.ShapeDtypeStruct((n0, n1), dtype)] * n_out
+    out = pl.pallas_call(
+        functools.partial(_blockmean_kernel, what=what, block=(b0, b1)),
+        grid=(nb,),
+        in_specs=[band, row, row, gband, grow, grow],
+        out_specs=out_spec if n_out > 1 else out_spec[0],
+        out_shape=out_shape if n_out > 1 else out_shape[0],
+        interpret=interpret,
+    )(p, p_prev, p_next, meta, m_prev, m_next)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "block", "bits",
+                                             "what", "interpret"))
+def blockmean_enc2d(payload: jax.Array, meta: jax.Array, shape: tuple,
+                    block: tuple, bits: int, *, what: str,
+                    interpret: bool = False):
+    """Single-pass decode + block-mean stencil from the packed payload.
+
+    One payload-input kernel pass: each grid cell unpacks its band's
+    gathered payload words in VMEM, upsamples the metadata grid band, and
+    writes only the stencil plane — the residual plane never exists in
+    HBM.  Halo rows (±1 row per band) are unpacked host-side at row cost.
+    Bit-identical to ``decode_device`` + :func:`blockmean2d`.
+    """
+    n0, n1 = shape
+    b0, b1 = block
+    r = band_rows(n0, b0)
+    nb = n0 // r
+    rb = r // b0
+    words, s0 = band_payload(payload, r * n1, bits, nb)
+    wpb = words.shape[1]
+    p_prev = jnp.concatenate(
+        [jnp.zeros((1, n1), jnp.int32),
+         unpack_rows(payload, jnp.arange(1, nb, dtype=jnp.int32) * r - 1,
+                     n1, bits)], axis=0)
+    p_next = jnp.concatenate(
+        [unpack_rows(payload, jnp.arange(1, nb, dtype=jnp.int32) * r,
+                     n1, bits),
+         jnp.zeros((1, n1), jnp.int32)], axis=0)
+    m_prev = _row_halo(meta, rb, "prev")
+    m_next = _row_halo(meta, rb, "next")
+    ng1 = meta.shape[1]
+    wband = pl.BlockSpec((1, wpb), lambda b: (b, 0))
+    srow = pl.BlockSpec((1, 1), lambda b: (b, 0))
+    band = pl.BlockSpec((r, n1), lambda b: (b, 0))
+    row = pl.BlockSpec((1, n1), lambda b: (b, 0))
+    gband = pl.BlockSpec((rb, ng1), lambda b: (b, 0))
+    grow = pl.BlockSpec((1, ng1), lambda b: (b, 0))
+    n_out = 2 if what == "grad" else 1
+    dtype = jnp.float32 if what in ("lap_p", "lap_q") else jnp.int32
+    out_spec = [band] * n_out
+    out_shape = [jax.ShapeDtypeStruct((n0, n1), dtype)] * n_out
+    out = pl.pallas_call(
+        functools.partial(_blockmean_enc_kernel, what=what, block=(b0, b1),
+                          r=r, n1=n1, bits=bits),
+        grid=(nb,),
+        in_specs=[wband, srow, row, row, gband, grow, grow],
+        out_specs=out_spec if n_out > 1 else out_spec[0],
+        out_shape=out_shape if n_out > 1 else out_shape[0],
+        interpret=interpret,
+    )(words, s0, p_prev, p_next, meta, m_prev, m_next)
+    return out

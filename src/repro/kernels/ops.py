@@ -1,10 +1,27 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public jit'd wrappers over the Pallas kernels, with explicit backend mode.
 
-On CPU (this container) every wrapper runs the kernel in ``interpret=True``
-mode; on TPU the compiled kernel runs natively.  The dispatch is a backend
-check, so framework code calls one API either way.
+The kernel backend is resolved **once at import** from the ``REPRO_KERNELS``
+environment variable, so a CI run is deterministic end to end instead of
+depending on a per-call backend probe:
+
+* ``interpret`` — run every kernel through the Pallas interpreter (the CPU
+  CI mode: same kernel code path as TPU, emulated);
+* ``native``    — compile kernels for the accelerator (TPU);
+* ``off``       — disable kernel *selection*: every call site that gates on
+  :func:`kernels_enabled` (the fused lowering rules, the Encoded payload
+  decode) takes its plain-XLA fallback instead.  This is what makes A/B
+  bit-identity checks forceable from the outside;
+* ``auto`` (default) — ``native`` on TPU, ``interpret`` elsewhere.
+
+:func:`override_mode` temporarily rebinds the mode in-process — the fused
+bit-identity tests run each cell once per mode and compare.  Anything that
+caches a traced program across mode changes must key on
+:func:`kernel_mode` (the engine's cache keys do).
 """
 from __future__ import annotations
+
+import contextlib
+import os
 
 import jax
 
@@ -14,9 +31,49 @@ from . import prefix_stats as _prefix_stats
 from . import quant_lorenzo as _quant_lorenzo
 from . import stencil_dq as _stencil_dq
 
+_MODES = ("auto", "interpret", "native", "off")
+
+
+def _resolve(raw: str) -> str:
+    mode = raw.strip().lower() or "auto"
+    if mode not in _MODES:
+        raise ValueError(
+            f"REPRO_KERNELS={raw!r}: expected one of {_MODES}")
+    if mode == "auto":
+        return "native" if jax.default_backend() == "tpu" else "interpret"
+    return mode
+
+
+#: resolved once at import (env), rebound only by :func:`override_mode`.
+_MODE = _resolve(os.environ.get("REPRO_KERNELS", "auto"))
+
+
+def kernel_mode() -> str:
+    """The resolved backend mode: ``interpret`` | ``native`` | ``off``."""
+    return _MODE
+
+
+def kernels_enabled() -> bool:
+    """Should kernel-capable call sites select the Pallas path?"""
+    return _MODE != "off"
+
+
+@contextlib.contextmanager
+def override_mode(mode: str):
+    """Temporarily force the backend mode (A/B bit-identity checks)."""
+    global _MODE
+    prev = _MODE
+    _MODE = _resolve(mode)
+    try:
+        yield _MODE
+    finally:
+        _MODE = prev
+
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # "off" still runs the kernel when a wrapper is called directly (the
+    # wrappers *are* the kernels); selection happens at the call sites.
+    return _MODE != "native"
 
 
 def quant_lorenzo2d(x: jax.Array, eps) -> jax.Array:

@@ -169,6 +169,27 @@ def f(x):
     return x.item()  # audit: waive(host-sync) deliberate for this test
 '''
 
+_KERNEL_HOST_SYNC_FIXTURE = '''
+import functools
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def double2d(x, *, interpret=False):
+    n0, n1 = x.shape
+    out = pl.pallas_call(
+        _kern, out_shape=jax.ShapeDtypeStruct((n0, n1), x.dtype),
+        interpret=interpret)(x)
+    peak = jnp.max(out)
+    if peak.item() > 0:  # host sync inside the jitted wrapper
+        return out
+    return -out
+'''
+
 _CLEAN_RULE_FIXTURE = '''
 import jax.numpy as jnp
 
@@ -201,6 +222,18 @@ class TestTraceSafetyAnalyzer:
 
     def test_repo_is_trace_safe(self):
         assert tracesafety.analyze_trace_safety() == []
+
+    def test_kernel_wrapper_host_sync_caught(self):
+        """A host sync hidden inside a jitted Pallas-kernel wrapper is a
+        finding — the analyzer must not treat kernel wrappers specially."""
+        fs = tracesafety.lint_source(_KERNEL_HOST_SYNC_FIXTURE, "kern.py")
+        assert [f.invariant for f in fs] == ["host-sync"]
+        assert fs[0].line is not None
+
+    def test_kernels_package_in_audit_roots(self):
+        """src/repro/kernels is part of the default trace-safety sweep, so
+        regressions in the fused-kernel wrappers surface in repro.audit."""
+        assert "kernels" in tracesafety._DEFAULT_ROOTS
 
 
 # ===========================================================================

@@ -51,6 +51,29 @@ def test_stencils(shape):
     np.testing.assert_array_equal(np.asarray(lap), np.asarray(rl))
 
 
+@pytest.mark.parametrize("bits", list(range(1, 33)))
+@pytest.mark.parametrize("n", [100, 4097, 5000])
+def test_bitpack_tail_shapes(bits, n):
+    """Word-layout parity with the XLA packer at non-multiple-of-VALS sizes.
+
+    The kernel packer pads to VALS-multiples internally and slices; its words
+    and recovered values must match ``encode.pack_uniform`` bit for bit so
+    payloads produced by either path are interchangeable (decode_device
+    routes Encoded payloads through the kernel unpacker)."""
+    from repro.core import encode
+    rng = np.random.default_rng(bits * 101 + n)
+    maxv = (1 << bits) - 1 if bits < 32 else 0xFFFFFFFF
+    u = jnp.asarray(rng.integers(0, 2**31, n, dtype=np.uint32)
+                    & np.uint32(maxv))
+    packed = ops.pack(u, bits)
+    want = encode.pack_uniform(u, bits)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(want))
+    out = ops.unpack(packed, n, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(u))
+    np.testing.assert_array_equal(
+        np.asarray(encode.unpack_uniform(packed, n, bits)), np.asarray(u))
+
+
 @pytest.mark.parametrize("nb,s", [(256, 128), (512, 256), (1024, 64)])
 def test_block_stats(nb, s):
     rng = np.random.default_rng(nb)
@@ -59,6 +82,26 @@ def test_block_stats(nb, s):
     rm, rx = ref.block_stats(qb)
     np.testing.assert_array_equal(np.asarray(gm), np.asarray(rm))
     np.testing.assert_array_equal(np.asarray(gx), np.asarray(rx))
+
+
+@pytest.mark.parametrize("block", [(4, 4), (8, 8), (8, 16)])
+def test_block_stats_signed_parity_with_core(block):
+    """The kernel's per-block rounded mean must agree with the stage-①
+    metadata the compressor actually stores (decorrelate.block_means) on
+    signed data — both use exact round-half-up, floor((2s + c) / (2c)),
+    where flooring (not truncating) the negative sums is the parity trap."""
+    from repro.core import blocking, decorrelate
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.integers(-50000, 50000, (64, 48), dtype=np.int32))
+    want = decorrelate.block_means(q, block)
+    blocked = blocking.to_blocked(q, block)
+    g0, g1, b0, b1 = blocked.shape
+    gm, gx = ops.block_stats(blocked.reshape(g0 * g1, b0 * b1))
+    np.testing.assert_array_equal(np.asarray(gm).reshape(g0, g1),
+                                  np.asarray(want))
+    u = np.asarray(blocked.reshape(g0 * g1, b0 * b1))
+    zig = ((u << 1) ^ (u >> 31)).astype(np.uint32)
+    np.testing.assert_array_equal(np.asarray(gx), zig.max(axis=1))
 
 
 @pytest.mark.parametrize("shape", [(128, 256), (256, 384)])
