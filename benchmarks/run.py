@@ -21,22 +21,25 @@ Framework-level (beyond paper):
   store-backed hot-cache vs cold queries     -> fw_store_analytics
   streaming append+query vs re-encode        -> fw_stream_analytics
   fused Pallas kernels vs XLA lowering       -> fw_kernel_analytics
+  sharded store vs single-device bytes/wall  -> fw_shard_analytics
 
 ``--filter PREFIX[,PREFIX...]`` runs only the row families whose name
 starts with a prefix (e.g. ``--filter fw_store`` or ``--filter fig2,fw_``),
 so CI gates and local iteration stop paying for the whole suite.
 
-``--json PATH`` additionally writes the fused-analytics rows as machine-
-readable JSON (name / us / speedup) for CI regression gating;
-``--json-store PATH`` does the same for the store-backed rows and
-``--json-expr PATH`` for the expression-DAG rows.
+``--json-dir DIR`` writes every machine-readable row family as
+``BENCH_*.json`` under DIR for the CI regression gates; the per-family
+``--json`` / ``--json-expr`` / ``--json-store`` / ``--json-stream`` /
+``--json-kernel`` flags remain as deprecated aliases.
 """
 from __future__ import annotations
 from collections.abc import Callable
 
 import argparse
 import json
+import os
 import time
+import warnings
 
 import numpy as np
 import jax
@@ -52,8 +55,17 @@ EXPR_JSON: list[dict] = []
 STORE_JSON: list[dict] = []
 STREAM_JSON: list[dict] = []
 KERNEL_JSON: list[dict] = []
+SHARD_JSON: list[dict] = []
 SCALE = 8
 REPS = 3
+
+#: every machine-readable row family --json-dir emits, one file per gate
+JSON_FILES = (("BENCH_fused.json", FUSED_JSON),
+              ("BENCH_expr.json", EXPR_JSON),
+              ("BENCH_store.json", STORE_JSON),
+              ("BENCH_stream.json", STREAM_JSON),
+              ("BENCH_kernel.json", KERNEL_JSON),
+              ("BENCH_shard.json", SHARD_JSON))
 
 COMPRESSORS = ["hszp", "hszx", "hszp_nd", "hszx_nd"]
 EBS = [1e-1, 1e-2, 1e-3]
@@ -552,6 +564,121 @@ def fw_stream_analytics():
                             "speedup": round(speedup, 3)})
 
 
+def fw_shard_analytics():
+    """Sharded vs single-device analytics: per-shard bytes touched + wall.
+
+    The sharded store's tentpole claim is I/O locality, not CPU speed: a
+    region query over a block-striped field gathers payload words only from
+    the shards whose stripes the region closure covers, so the *max
+    per-shard* bytes touched — the quantity that bounds a real multi-host
+    deployment's per-node decode work — drops well below the single-device
+    gather.  Two row kinds per scheme:
+
+    * ``region`` — one region op set (mean at ③, window = 1/4 of the rows,
+      away from the origin) through :meth:`ShardPrograms.region_compute`
+      vs the jitted single-device op.  Bytes come from the *logical*
+      8-shard :class:`~repro.shard.BlockPlacement` (the CI placement
+      basis, independent of how many XLA devices this process has);
+      ``bytes_ratio = max_shard_bytes / single_bytes`` is the gated value
+      (< 0.5 on every scheme — the region covers >= 2 stripe units of
+      every scheme's striping, so no shard owns more than half its words).
+    * ``temporal`` — a cold full-window summary rebuild through the
+      sharded banded path vs the single-device ``_cold_summary`` route;
+      ``max_band_frac`` reports the largest fraction of window rows any
+      one shard reconstructs under the logical placement.
+
+    Wall times use a mesh over however many devices exist (1 on a plain
+    CPU run, 8 under ``--xla_force_host_platform_device_count=8``) and are
+    informational on CPU — shard_map over virtual devices serializes the
+    per-shard work.  Results are bit-identical by construction
+    (``tests/test_shard.py``), so the rows compare cost only; the geometry
+    is pinned (like the other fw serving benches) so the byte accounting
+    is the same at every ``--scale``.
+    """
+    from repro.analytics.engine import BatchedAnalytics
+    from repro.core import oplib
+    from repro.launch.mesh import make_analytics_mesh
+    from repro.shard import (BlockPlacement, ShardPrograms, ShardedFieldStore,
+                             spatial_bands)
+    from repro.stream import StreamFieldStore, TemporalField
+    from repro.stream.query import _cold_summary
+
+    n_logical = 8
+    mesh = make_analytics_mesh(min(n_logical, len(jax.devices())))
+    n_mesh = mesh.devices.size
+
+    tile = (256, 192)                     # 16 block-rows for the nd schemes
+    data = jnp.asarray(synth_field("Ocean", 0, tile))
+    region = ((tile[0] // 4, tile[0] // 2), (0, tile[1]))  # 1/4 of the rows
+    stage = Stage.Q
+    for name in COMPRESSORS:
+        comp = by_name(name)
+        e = comp.encode(comp.compress(data, rel_eb=1e-2))
+        cl = oplib.set_closure(("mean",), e.scheme, stage, 0)
+        plan = region_mod.plan_region(
+            e, region_mod.normalize_region(region, e.shape), cl)
+        acct = BlockPlacement.of(e, n_logical).payload_bytes(plan, e.bits)
+        ratio = acct["max_shard_bytes"] / max(acct["single_bytes"], 1)
+
+        progs = ShardPrograms(mesh)
+        pm = BlockPlacement.of(e, n_mesh)
+        stripes = [progs.shard_payload(e, pm)]
+        us_sh = best_of(lambda: progs.region_compute(
+            e, ("mean",), stage, region=region, placements=[pm],
+            stripes=stripes)["mean"])
+        us_single = best_of(
+            jax.jit(lambda enc: H.mean(enc, stage, region=region)), e)
+        row_name = f"fw_shard_analytics/{name}/region-mean-q"
+        row(row_name, us_sh,
+            f"single_us={us_single:.1f} "
+            f"max_shard_bytes={acct['max_shard_bytes']} "
+            f"single_bytes={acct['single_bytes']} bytes_ratio={ratio:.3f} "
+            f"participants={len(acct['participants'])}/{n_logical}")
+        SHARD_JSON.append({
+            "name": row_name, "scheme": name, "kind": "region",
+            "us_sharded": round(us_sh, 1), "us_single": round(us_single, 1),
+            "max_shard_bytes": int(acct["max_shard_bytes"]),
+            "single_bytes": int(acct["single_bytes"]),
+            "bytes_ratio": round(ratio, 4),
+            "participants": len(acct["participants"]),
+            "n_shards": n_logical})
+
+    k, n_slabs, ttile = 3, 4, (96, 96)
+    slab_data = [np.stack([synth_field("Ocean", 0, ttile, seed=i * k + t)
+                           for t in range(k)]).astype(np.float32)
+                 for i in range(n_slabs)]
+    for name in COMPRESSORS:
+        comp = by_name(name)
+        ref = StreamFieldStore(engine=BatchedAnalytics())
+        sh = ShardedFieldStore(mesh, engine=BatchedAnalytics())
+        ref.put_temporal("shard/stream", TemporalField(comp, rel_eb=1e-2))
+        sh.put_temporal("shard/stream", TemporalField(comp, rel_eb=1e-2))
+        for s in slab_data:
+            ref.append("shard/stream", jnp.asarray(s))
+            sh.append("shard/stream", jnp.asarray(s))
+
+        def cold(store):
+            store.invalidate("shard/stream")
+            return store.temporal_summary("shard/stream")
+
+        us_single = best_of(cold, ref, k=5)
+        us_sh = best_of(cold, sh, k=5)
+        slab0 = sh.get("shard/stream").slabs[0]
+        p8 = BlockPlacement.of(slab0, n_logical, axis=1)
+        per = np.zeros(n_logical)
+        for owner, _, _, breg in spatial_bands(slab0, p8):
+            per[owner] += breg[0][1] - breg[0][0]
+        frac = float(per.max()) / slab0.shape[1]
+        row_name = f"fw_shard_analytics/{name}/temporal-summary"
+        row(row_name, us_sh,
+            f"single_us={us_single:.1f} slabs={n_slabs} "
+            f"max_band_frac={frac:.3f}")
+        SHARD_JSON.append({
+            "name": row_name, "scheme": name, "kind": "temporal",
+            "us_sharded": round(us_sh, 1), "us_single": round(us_single, 1),
+            "max_band_frac": round(frac, 4), "n_shards": n_logical})
+
+
 #: jaxpr primitives that are elementwise or pure layout — free under the
 #: same fusion assumption ``hlo_analysis.ELEMENTWISE`` makes for HLO ops.
 _FREE_PRIMS = frozenset({
@@ -680,7 +807,7 @@ BENCHES = [fig2_compression_ratio, fig34_decompression, fig58_statistics,
            fig910_differentiation, fig1112_multivariate, table4_breakdown,
            table5_op_errors, fw_batched_analytics, fw_fused_analytics,
            fw_expr_analytics, fw_region_analytics, fw_store_analytics,
-           fw_stream_analytics, fw_kernel_analytics,
+           fw_stream_analytics, fw_kernel_analytics, fw_shard_analytics,
            fw_checkpoint, fw_collective_bytes]
 
 
@@ -711,27 +838,29 @@ def main() -> None:
     ap.add_argument("--filter", default=None, metavar="PREFIX[,PREFIX...]",
                     help="run only row families whose name starts with a "
                          "given prefix (e.g. fw_store or fig2,fw_)")
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="write every machine-readable row family into DIR "
+                         "under its canonical name (BENCH_fused.json, "
+                         "BENCH_expr.json, BENCH_store.json, "
+                         "BENCH_stream.json, BENCH_kernel.json, "
+                         "BENCH_shard.json) — the one flag the CI gates "
+                         "consume; families not selected by --filter come "
+                         "out as empty lists")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write fw_fused_analytics rows (name, us, speedup) "
-                         "as JSON, e.g. BENCH_fused.json for the CI gate")
+                    help="deprecated alias: write only the "
+                         "fw_fused_analytics rows to PATH (use --json-dir)")
     ap.add_argument("--json-expr", default=None, metavar="PATH",
-                    help="write fw_expr_analytics rows (name, us, naive_us, "
-                         "speedup) as JSON, e.g. BENCH_expr.json for the "
-                         "expression-vs-recompute CI gate")
+                    help="deprecated alias: write only the "
+                         "fw_expr_analytics rows to PATH (use --json-dir)")
     ap.add_argument("--json-store", default=None, metavar="PATH",
-                    help="write fw_store_analytics rows (name, us, cold_us, "
-                         "speedup) as JSON, e.g. BENCH_store.json for the "
-                         "hot-vs-cold CI gate")
+                    help="deprecated alias: write only the "
+                         "fw_store_analytics rows to PATH (use --json-dir)")
     ap.add_argument("--json-stream", default=None, metavar="PATH",
-                    help="write fw_stream_analytics rows (name, us, "
-                         "reencode_us, speedup) as JSON, e.g. "
-                         "BENCH_stream.json for the incremental-vs-reencode "
-                         "CI gate")
+                    help="deprecated alias: write only the "
+                         "fw_stream_analytics rows to PATH (use --json-dir)")
     ap.add_argument("--json-kernel", default=None, metavar="PATH",
-                    help="write fw_kernel_analytics rows (us_fused, us_xla, "
-                         "bytes_fused, bytes_xla) as JSON, e.g. "
-                         "BENCH_kernel.json for the fused-kernel "
-                         "bytes-reduction CI gate")
+                    help="deprecated alias: write only the "
+                         "fw_kernel_analytics rows to PATH (use --json-dir)")
     args = ap.parse_args()
     SCALE, REPS = args.scale, args.reps
     print("name,us_per_call,derived")
@@ -742,21 +871,24 @@ def main() -> None:
         while ROWS:
             name, us, derived = ROWS.pop(0)
             print(f"{name},{us:.1f},{derived}")
-    if args.json is not None:
-        with open(args.json, "w") as f:
-            json.dump(FUSED_JSON, f, indent=2)
-    if args.json_expr is not None:
-        with open(args.json_expr, "w") as f:
-            json.dump(EXPR_JSON, f, indent=2)
-    if args.json_store is not None:
-        with open(args.json_store, "w") as f:
-            json.dump(STORE_JSON, f, indent=2)
-    if args.json_stream is not None:
-        with open(args.json_stream, "w") as f:
-            json.dump(STREAM_JSON, f, indent=2)
-    if args.json_kernel is not None:
-        with open(args.json_kernel, "w") as f:
-            json.dump(KERNEL_JSON, f, indent=2)
+    if args.json_dir is not None:
+        os.makedirs(args.json_dir, exist_ok=True)
+        for fname, rows_json in JSON_FILES:
+            with open(os.path.join(args.json_dir, fname), "w") as f:
+                json.dump(rows_json, f, indent=2)
+    aliases = (("--json", args.json, FUSED_JSON),
+               ("--json-expr", args.json_expr, EXPR_JSON),
+               ("--json-store", args.json_store, STORE_JSON),
+               ("--json-stream", args.json_stream, STREAM_JSON),
+               ("--json-kernel", args.json_kernel, KERNEL_JSON))
+    for flag, path, rows_json in aliases:
+        if path is None:
+            continue
+        warnings.warn(f"{flag} is a deprecated alias; use --json-dir DIR "
+                      "(writes every BENCH_*.json)", DeprecationWarning,
+                      stacklevel=2)
+        with open(path, "w") as f:
+            json.dump(rows_json, f, indent=2)
 
 
 if __name__ == "__main__":

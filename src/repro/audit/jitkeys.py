@@ -53,7 +53,8 @@ _MUTATORS = frozenset({"append", "extend", "add", "update", "insert"})
 _INVARIANT_RE = re.compile(r"#\s*audit:\s*invariant\(([A-Za-z0-9_,\s]+)\)")
 _BUILTINS = frozenset(dir(builtins))
 
-_DEFAULT_TARGETS = ("analytics/engine.py", "stream/temporal.py")
+_DEFAULT_TARGETS = ("analytics/engine.py", "stream/temporal.py",
+                    "shard/exec.py")
 
 
 # ---------------------------------------------------------------------------

@@ -63,7 +63,8 @@ _ARRAY_ANNOTATIONS = re.compile(
 _TRACED_MODULES = frozenset({"jnp", "jax", "lax"})
 _WAIVE_RE = re.compile(r"#\s*audit:\s*waive\(([a-z\-,\s]+)\)")
 
-_DEFAULT_ROOTS = ("core", "analytics", "stream", "store", "kernels")
+_DEFAULT_ROOTS = ("core", "analytics", "stream", "store", "kernels",
+                  "comm", "shard")
 
 
 def _waivers(source: str) -> dict[int, set[str]]:
@@ -144,7 +145,7 @@ class _ScopeIndex(ast.NodeVisitor):
     def _jitlike(self, func: ast.AST) -> bool:
         name = _dotted(func) or ""
         leaf = name.rsplit(".", 1)[-1]
-        return (leaf in {"jit", "vmap", "pmap"}
+        return (leaf in {"jit", "vmap", "pmap", "shard_map"}
                 or name in {"lax.cond", "jax.lax.cond", "lax.scan",
                             "jax.lax.scan", "lax.while_loop",
                             "jax.lax.while_loop", "lax.fori_loop",

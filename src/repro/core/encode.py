@@ -183,20 +183,23 @@ def decode_device(e: Encoded) -> Compressed:
 # region fast path: gather-unpack only the words covering a block subset
 # ---------------------------------------------------------------------------
 
-def unpack_gather(payload: jax.Array, *, word_idx, pos0, pos1, shift, bits: int) -> jax.Array:
+def unpack_gather(payload: jax.Array, *, word_idx=None, pos0, pos1, shift,
+                  bits: int) -> jax.Array:
     """Unpack a *subset* of a uniform-width payload via static word gathers.
 
     ``word_idx`` selects the only payload words read; ``pos0``/``pos1``/
     ``shift`` (host-computed, static — see ``repro.core.region``) address each
     requested value's low/high word within that gathered set.  Cost scales
-    with the gathered words, not the field.
+    with the gathered words, not the field.  ``word_idx=None`` means
+    ``payload`` *is* the gathered word set already (the sharded store's
+    scatter/psum word merge produces exactly that — ``repro.shard.exec``).
     """
     m = int(np.asarray(pos0).shape[0])
     if bits == 0:
         return jnp.zeros((m,), jnp.uint32)
     mask = jnp.uint32(0xFFFFFFFF if bits == 32 else (1 << bits) - 1)
-    words = jnp.concatenate([payload[jnp.asarray(word_idx)],
-                             jnp.zeros((1,), jnp.uint32)])
+    gathered = payload if word_idx is None else payload[jnp.asarray(word_idx)]
+    words = jnp.concatenate([gathered, jnp.zeros((1,), jnp.uint32)])
     shift = jnp.asarray(shift)
     lo = words[jnp.asarray(pos0)] >> shift
     carry = shift > jnp.uint32(32 - bits)

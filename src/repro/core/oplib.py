@@ -140,12 +140,17 @@ class StageContext:
     """
 
     def __init__(self, c: Field, stage: Stage, region, closure: R.Closure,
-                 seed=None):
+                 seed=None, words=None):
         self.field = c
         self.stage = Stage(stage)
         self.region = region
         self.closure = closure
         self._axis_diffs: dict[int, jax.Array] = {}
+        if words is not None and (region is None or not isinstance(c, Encoded)):
+            raise ValueError(
+                "words= supplies the region plan's gathered payload words; "
+                "it requires an Encoded field and a region")
+        self._words = words
         if seed is not None:
             norm = (R.normalize_region(region, c.shape)
                     if region is not None else None)
@@ -196,6 +201,19 @@ class StageContext:
         if self._seed is not None and self._seed.sub is not None:
             return self._seed.sub
         if self.plan is not None:
+            if self._words is not None:
+                # pre-gathered words (the sharded store's scatter/psum word
+                # merge): same unpack -> unzigzag -> assemble sequence as
+                # encode.decode_region, so the result is bit-identical to
+                # gathering from the resident single-device payload
+                e = self.field
+                gi = self.plan.payload_gather(e.bits)
+                u = encode_mod.unpack_gather(
+                    self._words, word_idx=None, pos0=gi.pos0, pos1=gi.pos1,
+                    shift=gi.shift, bits=e.bits)
+                residuals = encode_mod.unzigzag(u).reshape(
+                    self.plan.sub_padded_shape)
+                return self.plan.assemble(residuals, e)
             return R.extract(self.field, self.plan)
         c = self.field
         return encode_mod.decode_device(c) if isinstance(c, Encoded) else c
@@ -1194,7 +1212,7 @@ def _check_feasible(spec: OpSpec, scheme: Scheme, stage: Stage) -> None:
 
 def compute(target, ops: str | Sequence[str], stage: Stage, *,
             axis: int = 0, region: R.RegionSpec | None = None,
-            seed=None) -> dict[str, jax.Array]:
+            seed=None, payload_words=None) -> dict[str, jax.Array]:
     """Lower an op set onto one shared stage reconstruction.
 
     ``target`` is a single :class:`Compressed`/:class:`Encoded` field for
@@ -1207,6 +1225,13 @@ def compute(target, ops: str | Sequence[str], stage: Stage, *,
     sets, one per component for vector-arity sets — whose key must match
     this ``(stage, region, closure)``; the prelude is then served from the
     resident intermediate instead of recomputed.
+
+    ``payload_words`` optionally supplies the region plan's gathered
+    payload words directly (one uint32 array for field-arity sets, one per
+    component for vector-arity sets) instead of gathering them from
+    ``target.payload`` — the sharded store's scatter/psum word merge
+    produces exactly this set (``repro.shard.exec``).  Requires
+    ``region`` and :class:`Encoded` targets.
     """
     stage = Stage(stage)
     names = canonical_ops(ops)
@@ -1226,15 +1251,21 @@ def compute(target, ops: str | Sequence[str], stage: Stage, *,
         seeds = list(seed) if seed is not None else [None] * len(comps)
         if len(seeds) != len(comps):
             raise ValueError(f"{len(seeds)} seeds for {len(comps)} components")
-        ctxs = [StageContext(c, stage, region, cl, seed=s)
-                for c, cl, s in zip(comps, closures, seeds)]
+        words = (list(payload_words) if payload_words is not None
+                 else [None] * len(comps))
+        if len(words) != len(comps):
+            raise ValueError(
+                f"{len(words)} payload word sets for {len(comps)} components")
+        ctxs = [StageContext(c, stage, region, cl, seed=s, words=w)
+                for c, cl, s, w in zip(comps, closures, seeds, words)]
         return {spec.name: spec.lower_vector(ctxs, axis) for spec in specs}
 
     c = target
     for spec in specs:
         _check_feasible(spec, c.scheme, stage)
     closure = set_closure(names, c.scheme, stage, axis)
-    ctx = StageContext(c, stage, region, closure, seed=seed)
+    ctx = StageContext(c, stage, region, closure, seed=seed,
+                       words=payload_words)
     family = family_of(c.scheme)
     out = {}
     for spec in specs:

@@ -32,6 +32,37 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
+#: mesh axis name of the analytics block-shard dimension.
+SHARD_AXIS = "shard"
+
+
+def make_analytics_mesh(n_shards: int | None = None):
+    """1-D ``("shard",)`` mesh for block-sharded analytics field stores.
+
+    The production mesh's ``(data, model)`` axes partition batches and
+    weights; a :class:`repro.shard.ShardedFieldStore` partitions the
+    *blocks* of one encoded field, which wants a single flat axis.  The
+    mesh is host-count aware: devices are ordered by ``process_index``
+    first, so consecutive shards land on co-located devices and a block
+    stripe's scatter/psum merge crosses hosts as few times as the device
+    topology allows.  ``n_shards`` caps the axis (default: every
+    addressable device); asking for more shards than devices is an error —
+    placement is physical, never oversubscribed.
+    """
+    devices = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    n = len(devices) if n_shards is None else int(n_shards)
+    if not (1 <= n <= len(devices)):
+        raise ValueError(
+            f"n_shards must be in [1, {len(devices)}] "
+            f"(addressable devices), got {n_shards}")
+    mesh_devices = np.asarray(devices[:n])
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.sharding.Mesh(mesh_devices, (SHARD_AXIS,))
+    return jax.sharding.Mesh(mesh_devices, (SHARD_AXIS,),
+                             axis_types=(axis_type.Auto,))
+
+
 def make_host_mesh(shape: tuple[int, ...] = (1, 1), axes=("data", "model")):
     """Tiny mesh over however many (CPU) devices exist — smoke tests."""
     n = len(jax.devices())

@@ -2,6 +2,7 @@
 streaming temporal ingest."""
 from .engine import Engine, Request
 from .analytics import AnalyticsFrontend, AnalyticsRequest, AppendRequest
+from .routing import StoreRouter
 
 __all__ = ["Engine", "Request", "AnalyticsFrontend", "AnalyticsRequest",
-           "AppendRequest"]
+           "AppendRequest", "StoreRouter"]

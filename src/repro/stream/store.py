@@ -127,28 +127,43 @@ class StreamFieldStore(FieldStore):
         tf = self._temporal(field_id)
         idx = tf.append(data)
         slab = tf.slabs[idx]
-        resident = [k for k in self._cache
-                    if k[0] == field_id and k[1] == TEMPORAL_TAG]
+        resident = self._resident_summary_keys(field_id)
         plan = plan_refresh(tf.scheme, self._summary_stage(tf),
                             tf.n_slabs, self.cost_model,
                             summary_resident=bool(resident))
         if plan.mode != "incremental":
             return idx  # nothing to merge into: rebuild on the next query
         for key in resident:
-            region = key[2]
-            old = self._cache.get(key)
-            if old is None:
-                # refreshing an earlier cell evicted this one under budget
-                # pressure — it is no longer resident, so there is nothing
-                # to merge into; the next query rebuilds it
-                continue
-            part = self.engine.summarize(
-                [slab], self._summary_stage(tf, region), region=region)
-            part0 = jax.tree.map(lambda x: x[0], part)
-            merged = self.engine.merge_summaries(old, part0)
-            self._insert(key, merged)  # replace-in-place, LRU-refreshing
-            self.incremental_merges += 1
+            self._refresh_resident(key, slab, tf)
         return idx
+
+    def _resident_summary_keys(self, field_id: str) -> list[tuple]:
+        """Resident temporal-summary cache keys of one id (full-field and
+        each cached region window)."""
+        return [k for k in self._cache
+                if k[0] == field_id and k[1] == TEMPORAL_TAG]
+
+    def _slab_summary(self, tf: TemporalField, slab, region) -> TemporalSummary:
+        """One slab's summary over ``region``'s window — the per-append
+        reconstruction unit (the sharded store overrides the route with its
+        band-partial all-reduce; the integers are identical either way)."""
+        part = self.engine.summarize(
+            [slab], self._summary_stage(tf, region), region=region)
+        return jax.tree.map(lambda x: x[0], part)
+
+    def _refresh_resident(self, key: tuple, slab, tf: TemporalField) -> None:
+        """Merge one new slab into one resident summary cell,
+        replace-in-place (LRU-refreshing)."""
+        old = self._cache.get(key)
+        if old is None:
+            # refreshing an earlier cell evicted this one under budget
+            # pressure — it is no longer resident, so there is nothing
+            # to merge into; the next query rebuilds it
+            return
+        merged = self.engine.merge_summaries(
+            old, self._slab_summary(tf, slab, key[2]))
+        self._insert(key, merged)
+        self.incremental_merges += 1
 
     # -- serving ------------------------------------------------------------
     def temporal_summary(self, field_id: str, *, region=None,

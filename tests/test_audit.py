@@ -190,6 +190,23 @@ def double2d(x, *, interpret=False):
     return -out
 '''
 
+_SHARD_BODY_HOST_SYNC_FIXTURE = '''
+import jax
+import jax.numpy as jnp
+from repro import compat
+
+def merge(mesh, stripes):
+    def body(st):
+        buf = jax.lax.psum(st, "shard")
+        peak = jnp.max(buf)
+        if peak.item() > 0:  # host sync inside the collective body
+            return buf
+        return -buf
+    f = jax.jit(compat.shard_map(body, mesh=mesh,
+                                 in_specs=None, out_specs=None))
+    return f(stripes)
+'''
+
 _CLEAN_RULE_FIXTURE = '''
 import jax.numpy as jnp
 
@@ -234,6 +251,20 @@ class TestTraceSafetyAnalyzer:
         """src/repro/kernels is part of the default trace-safety sweep, so
         regressions in the fused-kernel wrappers surface in repro.audit."""
         assert "kernels" in tracesafety._DEFAULT_ROOTS
+
+    def test_comm_and_shard_packages_in_audit_roots(self):
+        """The collective (comm) and sharded-store (shard) packages run
+        shard_map-traced bodies, so they are linted by default too."""
+        assert "comm" in tracesafety._DEFAULT_ROOTS
+        assert "shard" in tracesafety._DEFAULT_ROOTS
+
+    def test_shard_map_body_host_sync_caught(self):
+        """A host sync inside a shard_map body (the sharded store's program
+        shape) is a finding — collective bodies trace like any jitted fn."""
+        fs = tracesafety.lint_source(_SHARD_BODY_HOST_SYNC_FIXTURE,
+                                     "shardfix.py")
+        assert [f.invariant for f in fs] == ["host-sync"]
+        assert fs[0].line is not None
 
 
 # ===========================================================================

@@ -112,6 +112,106 @@ def test_stage1_stats_matches_numpy():
                                np.linalg.norm(flat), rtol=1e-4)
 
 
+def _world1_mesh():
+    import jax
+    from repro.launch.mesh import auto_axis_types
+    return jax.make_mesh((1,), ("data",), **auto_axis_types(1))
+
+
+@pytest.mark.parametrize("bits", [4, 8, 12, 15])
+@pytest.mark.parametrize("n", [96, 97, 33])   # off-word-boundary lengths too
+def test_packed_allgather_unit_roundtrip(bits, n):
+    """In-process (world=1) round-trip: gather returns the quantized values
+    within the bit budget's grid spacing, and exactly recovers values that
+    already sit on the grid (the pack -> wire -> unpack path is lossless on
+    the integers)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.comm import hom_collectives as hom
+
+    mesh = _world1_mesh()
+    qmax = 2 ** (bits - 1) - 1
+    rng = np.random.default_rng(bits * 100 + n)
+    # on-grid values: x = q * 2*eps with eps = max|x|/qmax * 0.5, i.e. any
+    # x = q * (max|q|/qmax) with q integers and max|q| == qmax
+    q = rng.integers(-qmax, qmax + 1, size=n)
+    q[0] = qmax
+    x = q.astype(np.float32)
+
+    f = compat.shard_map(
+        lambda xs: hom.packed_allgather(xs[0], "data", bits=bits),
+        mesh=mesh, in_specs=(P("data"),), out_specs=P(), check=False)
+    got = np.asarray(jax.jit(f)(jnp.asarray(x).reshape(1, 1, n)))
+    assert got.shape == (1, 1, n)
+    np.testing.assert_array_equal(got.reshape(n), x)
+
+    y = rng.normal(0, 1.0, n).astype(np.float32)
+    got = np.asarray(jax.jit(f)(jnp.asarray(y).reshape(1, 1, n))).reshape(n)
+    assert np.abs(got - y).max() <= np.abs(y).max() / qmax * 0.5 + 1e-7
+
+
+@pytest.mark.parametrize("world", [1, 8, 256, 512])
+def test_bit_budget_roundtrip_never_overflows(world):
+    """``world`` workers' worst-case quantized magnitudes summed in the
+    int16 container stay in range, and the budgeted round-trip recovers the
+    exact sum of on-grid values (the homomorphism the wire relies on)."""
+    from repro.comm import bit_budget
+
+    bits = bit_budget(world)
+    qmax = 2 ** (bits - 1) - 1
+    assert world * qmax < 2 ** 15          # int16 accumulator safe
+    acc = np.zeros((), np.int16)
+    for _ in range(world):
+        acc = (acc + np.int16(qmax)).astype(np.int16)
+    assert int(acc) == world * qmax        # no wraparound occurred
+
+
+def test_compressed_psum_tree_unit_world1():
+    """In-process world=1 contract: psum is the identity, so the returned
+    mean is the dequantized local value, the residual is exactly what
+    quantization dropped (v == mean + residual bitwise), and the residual
+    is bounded by the shared quantizer's eps."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.comm import hom_collectives as hom
+
+    mesh = _world1_mesh()
+    rng = np.random.default_rng(7)
+    grads = {"w": rng.normal(0, 1e-3, (64, 32)).astype(np.float32),
+             "b": rng.normal(0, 3e-4, (128,)).astype(np.float32)}
+
+    def body(g, r):
+        return hom.compressed_psum_tree(g, r, "data", world=1)
+
+    f = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=({"w": P(), "b": P()}, {"w": P(), "b": P()}),
+        out_specs=({"w": P(), "b": P()}, {"w": P(), "b": P()}), check=False)
+    res0 = jax.tree.map(lambda v: jnp.zeros_like(v), grads)
+    mean, resid = jax.jit(f)(
+        {k: jnp.asarray(v) for k, v in grads.items()}, res0)
+
+    bits = hom.bit_budget(1)
+    qmax = 2 ** (bits - 1) - 1
+    for k, v in grads.items():
+        m, r = np.asarray(mean[k]), np.asarray(resid[k])
+        # residual is the quantization error of the reported value
+        # (m + (v - m) re-rounds, so compare to one f32 ulp of v)
+        np.testing.assert_allclose(m + r, v, rtol=0,
+                                   atol=float(np.abs(v).max()) * 2 ** -22)
+        # 1% slack: eps itself is recomputed in f32 inside the jitted body
+        eps = np.abs(v).max() / qmax * 0.5
+        assert np.abs(r).max() <= eps * 1.01
+        # a second round with the carried residual reports a refined mean
+        mean2, _ = jax.jit(f)(
+            {k2: jnp.asarray(v2) for k2, v2 in grads.items()}, resid)
+        assert np.isfinite(np.asarray(mean2[k])).all()
+
+
 def test_error_feedback_convergence():
     """With error feedback, the accumulated mean over steps converges to the
     true mean (residual carries what quantization dropped)."""
