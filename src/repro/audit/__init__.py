@@ -1,7 +1,8 @@
 """Static invariant audit for the homomorphic pipeline (DESIGN.md §11).
 
-Four analyzers, one contract: ``python -m repro.audit`` exits 0 iff every
-statically checkable invariant the bit-identity guarantees rest on holds.
+Six analyzers, one contract: ``python -m repro.audit`` exits 0 iff every
+statically checkable invariant the bit-identity guarantees rest on holds
+(stale-waiver *warnings* print but never fail the run).
 
 * :mod:`.registry` — registry / Table-I completeness: exactly one lowering
   rule per feasible (stage, scheme-family) cell, closures for every
@@ -11,22 +12,38 @@ statically checkable invariant the bit-identity guarantees rest on holds.
   intervals propagated through quantize → decorrelate → bitpack →
   TemporalSummary under a declared envelope, proving no int32 overflow and
   emitting the per-scheme safe-size table.
-* :mod:`.tracesafety` — trace-safety lint: host syncs and Python branches
-  on traced values inside lowering rules and compiled engine programs,
-  with ``# audit: waive(...)`` for deliberate exceptions.
+* :mod:`.tracesafety` — trace-safety lint: host syncs (including f-string
+  / ``str()`` / ``format()`` stringification) and Python branches on
+  traced values inside lowering rules and compiled engine programs, with
+  ``# audit: waive(...)`` for deliberate exceptions.
 * :mod:`.jitkeys` — jit-cache-key soundness: every free variable a traced
   callable closes over is covered by its cache key (or declared invariant
-  with ``# audit: invariant(...)``).
+  with ``# audit: invariant(...)``), every ``FusedRule.covers`` input is
+  in the dispatch key, and kernel mode keys every kernel-dispatching
+  program.
+* :mod:`.kernelspec` — Pallas kernel verification: symbolic grid/halo
+  bounds, exactly-once output coverage, VMEM budget, the bitplane-unpack
+  word-window lemma, and the no-output-float-multiply (FMA-contraction)
+  lint, against the declared :mod:`repro.kernels.specs`.
+* :mod:`.sharddisjoint` — shard-partition exactness: word-owner and
+  scatter-target disjointness (psum is reassembly, not accumulation),
+  band tiling, the world-scaled Σq² envelope, and the int16 collective
+  container sweep, with a per-world safe-size table.
 """
-from .findings import AuditReport, Finding
+from .findings import SCHEMA_VERSION, AuditReport, Finding
 from .intwidth import DEFAULT_ENVELOPE, Envelope, analyze_int_width, safe_size_table
 from .jitkeys import analyze_jit_keys
+from .kernelspec import analyze_kernel_specs, check_unpack_lemma
 from .registry import analyze_registry
-from .runner import main, run_audit
+from .runner import ALL_ANALYZERS, main, run_audit
+from .sharddisjoint import analyze_shard_disjoint, shard_safe_size_table
 from .tracesafety import analyze_trace_safety
 
 __all__ = [
-    "AuditReport", "Finding", "Envelope", "DEFAULT_ENVELOPE",
+    "AuditReport", "Finding", "SCHEMA_VERSION", "Envelope",
+    "DEFAULT_ENVELOPE", "ALL_ANALYZERS",
     "analyze_registry", "analyze_int_width", "safe_size_table",
-    "analyze_trace_safety", "analyze_jit_keys", "run_audit", "main",
+    "analyze_trace_safety", "analyze_jit_keys", "analyze_kernel_specs",
+    "check_unpack_lemma", "analyze_shard_disjoint", "shard_safe_size_table",
+    "run_audit", "main",
 ]

@@ -34,6 +34,25 @@ or the traced callable's ``def`` line::
 
 Module-level ``jax.jit(module_fn)`` of an attribute/global with no
 closure is sound by construction and skipped.
+
+Two further checks ride on the same machinery:
+
+* **kernel-mode keys** (``unkeyed-kernel-mode``) — any jit site whose
+  traced body dispatches through the kernel-backed lowering layer
+  (``oplib.compute`` / ``StageContext`` / ``decode_device`` /
+  ``summarize_slab``) selects fused-vs-XLA paths *at trace time*, so its
+  cache key must include ``oplib.kernel_sig()`` — directly in the key
+  expression, or (for the ``_compiled(key, ...)`` factoring) in the key
+  built at every call site (e.g. through ``batch_key``).
+* **dispatch coverage** (``uncovered-dispatch-input``) — every ``ctx``
+  attribute a ``FusedRule.covers`` predicate reads must be an input the
+  engine's program key distinguishes (layout, region plan, seed); a
+  predicate branching on an unkeyed attribute would route two
+  key-identical calls to different lowerings.
+
+A ``# audit: invariant(...)`` declaration that suppresses nothing in the
+run is reported at *warning* severity (``stale-waiver``) so declarations
+can't rot after refactors.
 """
 from __future__ import annotations
 
@@ -55,6 +74,25 @@ _BUILTINS = frozenset(dir(builtins))
 
 _DEFAULT_TARGETS = ("analytics/engine.py", "stream/temporal.py",
                     "shard/exec.py")
+
+# Exact dotted callees that enter the REPRO_KERNELS-switched lowering layer.
+# A traced body calling any of these selects fused-vs-XLA paths at trace
+# time, so its cache key must fold in ``oplib.kernel_sig()``.  Deliberately
+# exact names, not head-module matches: ``oplib.TemporalSummary`` (a plain
+# container) must not drag mode into keys that don't dispatch.
+_DISPATCH_DOTTED = frozenset({
+    "oplib.compute", "oplib.StageContext", "oplib.select_rule",
+    "oplib.summarize_slab", "encode.decode_device",
+    "encode_mod.decode_device",
+})
+
+# ctx attributes a FusedRule.covers predicate may branch on: each maps to a
+# component of the engine's batch_key (layout_key(field) covers scheme +
+# field geometry; plan -> region; _seed -> seed_sig; stage is explicit).
+_COVERS_KEYED_ATTRS = frozenset({"scheme", "field", "plan", "_seed",
+                                 "stage"})
+
+_DEFAULT_FUSED_TARGETS = ("core/fused.py",)
 
 
 # ---------------------------------------------------------------------------
@@ -154,20 +192,28 @@ class _Module:
                 for alias in n.names:
                     self.import_bound.add(
                         (alias.asname or alias.name).split(".", 1)[0])
+        # every ``# audit: invariant(a, b)`` declaration as (line, name) —
+        # the identity stale-waiver accounting is keyed on
+        self.invariant_decls: list[tuple[int, str]] = []
+        for i, line in enumerate(self.lines, start=1):
+            m = _INVARIANT_RE.search(line)
+            if m:
+                for w in m.group(1).split(","):
+                    w = w.strip()
+                    if w:
+                        self.invariant_decls.append((i, w))
 
     def exempt(self, name: str) -> bool:
         return (name in _BUILTINS or name in self.module_bound
                 or name in self.import_bound)
 
+    def waived_decls(self, lineno: int) -> set[tuple[int, str]]:
+        """Declarations governing a site: same line or the line above."""
+        return {(ln, n) for (ln, n) in self.invariant_decls
+                if ln in (lineno, lineno - 1)}
+
     def waived(self, lineno: int) -> set[str]:
-        out: set[str] = set()
-        for ln in (lineno, lineno - 1):
-            if 1 <= ln <= len(self.lines):
-                m = _INVARIANT_RE.search(self.lines[ln - 1])
-                if m:
-                    out |= {w.strip() for w in m.group(1).split(",")
-                            if w.strip()}
-        return out
+        return {n for _, n in self.waived_decls(lineno)}
 
     def frees_of(self, fnode: ast.AST) -> set[str]:
         """Closure frees (symtable) + default-expr frees of one def/lambda."""
@@ -345,8 +391,52 @@ def _bind_call(call: ast.Call, fnode: ast.AST,
     return bound
 
 
+def _key_texts(kx: ast.AST, fnode: ast.AST, flow: _Flow,
+               defs_by_name: dict[str, list[ast.AST]]) -> list[str]:
+    """Source texts the key's value is built from: the key expression
+    itself, the RHS of every assignment on its backward slice, and the
+    bodies of module functions reachable from that slice (key builders
+    like ``batch_key``)."""
+    names = flow.backward(flow._expand(_free_names(kx)))
+    texts = [ast.unparse(kx)]
+    for stmt in ast.walk(fnode):
+        if isinstance(stmt, ast.Assign):
+            bound = {n for t in stmt.targets for n in _bound_targets(t)}
+            if bound & names:
+                texts.append(ast.unparse(stmt.value))
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            if (stmt.value is not None and isinstance(stmt.target, ast.Name)
+                    and stmt.target.id in names):
+                texts.append(ast.unparse(stmt.value))
+    texts += [ast.unparse(d) for n in sorted(names & set(defs_by_name))
+              for d in defs_by_name[n]]
+    return texts
+
+
+def _dispatches_kernels(fnode: ast.AST,
+                        local_defs: dict[str, ast.AST]) -> bool:
+    """Does the traced body (or a local helper it calls) reach the
+    kernel-backed lowering layer?"""
+    seen: set[str] = set()
+    work = [fnode]
+    while work:
+        f = work.pop()
+        for n in ast.walk(f):
+            if not isinstance(n, ast.Call):
+                continue
+            if (_dotted(n.func) or "") in _DISPATCH_DOTTED:
+                return True
+            if (isinstance(n.func, ast.Name) and n.func.id in local_defs
+                    and n.func.id not in seen):
+                seen.add(n.func.id)
+                work.append(local_defs[n.func.id])
+    return False
+
+
 def _analyze_module(mod: _Module) -> list[Finding]:
     findings: list[Finding] = []
+    # (line, name) of every invariant declaration that suppressed something
+    used_decls: set[tuple[int, str]] = set()
     # enclosing-function map for every node
     parents: dict[ast.AST, ast.AST | None] = {}
     stack: list[ast.AST] = []
@@ -395,12 +485,20 @@ def _analyze_module(mod: _Module) -> list[Finding]:
             continue
 
         enclosing = parents.get(node)
-        waived = mod.waived(node.lineno) | mod.waived(traced.lineno)
+        wdecls = mod.waived_decls(node.lineno) | mod.waived_decls(
+            traced.lineno)
+        waived = {n for _, n in wdecls}
+
+        def _mark_used(suppressed, decls=None):
+            used_decls.update(d for d in (wdecls if decls is None else decls)
+                              if d[1] in suppressed)
+
         frees = mod.frees_of(traced)
         if enclosing is None:
             # module-level jit: only module globals can be captured
-            leftover = {f for f in frees
-                        if not mod.exempt(f) and f not in waived}
+            captured = {f for f in frees if not mod.exempt(f)}
+            _mark_used(captured & waived)
+            leftover = captured - waived
             for name in sorted(leftover):
                 findings.append(Finding(
                     _ANALYZER, "unkeyed-closure",
@@ -411,14 +509,16 @@ def _analyze_module(mod: _Module) -> list[Finding]:
 
         flow = _Flow(enclosing, mod)
         if _lru_cached(enclosing):
+            kx = None
             key_frees: set[str] | None = set(_param_names(enclosing))
         else:
             kx = _key_expr(enclosing)
             key_frees = None if kx is None else _free_names(kx)
         if key_frees is None:
-            interesting = {f for f in frees if not mod.exempt(f)
-                           and f not in waived
-                           and f not in flow.local_defs}
+            captured = {f for f in frees if not mod.exempt(f)
+                        and f not in flow.local_defs}
+            _mark_used(captured & waived)
+            interesting = captured - waived
             if interesting:
                 findings.append(Finding(
                     _ANALYZER, "missing-cache-key",
@@ -431,10 +531,66 @@ def _analyze_module(mod: _Module) -> list[Finding]:
             continue
 
         covered = flow.covered(key_frees)
-        uncovered = {f for f in flow._expand(frees)
-                     if f not in covered and not mod.exempt(f)
-                     and f not in waived}
+        unkeyed = {f for f in flow._expand(frees)
+                   if f not in covered and not mod.exempt(f)}
+        _mark_used(unkeyed & waived)
+        uncovered = unkeyed - waived
         enc_params = set(_param_names(enclosing))
+
+        if _dispatches_kernels(traced, flow.local_defs):
+            if "kernel_sig" in waived:
+                _mark_used({"kernel_sig"})
+                mode_ok = True
+            elif kx is None:
+                # lru_cache key is the parameter tuple: mode must be a param
+                mode_ok = "kernel_sig" in ast.unparse(enclosing)
+            else:
+                texts = _key_texts(kx, enclosing, flow, defs_by_name)
+                mode_ok = any("kernel_sig" in t for t in texts)
+                if not mode_ok and key_frees & enc_params:
+                    # ``_compiled(key, ...)`` factoring: accept iff every
+                    # call site's key argument flows through something
+                    # (e.g. batch_key) whose source folds in kernel_sig
+                    sites = [
+                        c for c in ast.walk(mod.tree)
+                        if isinstance(c, ast.Call) and c is not node
+                        and (_dotted(c.func) or "").rsplit(".", 1)[-1]
+                        == enclosing.name]
+                    site_ok = bool(sites)
+                    for call in sites:
+                        caller = parents.get(call)
+                        if caller is None:
+                            site_ok = False
+                            break
+                        cflow = _Flow(caller, mod)
+                        bound = _bind_call(
+                            call, enclosing,
+                            skip_self=isinstance(call.func, ast.Attribute))
+                        texts = []
+                        for p in key_frees & enc_params:
+                            arg = bound.get(p)
+                            if arg is not None:
+                                texts += _key_texts(arg, caller, cflow,
+                                                    defs_by_name)
+                        if not any("kernel_sig" in t for t in texts):
+                            site_ok = False
+                            break
+                    mode_ok = site_ok
+            if not mode_ok:
+                findings.append(Finding(
+                    _ANALYZER, "unkeyed-kernel-mode",
+                    "traced callable "
+                    f"{getattr(traced, 'name', '<lambda>')!r} dispatches "
+                    "through the kernel lowering layer but the cache key "
+                    f"of {enclosing.name!r} never folds in "
+                    "oplib.kernel_sig() — toggling REPRO_KERNELS between "
+                    "calls would reuse a program compiled for the other "
+                    "mode",
+                    subject=enclosing.name, file=mod.path, line=node.lineno,
+                    suggestion="include oplib.kernel_sig() in the cache key "
+                               "(directly, or in the key builder every call "
+                               "site uses)"))
+
         via_params = uncovered & enc_params if key_frees & enc_params else set()
         direct = uncovered - via_params
         for name in sorted(direct):
@@ -479,13 +635,16 @@ def _analyze_module(mod: _Module) -> list[Finding]:
                     if p in bound:
                         kf |= _free_names(bound[p])
                 ccov = cflow.covered(kf) | set(_param_names(caller)) & set()
+                cdecls = mod.waived_decls(call.lineno)
+                cwaived = {n for _, n in cdecls}
                 for name in sorted(via_params):
                     arg = bound.get(name)
                     if arg is None:
                         continue  # default value: static at def time
-                    bad = {f for f in cflow._expand(_free_names(arg))
-                           if f not in ccov and not mod.exempt(f)
-                           and f not in mod.waived(call.lineno)}
+                    unkeyed_c = {f for f in cflow._expand(_free_names(arg))
+                                 if f not in ccov and not mod.exempt(f)}
+                    _mark_used(unkeyed_c & cwaived, cdecls)
+                    bad = unkeyed_c - cwaived
                     for f in sorted(bad):
                         findings.append(Finding(
                             _ANALYZER, "unkeyed-closure",
@@ -497,6 +656,113 @@ def _analyze_module(mod: _Module) -> list[Finding]:
                             suggestion=f"fold {f!r} (or a signature of it) "
                                        "into the cache key built at this "
                                        "call site"))
+
+    for line, name in sorted(set(mod.invariant_decls)):
+        if (line, name) not in used_decls:
+            findings.append(Finding(
+                _ANALYZER, "stale-waiver",
+                f"# audit: invariant({name}) declaration suppresses "
+                "nothing in this run — the free variable it names is "
+                "covered, renamed, or gone",
+                subject=name, file=mod.path, line=line,
+                suggestion="delete the stale declaration (or re-attach it "
+                           "to the jit site it was meant for)",
+                severity="warning"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# FusedRule.covers predicates
+# ---------------------------------------------------------------------------
+
+def analyze_covers_source(
+        source: str, path: str = "core/fused.py", *,
+        covered_attrs: frozenset = _COVERS_KEYED_ATTRS) -> list[Finding]:
+    """Verify every ``FusedRule`` covers predicate only branches on ctx
+    attributes the engine's program key distinguishes.
+
+    Rule selection runs at trace time; a predicate reading an attribute
+    outside ``covered_attrs`` routes two key-identical calls to different
+    lowerings.  The walk follows the predicate's ctx parameter through
+    module helpers it forwards ctx to.
+    """
+    findings: list[Finding] = []
+    mod = _Module(source, path)
+    defs_by_name: dict[str, list[ast.AST]] = {}
+    for n in ast.walk(mod.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(n.name, []).append(n)
+
+    for n in ast.walk(mod.tree):
+        if not (isinstance(n, ast.Call)
+                and (_dotted(n.func) or "").rsplit(".", 1)[-1]
+                == "FusedRule"):
+            continue
+        cov: ast.AST | None = n.args[1] if len(n.args) >= 2 else None
+        for kw in n.keywords:
+            if kw.arg == "covers":
+                cov = kw.value
+        if cov is None:
+            continue
+        if isinstance(cov, ast.Lambda):
+            fnode: ast.AST | None = cov
+        elif isinstance(cov, ast.Name):
+            cands = defs_by_name.get(cov.id, [])
+            fnode = cands[-1] if cands else None
+        else:
+            fnode = None
+        if fnode is None:
+            findings.append(Finding(
+                _ANALYZER, "uncovered-dispatch-input",
+                "FusedRule covers predicate "
+                f"{ast.unparse(cov)!r} cannot be resolved to a function in "
+                "this module, so its dispatch inputs cannot be verified "
+                "against the program key",
+                subject=ast.unparse(cov), file=path, line=n.lineno,
+                suggestion="use a module-level def or inline lambda as the "
+                           "covers predicate"))
+            continue
+
+        waived = mod.waived(n.lineno) | mod.waived(fnode.lineno)
+        # transitively collect first-level ctx-attribute reads
+        reads: dict[str, int] = {}
+        seen: set[int] = set()
+        params = _param_names(fnode)
+        work: list[tuple[ast.AST, str]] = (
+            [(fnode, params[0])] if params else [])
+        while work:
+            f, ctxp = work.pop()
+            if id(f) in seen:
+                continue
+            seen.add(id(f))
+            for sub in ast.walk(f):
+                if (isinstance(sub, ast.Attribute)
+                        and isinstance(sub.value, ast.Name)
+                        and sub.value.id == ctxp):
+                    reads.setdefault(sub.attr, sub.lineno)
+                elif (isinstance(sub, ast.Call)
+                      and isinstance(sub.func, ast.Name)
+                      and sub.func.id in defs_by_name):
+                    callee = defs_by_name[sub.func.id][-1]
+                    cps = _param_names(callee)
+                    for i, a in enumerate(sub.args):
+                        if (isinstance(a, ast.Name) and a.id == ctxp
+                                and i < len(cps)):
+                            work.append((callee, cps[i]))
+        for attr in sorted(reads):
+            if attr in covered_attrs or attr in waived:
+                continue
+            findings.append(Finding(
+                _ANALYZER, "uncovered-dispatch-input",
+                "FusedRule covers predicate "
+                f"{getattr(fnode, 'name', '<lambda>')!r} branches on "
+                f"ctx.{attr}, which the engine's program key does not "
+                "distinguish — two key-identical calls could select "
+                "different lowerings",
+                subject=attr, file=path, line=reads[attr],
+                suggestion=f"fold ctx.{attr} (or a signature of it) into "
+                           "batch_key, or restrict the predicate to "
+                           f"{sorted(covered_attrs)}"))
     return findings
 
 
@@ -510,9 +776,12 @@ def analyze_source(source: str, path: str = "<string>") -> list[Finding]:
 
 
 def analyze_jit_keys(src_root: str | Path | None = None,
-                     targets: tuple = _DEFAULT_TARGETS) -> list[Finding]:
+                     targets: tuple = _DEFAULT_TARGETS,
+                     fused_targets: tuple = _DEFAULT_FUSED_TARGETS,
+                     ) -> list[Finding]:
     """Analyze the compiled-program modules (engine + streaming jit
-    caches) for under-keyed traced closures."""
+    caches) for under-keyed traced closures, unkeyed kernel-mode
+    dispatch, and covers predicates branching on unkeyed inputs."""
     if src_root is None:
         src_root = Path(__file__).resolve().parent.parent
     src_root = Path(src_root)
@@ -527,4 +796,14 @@ def analyze_jit_keys(src_root: str | Path | None = None,
             continue
         path = str(py.relative_to(src_root.parent.parent))
         findings.extend(analyze_source(py.read_text(), path))
+    for rel in fused_targets:
+        py = src_root / rel
+        if not py.exists():
+            findings.append(Finding(
+                _ANALYZER, "missing-target",
+                f"expected fused-rule module {rel} is absent",
+                subject=rel))
+            continue
+        path = str(py.relative_to(src_root.parent.parent))
+        findings.extend(analyze_covers_source(py.read_text(), path))
     return findings

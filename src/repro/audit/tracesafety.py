@@ -22,7 +22,11 @@ What is flagged
 * ``host-sync`` — ``.item()`` / ``.tolist()`` anywhere in trace scope;
   ``float()`` / ``int()`` / ``bool()`` whose argument is not provably
   static (shapes, ``len``, dtypes, constants are exempt); ``np.asarray`` /
-  ``np.array`` on non-static values.
+  ``np.array`` on non-static values; *stringification* of array-derived
+  values — f-string interpolation (``f"{x}"``), ``str(x)``,
+  ``format(x)``, and ``"...".format(x)`` all concretize the tracer (or
+  embed the abstract value in the message) exactly like ``.item()``;
+  static interpolations (``f"{x.shape}"``) stay legal.
 * ``tracer-branch`` — ``if`` / ``while`` / ternary tests that reference a
   value the local dataflow marks *array-derived*: produced by a
   ``jnp.*`` / ``jax.*`` call or an array-annotated parameter.  Branches on
@@ -39,7 +43,12 @@ or the line above::
     x = arr.item()  # audit: waive(host-sync) <why this is safe>
 
 The waiver names the invariant it suppresses; unwaivable findings are a
-design smell, not a lint inconvenience.
+design smell, not a lint inconvenience.  A waiver that suppresses nothing
+is itself reported at *warning* severity (``stale-waiver``) so waivers
+can't rot after refactors — warnings never fail the audit.  This pass
+owns waivers naming ``host-sync`` / ``tracer-branch``; other analyzers'
+waiver vocabularies (``output-multiply``, ``invariant(...)``) are staled
+by their own passes.
 """
 from __future__ import annotations
 
@@ -63,20 +72,28 @@ _ARRAY_ANNOTATIONS = re.compile(
 _TRACED_MODULES = frozenset({"jnp", "jax", "lax"})
 _WAIVE_RE = re.compile(r"#\s*audit:\s*waive\(([a-z\-,\s]+)\)")
 
+#: the invariant names this pass owns waivers for; stale-waiver detection
+#: ignores other analyzers' vocabularies so a kernelspec waiver in a
+#: kernels/ file is never double-reported here.
+_OWNED_WAIVERS = frozenset({"host-sync", "tracer-branch"})
+
 _DEFAULT_ROOTS = ("core", "analytics", "stream", "store", "kernels",
                   "comm", "shard")
 
 
-def _waivers(source: str) -> dict[int, set[str]]:
-    """Line → waived invariant names; a waiver covers its own line and the
-    one below (comment-above style)."""
-    out: dict[int, set[str]] = {}
+def _waivers(source: str) -> dict[int, set[tuple[int, str]]]:
+    """Line → waiver declarations ``(comment_line, invariant)``; a waiver
+    covers its own line and the one below (comment-above style).  Keeping
+    the declaring line in the value lets ``lint_source`` tell which
+    declarations actually suppressed something (stale-waiver detection)."""
+    out: dict[int, set[tuple[int, str]]] = {}
     for i, line in enumerate(source.splitlines(), start=1):
         m = _WAIVE_RE.search(line)
         if m:
             names = {w.strip() for w in m.group(1).split(",") if w.strip()}
-            out.setdefault(i, set()).update(names)
-            out.setdefault(i + 1, set()).update(names)
+            for name in names:
+                out.setdefault(i, set()).add((i, name))
+                out.setdefault(i + 1, set()).add((i, name))
     return out
 
 
@@ -194,10 +211,13 @@ class _TraceLint(ast.NodeVisitor):
     """Second pass: within one trace-scope root, track array-derived names
     and flag host syncs / tracer branches."""
 
-    def __init__(self, path: str, root_name: str, waivers: dict[int, set[str]]):
+    def __init__(self, path: str, root_name: str,
+                 waivers: dict[int, set[tuple[int, str]]],
+                 used_waivers: set[tuple[int, str]] | None = None):
         self.path = path
         self.root_name = root_name
         self.waivers = waivers
+        self.used_waivers = used_waivers if used_waivers is not None else set()
         self.derived: set[str] = set()
         self.findings: list[Finding] = []
 
@@ -252,7 +272,11 @@ class _TraceLint(ast.NodeVisitor):
 
     # -- findings -----------------------------------------------------------
     def _waived(self, line: int, invariant: str) -> bool:
-        return invariant in self.waivers.get(line, ())
+        hits = {w for w in self.waivers.get(line, ()) if w[1] == invariant}
+        if hits:
+            self.used_waivers.update(hits)
+            return True
+        return False
 
     def _flag(self, node: ast.AST, invariant: str, message: str,
               suggestion: str) -> None:
@@ -290,6 +314,40 @@ class _TraceLint(ast.NodeVisitor):
                        "use jnp inside traced code; numpy belongs to eager "
                        "ingest/metadata paths "
                        "(# audit: waive(host-sync) if deliberate)")
+        elif (isinstance(node.func, ast.Name)
+              and node.func.id in {"str", "format"} and node.args
+              and any(self._is_array_expr(a) for a in node.args)):
+            self._flag(node, "host-sync",
+                       f"{node.func.id}() stringifies an array-derived "
+                       "value under trace — it concretizes the tracer "
+                       "exactly like .item()",
+                       "log shapes/dtypes (static) instead, or lift the "
+                       "formatting out of the traced region "
+                       "(# audit: waive(host-sync) if deliberate)")
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "format"
+              and any(self._is_array_expr(a) for a in
+                      list(node.args) + [kw.value for kw in node.keywords])):
+            self._flag(node, "host-sync",
+                       "str.format() interpolates an array-derived value "
+                       "under trace — stringification is a host sync",
+                       "format only static structure inside traced code "
+                       "(# audit: waive(host-sync) if deliberate)")
+        self.generic_visit(node)
+
+    def visit_JoinedStr(self, node: ast.JoinedStr):
+        for part in node.values:
+            if (isinstance(part, ast.FormattedValue)
+                    and self._is_array_expr(part.value)):
+                self._flag(node, "host-sync",
+                           "f-string interpolates an array-derived value "
+                           "under trace — stringification is a host sync "
+                           "(static interpolations like f'{x.shape}' are "
+                           "exempt)",
+                           "interpolate shapes/dtypes, or move the message "
+                           "outside the traced region "
+                           "(# audit: waive(host-sync) if deliberate)")
+                break
         self.generic_visit(node)
 
     def _check_branch(self, node: ast.AST, test: ast.AST, kind: str):
@@ -319,9 +377,10 @@ class _TraceLint(ast.NodeVisitor):
 
 
 def _lint_root(path: str, root: ast.AST,
-               waivers: dict[int, set[str]]) -> list[Finding]:
+               waivers: dict[int, set[tuple[int, str]]],
+               used_waivers: set[tuple[int, str]]) -> list[Finding]:
     name = getattr(root, "name", "<lambda>")
-    lint = _TraceLint(path, name, waivers)
+    lint = _TraceLint(path, name, waivers, used_waivers)
     args = getattr(root, "args", None)
     if args is not None:
         # ctx/ctxs themselves are mixed containers (static structure +
@@ -348,14 +407,25 @@ def lint_source(source: str, path: str = "<string>") -> list[Finding]:
     index = _ScopeIndex()
     index.visit(tree)
     waivers = _waivers(source)
+    used: set[tuple[int, str]] = set()
     findings: list[Finding] = []
     seen: set[tuple] = set()
     for root in sorted(index.roots, key=lambda r: r.lineno):
-        for f in _lint_root(path, root, waivers):
+        for f in _lint_root(path, root, waivers, used):
             key = (f.file, f.line, f.invariant, f.message)
             if key not in seen:
                 seen.add(key)
                 findings.append(f)
+    declared = sorted({w for ws in waivers.values() for w in ws
+                       if w[1] in _OWNED_WAIVERS})
+    for cline, name in declared:
+        if (cline, name) not in used:
+            findings.append(Finding(
+                _ANALYZER, "stale-waiver",
+                f"# audit: waive({name}) suppresses no {name} finding — "
+                "the waived code has moved or been fixed",
+                subject=name, file=path, line=cline, severity="warning",
+                suggestion="delete the stale waiver comment"))
     return findings
 
 

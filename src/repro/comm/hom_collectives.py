@@ -29,9 +29,27 @@ import jax
 import jax.numpy as jnp
 
 
+#: largest magnitude an int16 psum accumulator may reach (the wire dtype's
+#: positive range).  The audit's ``sharddisjoint`` collective sweep proves
+#: :func:`worst_case_psum` stays under this for every supported world size.
+PSUM_CONTAINER_MAX = 2**15 - 1
+
+
 def bit_budget(world: int, container_bits: int = 16) -> int:
-    """Per-worker magnitude bits so the psum cannot overflow the container."""
+    """Per-worker magnitude bits so the psum cannot overflow the container.
+
+    The ``max(2, ...)`` floor keeps the quantizer usable at absurd world
+    sizes — which also means the overflow-freedom guarantee holds only up
+    to ``world < 2**(container_bits - 3)`` (32768 for int16); the audit
+    sweeps the supported range and documents the cliff.
+    """
     return max(2, container_bits - 1 - math.ceil(math.log2(max(world, 1))))
+
+
+def worst_case_psum(world: int, container_bits: int = 16) -> int:
+    """Largest magnitude the compressed psum accumulator can reach: every
+    worker contributing the clipping bound of its bit budget."""
+    return world * (2 ** (bit_budget(world, container_bits) - 1) - 1)
 
 
 def _leaf_compressed_psum(v: jax.Array, axis: str, bits: int):

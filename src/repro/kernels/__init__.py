@@ -1,6 +1,6 @@
 """Pallas TPU kernels for HSZ compute hot-spots (validated vs ref.py)."""
 
-from . import fused, ops, ref
+from . import fused, ops, ref, specs
 from .ops import (
     block_stats,
     grad2d,
@@ -10,3 +10,4 @@ from .ops import (
     quant_lorenzo2d,
     unpack,
 )
+from .specs import KERNEL_SPECS, WPB_EXTRA, HaloRead, KernelSpec, TileSpec

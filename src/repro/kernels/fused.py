@@ -137,12 +137,14 @@ def band_payload(payload: jax.Array, nv: int, bits: int,
     """Per-band payload word windows for in-kernel unpacking.
 
     Band ``b`` covers values ``[b*nv, (b+1)*nv)`` of the flat packed order;
-    its bits span at most ``nv*bits//32 + 2`` words (+1 for the in-word
-    offset, +1 for the carry word).  Returns the ``(nb, wpb)`` word matrix
-    and the ``(nb, 1)`` in-word bit offsets — the only payload-sized
-    transfer of the fused-decode path.
+    its bits span at most ``nv*bits//32 + WPB_EXTRA`` words (+1 for the
+    in-word offset, +1 for the carry word — the width
+    ``repro.audit.kernelspec`` proves sufficient by exhaustive sweep).
+    Returns the ``(nb, wpb)`` word matrix and the ``(nb, 1)`` in-word bit
+    offsets — the only payload-sized transfer of the fused-decode path.
     """
-    wpb = (nv * bits) // _WORD_BITS + 2
+    from repro.kernels.specs import WPB_EXTRA
+    wpb = (nv * bits) // _WORD_BITS + WPB_EXTRA
     bit0 = jnp.arange(nb, dtype=jnp.int32) * jnp.int32(nv * bits)
     w0 = bit0 >> 5
     s0 = bit0 & 31

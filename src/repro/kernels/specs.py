@@ -1,0 +1,328 @@
+"""Declarative symbolic specs for every Pallas kernel call site.
+
+``repro.audit.kernelspec`` proves, per kernel, that (a) every block /
+halo index map stays in bounds for *all* grid sizes, (b) the grid writes
+every output element exactly once, and (c) the per-cell VMEM footprint
+fits the budget.  Those proofs need a symbolic description of each
+``pl.pallas_call`` site — the grid symbols, the block shapes and index
+maps as expressions over those symbols, the host-side halo gathers, and
+the algebraic facts tying the sizes together (``n0 == nb*r``).  This
+module is that description, kept next to the kernels it describes; the
+analyzer cross-checks it against the AST of the call sites
+(``undeclared-kernel`` / ``stale-kernel-spec``), so a new kernel cannot
+ship unspecified and a spec cannot outlive its kernel.
+
+Expression language: integer arithmetic (``+ - *`` and integer
+literals) over the spec's symbols, with parentheses.  Symbol bounds are
+inclusive and may reference other symbols (``b`` ranges over
+``0 .. nb - 1``); ``None`` means unbounded above.  ``facts`` are
+equalities ``"lhs == rhs"`` where ``lhs`` is a single symbol the
+analyzer eliminates by rewriting (``n0 == nb*r`` substitutes ``nb*r``
+for every ``n0``).  The special symbol ``F`` in ``vmem_elems`` denotes
+the audit envelope's ``max_field_elems``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+#: payload-word window slack of :func:`repro.kernels.fused.band_payload`:
+#: +1 word for the in-word bit offset, +1 for the carry word.  The audit's
+#: bounded-exhaustive unpack lemma proves this is exactly enough for every
+#: (bits, offset) combination — see ``kernelspec.check_unpack_lemma``.
+WPB_EXTRA = 2
+
+
+@dataclass(frozen=True)
+class TileSpec:
+    """One ``pl.BlockSpec``-governed operand of a kernel call site.
+
+    ``block`` / ``index`` / ``extent`` are per-dimension expressions:
+    the operand's block shape, the *block* index map (what the BlockSpec
+    lambda returns for the grid symbols), and the full array extent.
+    """
+
+    name: str
+    block: tuple[str, ...]
+    index: tuple[str, ...]
+    extent: tuple[str, ...]
+    dtype_bytes: int = 4
+
+
+@dataclass(frozen=True)
+class HaloRead:
+    """A host-side ±1-row halo gather feeding a kernel input.
+
+    ``index`` is the symbolic row read from an array of row-extent
+    ``extent``; ``guard`` (optional) is the predicate under which the
+    read is live — reads outside the guard are zero-filled, never
+    performed (``"b >= 1"`` / ``"b <= nb - 2"``).
+    """
+
+    array: str
+    index: str
+    extent: str
+    guard: str = ""
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """Symbolic contract of one ``pl.pallas_call`` site.
+
+    ``site``    — (module, wrapper function, ordinal) locating the call.
+    ``grid``    — grid symbols, one per grid dimension.
+    ``bounds``  — inclusive symbol ranges ``{sym: (lo, hi)}``; ``hi=None``
+    is unbounded (the analyzer substitutes the lower bound only).
+    Declaration order matters: a symbol's bound expressions may only
+    reference symbols declared *after* it.
+    ``facts``   — ``"sym == expr"`` size equalities (rewrites).
+    ``vmem_elems`` — worst-case 4-byte elements resident in VMEM per grid
+    cell (inputs + outputs + temporaries), over the symbols plus ``F``.
+    ``unpack_words`` — the kernel runs the in-VMEM bitplane unpack
+    (``_unpack_span``); the word-window carry lemma applies.
+    ``sequential_revisit`` — the output index map is deliberately
+    constant across the grid (TPU sequential-grid accumulator pattern);
+    exactly-once coverage is waived, and the kernel must never be
+    vmapped (Pallas batching prepends a grid axis, breaking the carry).
+    """
+
+    name: str
+    site: tuple[str, str, int]
+    grid: tuple[str, ...]
+    bounds: dict[str, tuple[str, str | None]]
+    inputs: tuple[TileSpec, ...]
+    outputs: tuple[TileSpec, ...]
+    facts: tuple[str, ...] = ()
+    halos: tuple[HaloRead, ...] = ()
+    vmem_elems: str = "0"
+    unpack_words: bool = False
+    sequential_revisit: bool = False
+    notes: str = ""
+
+
+def _band_bounds(**extra) -> dict:
+    """Common band-kernel symbol ranges: grid step ``b`` over ``nb``
+    bands of ``r`` rows (``r <= MAX_BAND``), ``n1`` columns."""
+    out = {"b": ("0", "nb - 1"), "nb": ("1", None), "r": ("1", "256"),
+           "n1": ("1", None)}
+    out.update(extra)
+    return out
+
+
+_BAND = TileSpec("band", ("r", "n1"), ("b", "0"), ("n0", "n1"))
+_ROW = TileSpec("halo_row", ("1", "n1"), ("b", "0"), ("nb", "n1"))
+_BASE = TileSpec("base_row", ("1", "n1"), ("b", "0"), ("nb", "n1"))
+_WBAND = TileSpec("words", ("1", "wpb"), ("b", "0"), ("nb", "wpb"))
+_SROW = TileSpec("s0", ("1", "1"), ("b", "0"), ("nb", "1"))
+
+
+KERNEL_SPECS: tuple[KernelSpec, ...] = (
+    # -- fused Lorenzo family ------------------------------------------------
+    KernelSpec(
+        name="fused.lorenzo2d",
+        site=("fused", "lorenzo2d", 0),
+        grid=("b",),
+        bounds=_band_bounds(),
+        facts=("n0 == nb*r",),
+        inputs=(_BAND, _ROW, _BASE),
+        outputs=(TileSpec("plane", ("r", "n1"), ("b", "0"), ("n0", "n1")),),
+        halos=(
+            # _row_halo(p, r, "next"): next[b] = p[(b+1)*r], zero last band
+            HaloRead("p", "(b + 1)*r", "n0", guard="b <= nb - 2"),
+        ),
+        # p + da/db (+next shifts) + base/halo rows + <=2 output planes
+        vmem_elems="9*F",
+        notes="grad emits two planes through the same output tile spec",
+    ),
+    KernelSpec(
+        name="fused.lorenzo_enc2d.colsum",
+        site=("fused", "lorenzo_enc2d", 0),
+        grid=("b",),
+        bounds=_band_bounds(wpb=("2", None)),
+        inputs=(_WBAND, _SROW),
+        outputs=(TileSpec("colsums", ("1", "n1"), ("b", "0"), ("nb", "n1")),),
+        vmem_elems="3*F + 8",
+        unpack_words=True,
+    ),
+    KernelSpec(
+        name="fused.lorenzo_enc2d.stencil",
+        site=("fused", "lorenzo_enc2d", 1),
+        grid=("b",),
+        bounds=_band_bounds(wpb=("2", None)),
+        facts=("n0 == nb*r",),
+        inputs=(_WBAND, _SROW, _ROW, _BASE),
+        outputs=(TileSpec("plane", ("r", "n1"), ("b", "0"), ("n0", "n1")),),
+        halos=(
+            # unpack_rows(payload, arange(1, nb)*r, ...): rows b*r, b >= 1
+            HaloRead("plane", "b*r", "n0", guard="b >= 1"),
+        ),
+        vmem_elems="10*F",
+        unpack_words=True,
+    ),
+    # -- fused block-mean family ---------------------------------------------
+    KernelSpec(
+        name="fused.blockmean2d",
+        site=("fused", "blockmean2d", 0),
+        grid=("b",),
+        bounds=_band_bounds(rb=("1", "256"), b0=("1", "4096"),
+                            ng1=("1", None)),
+        facts=("n0 == nb*r", "r == rb*b0", "g0 == nb*rb"),
+        inputs=(
+            _BAND,
+            TileSpec("p_prev", ("1", "n1"), ("b", "0"), ("nb", "n1")),
+            TileSpec("p_next", ("1", "n1"), ("b", "0"), ("nb", "n1")),
+            TileSpec("meta", ("rb", "ng1"), ("b", "0"), ("g0", "ng1")),
+            TileSpec("m_prev", ("1", "ng1"), ("b", "0"), ("nb", "ng1")),
+            TileSpec("m_next", ("1", "ng1"), ("b", "0"), ("nb", "ng1")),
+        ),
+        outputs=(TileSpec("plane", ("r", "n1"), ("b", "0"), ("n0", "n1")),),
+        halos=(
+            HaloRead("p", "b*r - 1", "n0", guard="b >= 1"),
+            HaloRead("p", "(b + 1)*r", "n0", guard="b <= nb - 2"),
+            HaloRead("meta", "b*rb - 1", "g0", guard="b >= 1"),
+            HaloRead("meta", "(b + 1)*rb", "g0", guard="b <= nb - 2"),
+        ),
+        # p, upsampled m, 4 shifted planes, 2 col shifts, <=2 outputs, rows
+        vmem_elems="14*F",
+    ),
+    KernelSpec(
+        name="fused.blockmean_enc2d",
+        site=("fused", "blockmean_enc2d", 0),
+        grid=("b",),
+        bounds=_band_bounds(rb=("1", "256"), b0=("1", "4096"),
+                            ng1=("1", None), wpb=("2", None)),
+        facts=("n0 == nb*r", "r == rb*b0", "g0 == nb*rb"),
+        inputs=(
+            _WBAND, _SROW,
+            TileSpec("p_prev", ("1", "n1"), ("b", "0"), ("nb", "n1")),
+            TileSpec("p_next", ("1", "n1"), ("b", "0"), ("nb", "n1")),
+            TileSpec("meta", ("rb", "ng1"), ("b", "0"), ("g0", "ng1")),
+            TileSpec("m_prev", ("1", "ng1"), ("b", "0"), ("nb", "ng1")),
+            TileSpec("m_next", ("1", "ng1"), ("b", "0"), ("nb", "ng1")),
+        ),
+        outputs=(TileSpec("plane", ("r", "n1"), ("b", "0"), ("n0", "n1")),),
+        halos=(
+            # unpack_rows at arange(1, nb)*r - 1 and arange(1, nb)*r
+            HaloRead("plane", "b*r - 1", "n0", guard="b >= 1"),
+            HaloRead("plane", "b*r", "n0", guard="b >= 1"),
+            HaloRead("meta", "b*rb - 1", "g0", guard="b >= 1"),
+            HaloRead("meta", "(b + 1)*rb", "g0", guard="b <= nb - 2"),
+        ),
+        vmem_elems="15*F",
+        unpack_words=True,
+    ),
+    # -- bitplane pack / unpack ----------------------------------------------
+    KernelSpec(
+        name="bitpack.pack",
+        site=("bitpack", "pack", 0),
+        grid=("i",),
+        bounds={"i": ("0", "g - 1"), "g": ("1", None),
+                "wp": ("1", "4096")},
+        facts=("npad == g*4096", "nw == g*wp"),
+        inputs=(TileSpec("u", ("4096",), ("i",), ("npad",)),),
+        outputs=(TileSpec("words", ("wp",), ("i",), ("nw",)),),
+        # u + (V, bits<=32) bit matrix + word stream + powers
+        vmem_elems="4096 + 4096*32 + 4096 + 64",
+    ),
+    KernelSpec(
+        name="bitpack.unpack",
+        site=("bitpack", "unpack", 0),
+        grid=("i",),
+        bounds={"i": ("0", "g - 1"), "g": ("1", None),
+                "wp": ("1", "4096")},
+        facts=("npad == g*4096", "nw == g*wp"),
+        inputs=(TileSpec("words", ("wp",), ("i",), ("nw",)),),
+        outputs=(TileSpec("u", ("4096",), ("i",), ("npad",)),),
+        vmem_elems="4096 + 4096*32 + 4096 + 64",
+    ),
+    # -- fused quantize + Lorenzo --------------------------------------------
+    KernelSpec(
+        name="quant_lorenzo.quant_lorenzo2d",
+        site=("quant_lorenzo", "quant_lorenzo2d", 0),
+        grid=("i", "j"),
+        bounds={"i": ("0", "g0 - 1"), "j": ("0", "g1 - 1"),
+                "g0": ("1", None), "g1": ("1", None),
+                "t0": ("1", "128"), "t1": ("1", "256")},
+        facts=("n0 == g0*t0", "n1 == g1*t1"),
+        inputs=(
+            TileSpec("x", ("t0", "t1"), ("i", "j"), ("n0", "n1")),
+            TileSpec("xr", ("t0", "t1"), ("i", "j"), ("n0", "n1")),
+            TileSpec("xc", ("t0", "t1"), ("i", "j"), ("n0", "n1")),
+            TileSpec("xrc", ("t0", "t1"), ("i", "j"), ("n0", "n1")),
+            TileSpec("eps", ("1",), ("0",), ("1",)),
+        ),
+        outputs=(TileSpec("p", ("t0", "t1"), ("i", "j"), ("n0", "n1")),),
+        # halos are same-shape pre-shifted *views*; no out-of-tile reads
+        vmem_elems="9*128*256 + 8",
+    ),
+    # -- dequantized finite-difference stencils ------------------------------
+    KernelSpec(
+        name="stencil_dq.grad2d",
+        site=("stencil_dq", "grad2d", 0),
+        grid=("i", "j"),
+        bounds={"i": ("0", "g0 - 1"), "j": ("0", "g1 - 1"),
+                "g0": ("1", None), "g1": ("1", None),
+                "t0": ("1", "128"), "t1": ("1", "256")},
+        facts=("m0 == g0*t0", "m1 == g1*t1"),
+        inputs=(
+            TileSpec("qn", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+            TileSpec("qs", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+            TileSpec("qw", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+            TileSpec("qe", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+        ),
+        outputs=(
+            TileSpec("d0", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+            TileSpec("d1", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+        ),
+        vmem_elems="6*128*256",
+    ),
+    KernelSpec(
+        name="stencil_dq.laplacian2d",
+        site=("stencil_dq", "laplacian2d", 0),
+        grid=("i", "j"),
+        bounds={"i": ("0", "g0 - 1"), "j": ("0", "g1 - 1"),
+                "g0": ("1", None), "g1": ("1", None),
+                "t0": ("1", "128"), "t1": ("1", "256")},
+        facts=("m0 == g0*t0", "m1 == g1*t1"),
+        inputs=(
+            TileSpec("qc", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+            TileSpec("qn", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+            TileSpec("qs", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+            TileSpec("qw", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+            TileSpec("qe", ("t0", "t1"), ("i", "j"), ("m0", "m1")),
+        ),
+        outputs=(TileSpec("lap", ("t0", "t1"), ("i", "j"), ("m0", "m1")),),
+        vmem_elems="7*128*256",
+    ),
+    # -- blockwise metadata reduction ----------------------------------------
+    KernelSpec(
+        name="block_stats.block_stats",
+        site=("block_stats", "block_stats", 0),
+        grid=("i",),
+        bounds={"i": ("0", "g - 1"), "g": ("1", None),
+                "rows": ("1", "256"), "s": ("1", "4096")},
+        facts=("nb == g*rows",),
+        inputs=(TileSpec("q", ("rows", "s"), ("i", "0"), ("nb", "s")),),
+        outputs=(
+            TileSpec("mean", ("rows",), ("i",), ("nb",)),
+            TileSpec("maxu", ("rows",), ("i",), ("nb",)),
+        ),
+        vmem_elems="2*256*4096 + 2*256",
+    ),
+    # -- sequential prefix stats (deliberately unwired) ----------------------
+    KernelSpec(
+        name="prefix_stats.prefix_stats2d",
+        site=("prefix_stats", "prefix_stats2d", 0),
+        grid=("i",),
+        bounds={"i": ("0", "g - 1"), "g": ("1", None),
+                "rows": ("1", "64"), "n1": ("1", None)},
+        facts=("n0 == g*rows",),
+        inputs=(TileSpec("p", ("rows", "n1"), ("i", "0"), ("n0", "n1")),),
+        outputs=(TileSpec("s", ("2",), ("0",), ("2",)),),
+        # band + rowcum + q + qf + colsum scratch
+        vmem_elems="4*F + 4",
+        sequential_revisit=True,
+        notes="pl.program_id-keyed carry: every grid step revisits output "
+              "block 0 (legal under TPU sequential grid semantics); must "
+              "never run under vmap — which is why it stays unwired",
+    ),
+)

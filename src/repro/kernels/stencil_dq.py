@@ -1,9 +1,16 @@
 """Fused dequantize + finite-difference stencils on stage-③ integers.
 
 The paper's fastest differentiation path computes stencils on D_q and scales
-once by eps (Eq. V-B.2/V-B.4).  Fusing the integer stencil with the eps
-scaling in VMEM avoids materializing either D_f or the int32 difference
-array in HBM — one read of q, one write of the f32 result.
+once by eps (Eq. V-B.2/V-B.4).  Fusing the integer stencil in VMEM avoids
+materializing the int32 difference array in HBM — one read of q per output.
+
+The eps scaling deliberately lives *outside* the kernel: a trailing float
+multiply feeding an output ref is the FMA-contraction hazard (XLA CPU
+fusion can duplicate it into downstream consumers and contract it
+shape-dependently, breaking bit-identity — the PR 8 bug).  The kernels
+emit exact int32 stencil planes and the wrappers apply the float tail as a
+separate XLA op, which is the structure ``repro.audit``'s kernelspec
+analyzer enforces.
 
 Halo handling: shifted HBM views (see quant_lorenzo.py).  Both central
 differences and the 5-point Laplacian are emitted by one kernel invocation
@@ -21,17 +28,14 @@ from jax.experimental import pallas as pl
 DEFAULT_TILE = (128, 256)
 
 
-def _grad_kernel(qn_ref, qs_ref, qw_ref, qe_ref, eps_ref, d0_ref, d1_ref):
-    eps = eps_ref[0]
-    d0_ref[...] = (qs_ref[...] - qn_ref[...]).astype(jnp.float32) * eps
-    d1_ref[...] = (qe_ref[...] - qw_ref[...]).astype(jnp.float32) * eps
+def _grad_kernel(qn_ref, qs_ref, qw_ref, qe_ref, d0_ref, d1_ref):
+    d0_ref[...] = qs_ref[...] - qn_ref[...]
+    d1_ref[...] = qe_ref[...] - qw_ref[...]
 
 
-def _lap_kernel(qc_ref, qn_ref, qs_ref, qw_ref, qe_ref, eps_ref, o_ref):
-    eps2 = 2.0 * eps_ref[0]
-    acc = (qn_ref[...] + qs_ref[...] + qw_ref[...] + qe_ref[...]
-           - 4 * qc_ref[...])
-    o_ref[...] = acc.astype(jnp.float32) * eps2
+def _lap_kernel(qc_ref, qn_ref, qs_ref, qw_ref, qe_ref, o_ref):
+    o_ref[...] = (qn_ref[...] + qs_ref[...] + qw_ref[...] + qe_ref[...]
+                  - 4 * qc_ref[...])
 
 
 def _interior_views(q: jax.Array):
@@ -59,15 +63,16 @@ def grad2d(q: jax.Array, eps: jax.Array, *, tile=DEFAULT_TILE, interpret: bool =
     m0, m1 = qn.shape
     t0, t1 = _tiles((m0, m1), tile)
     spec = pl.BlockSpec((t0, t1), lambda i, j: (i, j))
-    eps_arr = jnp.asarray(eps, jnp.float32).reshape(1)
-    return pl.pallas_call(
+    d0, d1 = pl.pallas_call(
         _grad_kernel,
         grid=(m0 // t0, m1 // t1),
-        in_specs=[spec] * 4 + [pl.BlockSpec((1,), lambda i, j: (0,))],
+        in_specs=[spec] * 4,
         out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct((m0, m1), jnp.float32)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((m0, m1), jnp.int32)] * 2,
         interpret=interpret,
-    )(qn, qs, qw, qe, eps_arr)
+    )(qn, qs, qw, qe)
+    eps = jnp.asarray(eps, jnp.float32)
+    return d0.astype(jnp.float32) * eps, d1.astype(jnp.float32) * eps
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
@@ -77,12 +82,12 @@ def laplacian2d(q: jax.Array, eps: jax.Array, *, tile=DEFAULT_TILE, interpret: b
     m0, m1 = qn.shape
     t0, t1 = _tiles((m0, m1), tile)
     spec = pl.BlockSpec((t0, t1), lambda i, j: (i, j))
-    eps_arr = jnp.asarray(eps, jnp.float32).reshape(1)
-    return pl.pallas_call(
+    acc = pl.pallas_call(
         _lap_kernel,
         grid=(m0 // t0, m1 // t1),
-        in_specs=[spec] * 5 + [pl.BlockSpec((1,), lambda i, j: (0,))],
+        in_specs=[spec] * 5,
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((m0, m1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m0, m1), jnp.int32),
         interpret=interpret,
-    )(qc, qn, qs, qw, qe, eps_arr)
+    )(qc, qn, qs, qw, qe)
+    return acc.astype(jnp.float32) * (2.0 * jnp.asarray(eps, jnp.float32))

@@ -61,6 +61,36 @@ def mesh_sig(mesh) -> tuple:
             tuple(int(d.id) for d in mesh.devices.flat))
 
 
+def gather_routing(n_shards: int, placement: BlockPlacement, bits: int,
+                   word_idx: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-shard (stripe-local source, gathered-set destination) index
+    arrays for merging ``word_idx``.  Padding rows scatter into the
+    dropped slot ``len(word_idx)``.
+
+    Module-level (mesh-free) so the static audit's ``sharddisjoint``
+    analyzer can prove scatter-target disjointness for world sizes the
+    host has no devices for; :class:`ShardPrograms` delegates here.
+    """
+    word_idx = np.asarray(word_idx, dtype=np.int64)
+    n_out = len(word_idx)
+    owners = placement.word_owner(bits)[word_idx] if n_out else \
+        np.zeros((0,), np.int32)
+    stripes = placement.shard_word_index(bits)
+    per_shard = []
+    g_max = 1
+    for s in range(n_shards):
+        sel = np.nonzero(owners == s)[0]
+        src = np.searchsorted(stripes[s], word_idx[sel])
+        per_shard.append((src, sel))
+        g_max = max(g_max, len(sel))
+    src_arr = np.zeros((n_shards, g_max), np.int32)
+    dst_arr = np.full((n_shards, g_max), n_out, np.int32)
+    for s, (src, sel) in enumerate(per_shard):
+        src_arr[s, :len(src)] = src
+        dst_arr[s, :len(sel)] = sel
+    return src_arr, dst_arr
+
+
 class ShardPrograms:
     """Compiled ``shard_map`` programs for one analytics mesh.
 
@@ -108,27 +138,7 @@ class ShardPrograms:
 
     def _gather_routing(self, placement: BlockPlacement, bits: int,
                         word_idx: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Per-shard (stripe-local source, gathered-set destination) index
-        arrays for merging ``word_idx``.  Padding rows scatter into the
-        dropped slot ``len(word_idx)``."""
-        word_idx = np.asarray(word_idx, dtype=np.int64)
-        n_out = len(word_idx)
-        owners = placement.word_owner(bits)[word_idx] if n_out else \
-            np.zeros((0,), np.int32)
-        stripes = placement.shard_word_index(bits)
-        per_shard = []
-        g_max = 1
-        for s in range(self.n_shards):
-            sel = np.nonzero(owners == s)[0]
-            src = np.searchsorted(stripes[s], word_idx[sel])
-            per_shard.append((src, sel))
-            g_max = max(g_max, len(sel))
-        src_arr = np.zeros((self.n_shards, g_max), np.int32)
-        dst_arr = np.full((self.n_shards, g_max), n_out, np.int32)
-        for s, (src, sel) in enumerate(per_shard):
-            src_arr[s, :len(src)] = src
-            dst_arr[s, :len(sel)] = sel
-        return src_arr, dst_arr
+        return gather_routing(self.n_shards, placement, bits, word_idx)
 
     # -- region / full-field op execution -----------------------------------
     def region_compute(self, target, ops, stage: Stage, *, axis: int = 0,

@@ -7,7 +7,14 @@ The contract under test:
   a hidden host sync, an under-keyed jit cache — and none on a corrected
   twin;
 * the self-audit is clean: ``python -m repro.audit`` exits 0 on this repo
-  (the acceptance gate CI enforces with the ``AUDIT.json`` artifact);
+  under **all six analyzers** and in every ``REPRO_KERNELS`` mode (the
+  acceptance gate CI enforces with the ``AUDIT.json`` artifact);
+* the kernel verifier (kernelspec) and shard-partition verifier
+  (sharddisjoint) each flag their sabotage fixture with exactly one
+  finding: widened halo, overlapping grid writes, in-kernel output
+  multiply, double-owned payload word, world-scaled Σq² overflow;
+* stale ``waive(...)`` / ``invariant(...)`` declarations surface as
+  warnings (exit stays 0), and ``--only`` restricts the analyzer set;
 * ``oplib.register_op`` rejects malformed OpSpecs at registration time
   with an error naming the offending (stage, scheme-family) cell, without
   mutating the registries;
@@ -15,15 +22,23 @@ The contract under test:
   ``TemporalSummary`` bound raise :class:`SummaryCapacityError` *before*
   mutating the stream, and the runtime formula agrees with the audit's.
 """
+from dataclasses import replace
+
 import numpy as np
 import pytest
 
 from repro import audit
-from repro.audit import intwidth, jitkeys, registry, runner, tracesafety
-from repro.audit.findings import AuditReport, Finding
+from repro.audit import (intwidth, jitkeys, kernelspec, registry, runner,
+                         sharddisjoint, tracesafety)
+from repro.audit.findings import SCHEMA_VERSION, AuditReport, Finding
+from repro.comm.hom_collectives import PSUM_CONTAINER_MAX, worst_case_psum
 from repro.core import oplib
 from repro.core.oplib import OpSpec
 from repro.core.stages import Scheme, Stage
+from repro.kernels import ops as kops
+from repro.kernels.specs import KERNEL_SPECS, HaloRead, TileSpec
+from repro.shard import exec as shard_exec
+from repro.shard.placement import BlockPlacement
 from repro.stream.temporal import (SummaryCapacityError, TemporalField,
                                    summary_capacity)
 
@@ -455,3 +470,395 @@ class TestSummaryCapacityGuard:
         for _ in range(4):
             tf.append(rng.normal(size=(3, 64)).astype(np.float32))
         assert tf.n_steps == 12
+
+
+# ===========================================================================
+# analyzer (3b): trace-time stringification + stale-waiver warnings
+# ===========================================================================
+
+_FSTRING_SYNC_FIXTURE = '''
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x):
+    s = jnp.sum(x)
+    print(f"sum={s}")
+    return s
+'''
+
+_STRINGIFY_FIXTURE = '''
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x):
+    s = jnp.sum(x)
+    a = str(s)
+    b = format(s, ".3f")
+    c = "{}".format(s)
+    return s
+'''
+
+_STATIC_FSTRING_FIXTURE = '''
+import jax
+
+@jax.jit
+def f(x):
+    print(f"shape={x.shape}")
+    return x
+'''
+
+_STALE_WAIVE_FIXTURE = '''
+import jax
+
+@jax.jit
+def f(x):
+    return x + 1  # audit: waive(host-sync)
+'''
+
+
+class TestTraceStringification:
+    def test_fstring_on_traced_value_one_finding(self):
+        fs = tracesafety.lint_source(_FSTRING_SYNC_FIXTURE, "fix.py")
+        assert [f.invariant for f in fs] == ["host-sync"]
+
+    def test_str_format_builtins_flagged(self):
+        fs = tracesafety.lint_source(_STRINGIFY_FIXTURE, "fix.py")
+        assert [f.invariant for f in fs] == ["host-sync"] * 3
+
+    def test_static_fstring_not_flagged(self):
+        assert tracesafety.lint_source(_STATIC_FSTRING_FIXTURE,
+                                       "fix.py") == []
+
+    def test_stale_waiver_is_warning_not_error(self):
+        fs = tracesafety.lint_source(_STALE_WAIVE_FIXTURE, "fix.py")
+        assert [(f.invariant, f.severity) for f in fs] \
+            == [("stale-waiver", "warning")]
+        rep = AuditReport(findings=fs)
+        assert rep.ok and rep.warnings and not rep.errors
+
+
+# ===========================================================================
+# analyzer (4b): kernel-mode keys, covers predicates, stale invariants
+# ===========================================================================
+
+_UNCOVERED_DISPATCH_FIXTURE = '''
+class FusedRule:
+    pass
+
+def _covers_bad(ctx):
+    return ctx.scheme.is_lorenzo and ctx.eps_budget > 0
+
+RULES = {"d": FusedRule(lambda c, a: None, _covers_bad)}
+'''
+
+
+class TestJitKeyKernelMode:
+    def _engine_source(self):
+        from pathlib import Path
+
+        import repro
+
+        return (Path(repro.__file__).parent / "analytics"
+                / "engine.py").read_text()
+
+    def test_kernel_sig_dropped_from_batch_key_one_finding(self):
+        engine = self._engine_source()
+        sab = engine.replace("seed_sig, oplib.kernel_sig())", "seed_sig)")
+        assert sab != engine
+        fs = jitkeys.analyze_source(sab, "engine.py")
+        assert [(f.invariant, f.subject) for f in fs] \
+            == [("unkeyed-kernel-mode", "_compiled")]
+
+    def test_kernel_sig_dropped_from_inline_key_detected(self):
+        engine = self._engine_source()
+        sab = engine.replace("len(padded), oplib.kernel_sig())",
+                             "len(padded))")
+        assert sab != engine
+        fs = jitkeys.analyze_source(sab, "engine.py")
+        assert [f.invariant for f in fs] == ["unkeyed-kernel-mode"]
+        assert fs[0].subject == "summarize"
+
+    def test_covers_predicate_unkeyed_input_one_finding(self):
+        fs = jitkeys.analyze_covers_source(_UNCOVERED_DISPATCH_FIXTURE,
+                                           "fused.py")
+        assert [(f.invariant, f.subject) for f in fs] \
+            == [("uncovered-dispatch-input", "eps_budget")]
+
+    def test_covers_predicate_helper_forwarding_followed(self):
+        src = _UNCOVERED_DISPATCH_FIXTURE.replace(
+            "def _covers_bad(ctx):\n"
+            "    return ctx.scheme.is_lorenzo and ctx.eps_budget > 0",
+            "def _helper(c):\n"
+            "    return c.eps_budget > 0\n\n"
+            "def _covers_bad(ctx):\n"
+            "    return ctx.scheme.is_lorenzo and _helper(ctx)")
+        fs = jitkeys.analyze_covers_source(src, "fused.py")
+        assert [f.subject for f in fs] == ["eps_budget"]
+
+    def test_live_covers_predicates_clean(self):
+        from pathlib import Path
+
+        import repro
+
+        src = (Path(repro.__file__).parent / "core" / "fused.py").read_text()
+        assert jitkeys.analyze_covers_source(src, "core/fused.py") == []
+
+    def test_stale_invariant_declaration_is_warning(self):
+        stale = '''
+import jax
+
+def build(cache, key):
+    def run(x):
+        return x + 1
+    fn = jax.jit(run)  # audit: invariant(cost_model)
+    cache._jitted[key] = fn
+    return fn
+'''
+        fs = jitkeys.analyze_source(stale, "m.py")
+        assert [(f.invariant, f.subject, f.severity) for f in fs] \
+            == [("stale-waiver", "cost_model", "warning")]
+
+    def test_consumed_invariant_declaration_not_stale(self):
+        used = '''
+import jax
+
+def build(cache, key, cost_model):
+    def run(x):
+        return x + cost_model.weight
+    fn = jax.jit(run)  # audit: invariant(cost_model)
+    cache._jitted[key] = fn
+    return fn
+'''
+        assert jitkeys.analyze_source(used, "m.py") == []
+
+
+# ===========================================================================
+# analyzer (5): kernel symbolic verifier (kernelspec)
+# ===========================================================================
+
+_SPEC = next(s for s in KERNEL_SPECS if s.name == "fused.lorenzo2d")
+
+_FMA_FIXTURE = '''
+import jax.numpy as jnp
+
+def _kern(q_ref, eps_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * eps_ref[0]
+'''
+
+
+class TestKernelSpecAnalyzer:
+    def test_live_kernel_layer_clean(self):
+        assert kernelspec.analyze_kernel_specs() == []
+
+    def test_every_pallas_site_has_a_spec(self):
+        names = {s.name for s in KERNEL_SPECS}
+        assert {"fused.lorenzo2d", "bitpack.pack", "stencil_dq.grad2d",
+                "stencil_dq.laplacian2d",
+                "quant_lorenzo.quant_lorenzo2d"} <= names
+
+    def test_widened_halo_one_finding(self):
+        # dropping the last-band guard lets (b+1)*r run past n0
+        bad = replace(_SPEC, halos=(HaloRead("p", "(b + 1)*r", "n0"),))
+        fs = kernelspec.check_spec(bad)
+        assert [f.invariant for f in fs] == ["halo-out-of-bounds"]
+
+    def test_overlapping_grid_writes_one_finding(self):
+        # constant output index map: every grid step rewrites block (0, 0)
+        out = TileSpec("plane", ("r", "n1"), ("0", "0"), ("n0", "n1"))
+        fs = kernelspec.check_spec(replace(_SPEC, outputs=(out,)))
+        assert [f.invariant for f in fs] == ["grid-write-overlap"]
+
+    def test_coverage_gap_one_finding(self):
+        # one band more of rows than the grid writes
+        fs = kernelspec.check_spec(replace(_SPEC, facts=("n0 == nb*r + r",)))
+        assert [f.invariant for f in fs] == ["grid-write-gap"]
+
+    def test_vmem_budget_one_finding(self):
+        env = intwidth.Envelope(max_field_elems=2**23)  # 9F*4B >> 16 MiB
+        fs = kernelspec.check_spec(_SPEC, env)
+        assert [f.invariant for f in fs] == ["vmem-budget"]
+
+    def test_unpack_lemma_pins_word_window_slack(self):
+        assert kernelspec.check_unpack_lemma(2) == []
+        fs = kernelspec.check_unpack_lemma(1)
+        assert [f.invariant for f in fs] == ["unpack-oob"]
+
+    def test_output_multiply_one_finding(self):
+        fs, declared, used = kernelspec.lint_kernel_source(_FMA_FIXTURE,
+                                                           "k.py")
+        assert [f.invariant for f in fs] == ["output-multiply"]
+        assert fs[0].line == 5 and not declared and not used
+
+    def test_output_multiply_waiver_consumed(self):
+        waived = _FMA_FIXTURE.replace(
+            "* eps_ref[0]",
+            "* eps_ref[0]  # audit: waive(output-multiply)")
+        fs, declared, used = kernelspec.lint_kernel_source(waived, "k.py")
+        assert fs == [] and declared and used
+
+    def test_stencil_kernels_keep_eps_outside(self):
+        """The dequantized stencils emit exact integers; the float eps tail
+        lives in the wrapper (the PR 8 FMA-contraction hazard)."""
+        from pathlib import Path
+
+        import repro
+
+        src = (Path(repro.__file__).parent / "kernels"
+               / "stencil_dq.py").read_text()
+        fs, _, _ = kernelspec.lint_kernel_source(src, "stencil_dq.py")
+        assert fs == []
+        sab = src.replace(
+            "d0_ref[...] = qs_ref[...] - qn_ref[...]",
+            "d0_ref[...] = (qs_ref[...] - qn_ref[...])"
+            ".astype(jnp.float32) * 0.5")
+        assert sab != src
+        fs, _, _ = kernelspec.lint_kernel_source(sab, "stencil_dq.py")
+        assert [f.invariant for f in fs] == ["output-multiply"]
+
+    def test_undeclared_site_and_stale_spec(self, tmp_path):
+        kdir = tmp_path / "kernels"
+        kdir.mkdir()
+        (kdir / "mystery.py").write_text(
+            "import jax\n"
+            "from jax.experimental import pallas as pl\n"
+            "def go(x):\n"
+            "    return pl.pallas_call(\n"
+            "        lambda x_ref, o_ref: None,\n"
+            "        grid=(4,),\n"
+            "        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)\n")
+        fs = kernelspec.analyze_kernel_specs(specs=(), src_root=tmp_path)
+        assert [f.invariant for f in fs] == ["undeclared-kernel"]
+        fs = kernelspec.analyze_kernel_specs(specs=(_SPEC,),
+                                             src_root=tmp_path)
+        assert sorted(f.invariant for f in fs) \
+            == ["stale-kernel-spec", "undeclared-kernel"]
+
+    def test_stale_kernel_waiver_warning(self, tmp_path):
+        kdir = tmp_path / "kernels"
+        kdir.mkdir()
+        (kdir / "clean.py").write_text(
+            "def _kern(q_ref, o_ref):\n"
+            "    # audit: waive(output-multiply)\n"
+            "    o_ref[...] = q_ref[...] + 1\n")
+        fs = kernelspec.analyze_kernel_specs(specs=(), src_root=tmp_path)
+        assert [(f.invariant, f.severity) for f in fs] \
+            == [("stale-waiver", "warning")]
+
+
+# ===========================================================================
+# analyzer (6): shard-partition exactness (sharddisjoint)
+# ===========================================================================
+
+class TestShardDisjointAnalyzer:
+    def test_live_shard_layer_clean(self):
+        assert sharddisjoint.analyze_shard_disjoint() == []
+
+    def test_double_owned_word_one_finding(self):
+        class DoubleOwned(BlockPlacement):
+            def shard_word_index(self, bits):
+                stripes = super().shard_word_index(bits)
+                if self.n_shards >= 2 and len(stripes[0]):
+                    stripes[1] = np.unique(np.concatenate(
+                        [np.asarray(stripes[1]),
+                         np.asarray(stripes[0][:1])]))
+                return stripes
+
+        fs = sharddisjoint.analyze_shard_disjoint(placement_cls=DoubleOwned)
+        assert [f.invariant for f in fs] == ["word-owner-overlap"]
+
+    def test_scatter_overlap_one_finding(self):
+        def overlap_routing(n_shards, placement, bits, word_idx):
+            src, dst = shard_exec.gather_routing(n_shards, placement, bits,
+                                                 word_idx)
+            src, dst = np.array(src), np.array(dst)
+            if n_shards >= 2:
+                l0 = np.nonzero(dst[0] != len(word_idx))[0]
+                l1 = np.nonzero(dst[1] != len(word_idx))[0]
+                if l0.size and l1.size:
+                    dst[1, l1[0]] = dst[0, l0[0]]
+            return src, dst
+
+        fs = sharddisjoint.analyze_shard_disjoint(routing_fn=overlap_routing)
+        assert [f.invariant for f in fs] == ["scatter-overlap"]
+
+    def test_world_scaled_sumsq_overflow_one_finding(self):
+        # 129 slab steps overflow int32 Σq² once any band fans in — the
+        # envelope-driven acceptance fixture for the world-size sweep
+        env = intwidth.Envelope(max_slab_steps=129)
+        fs = sharddisjoint.analyze_shard_disjoint(env)
+        assert [f.invariant for f in fs] == ["world-sumsq-overflow"]
+
+    def test_collective_bit_budget_overflow_one_finding(self):
+        fs = sharddisjoint.analyze_shard_disjoint(
+            bit_budget_fn=lambda world, container_bits=16: 15)
+        assert [f.invariant for f in fs] == ["collective-overflow"]
+
+    def test_duplicated_band_detected(self):
+        def dup_bands(field, placement, region=None):
+            bands = shard_exec.spatial_bands(field, placement, region)
+            return bands + bands[:1] if len(bands) > 1 else bands
+
+        fs = sharddisjoint.analyze_shard_disjoint(bands_fn=dup_bands)
+        assert fs and fs[0].invariant == "band-overlap"
+
+    def test_safe_size_table_shape(self):
+        table = sharddisjoint.shard_safe_size_table()
+        per = table["per_world"]
+        assert per["1"]["summary_capacity_if_accumulating"] == 128
+        caps = [per[str(w)]["summary_capacity_if_accumulating"]
+                for w in (1, 2, 4, 8)]
+        assert caps == sorted(caps, reverse=True)
+        # disjoint capacity is world-independent — the proven property
+        assert len({per[k]["summary_capacity_disjoint"]
+                    for k in per}) == 1
+        for k in per:
+            assert per[k]["collective_worst_psum"] <= PSUM_CONTAINER_MAX
+
+    def test_worst_case_psum_stays_in_container(self):
+        for w in (1, 2, 3, 4, 8, 64, 1024, 4096):
+            assert worst_case_psum(w) <= PSUM_CONTAINER_MAX
+
+
+# ===========================================================================
+# runner: --only, schema version, exit codes, both kernel modes
+# ===========================================================================
+
+class TestRunnerContract:
+    def test_six_analyzers_registered(self):
+        assert runner.ALL_ANALYZERS == ("registry", "intwidth", "trace",
+                                        "jitkey", "kernelspec",
+                                        "sharddisjoint")
+        assert audit.ALL_ANALYZERS == runner.ALL_ANALYZERS
+
+    def test_only_flag_and_schema_version(self, tmp_path, capsys):
+        import json
+
+        out = tmp_path / "AUDIT.json"
+        rc = runner.main(["--only", "kernelspec,sharddisjoint",
+                          "--json", str(out)])
+        assert rc == 0
+        data = json.loads(out.read_text())
+        assert data["schema_version"] == SCHEMA_VERSION == 2
+        assert data["ok"] and data["shard_safe_sizes"]["per_world"]
+
+    def test_only_rejects_unknown_analyzer(self, capsys):
+        with pytest.raises(SystemExit) as exc:
+            runner.main(["--only", "nosuch"])
+        assert exc.value.code == 2
+
+    def test_exit_zero_on_warnings_only(self):
+        rep = AuditReport(findings=[Finding(
+            "trace", "stale-waiver", "m", severity="warning")])
+        assert rep.ok and not rep.errors and len(rep.warnings) == 1
+        d = rep.to_dict()
+        assert d["ok"] and d["n_warnings"] == 1 and d["n_errors"] == 0
+
+    def test_self_audit_clean_in_both_kernel_modes(self):
+        for mode in ("interpret", "off"):
+            with kops.override_mode(mode):
+                report = audit.run_audit()
+            assert report.ok, (mode, [f.render() for f in report.findings])
+            assert not report.warnings
+            assert report.shard_safe_sizes["per_world"]
